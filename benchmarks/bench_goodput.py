@@ -1,0 +1,108 @@
+"""Figs 8/14/15 — drops and goodput: Heron vs the two baselines.
+
+The headline reproduction: power-variability-aware cross-site planning
+(Planner-L) vs (c) WRR+DynamoLLM and (d) greedy-min-latency. Reported:
+  * slots with at least one drop across workload volumes (Fig 14 left),
+  * per-slot goodput improvement ratio distribution (Fig 14 mid / Fig 15).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import SiteSpec
+from repro.data.wind import make_default_fleet
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+from repro.sim.cluster import goodput_improvement, simulate_week
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.2, 2.0))
+# volume multipliers relative to the paper's production-trace unit rate;
+# calibrated so the upper entries stress the provisioned power like the
+# paper's 60x coding / 50x conversation operating points do
+VOLUMES = {"coding": (60.0, 600.0, 2400.0),
+           "conversation": (50.0, 500.0, 2000.0)}
+
+
+def _setup(trace_name: str):
+    trace = make_trace(trace_name, base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+    fleet = make_default_fleet(seed=7)
+    sites, thr = [], []
+    for s in fleet.sites:
+        pods = int(s.percentile_mw(20.0) // SUPERPOD_PEAK_MW)
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        thr.append(s.percentile_mw(20.0))
+    power = np.minimum(fleet.week(), np.array(thr)[:, None])
+    return trace, table, sites, power
+
+
+def run(fast: bool = True, trace_name: str = None):
+    if trace_name is None:          # driver entry: both paper traces
+        return (run(fast, "coding") + run(fast, "conversation"))
+    rows = []
+    t = Timer()
+    trace, table, sites, power = _setup(trace_name)
+    # fast mode: the 24 h window around the week's deep drought (UK ~0,
+    # Iceland ~4% of threshold near slot 500-560 — the Fig 8 scenario)
+    sl = slice(500, 500 + 96) if fast else slice(0, power.shape[1])
+    power_w = power[:, sl]
+
+    # Fig 14 left: drop slots across volumes
+    drop_slots = {}
+    with t():
+        for mult in VOLUMES[trace_name]:
+            arr = trace.class_arrivals(multiplier=mult)[:, sl] / (15 * 60)
+            res = {}
+            for sched in ("heron", "wrr_dynamollm", "greedy_min_latency"):
+                wk = simulate_week(sched, table, sites, power_w, arr)
+                res[sched] = wk.slots_with_drops()
+            drop_slots[mult] = res
+    hi = max(VOLUMES[trace_name])
+    rows.append(row(f"fig14l_drops_{trace_name}", t.us,
+                    f"@{hi:.0f}x: heron {drop_slots[hi]['heron']} dropslots "
+                    f"vs dynamollm {drop_slots[hi]['wrr_dynamollm']} "
+                    f"vs greedy {drop_slots[hi]['greedy_min_latency']}"))
+
+    # Fig 14 middle / Fig 15: goodput ratio at the paper's operating volume
+    mult = VOLUMES[trace_name][-1]
+    with t():
+        arr = trace.class_arrivals(multiplier=mult)[:, sl] / (15 * 60)
+        heron = simulate_week("heron", table, sites, power_w, arr)
+        base_c = simulate_week("wrr_dynamollm", table, sites, power_w, arr)
+        base_d = simulate_week("greedy_min_latency", table, sites, power_w,
+                               arr)
+        ratio_c = goodput_improvement(heron, base_c)
+        ratio_d = goodput_improvement(heron, base_d)
+    rows.append(row(f"fig14m_goodput_{trace_name}", t.us,
+                    f"vs dynamollm: p50 {np.percentile(ratio_c, 50):.2f}, "
+                    f"p95 {np.percentile(ratio_c, 95):.2f}, "
+                    f"max {ratio_c.max():.2f} (paper up to 1.8x)"))
+
+    save(f"goodput_{trace_name}", {
+        "volumes": {str(k): v for k, v in drop_slots.items()},
+        "ratio_vs_dynamollm": {
+            "p50": float(np.percentile(ratio_c, 50)),
+            "p90": float(np.percentile(ratio_c, 90)),
+            "p99": float(np.percentile(ratio_c, 99)),
+            "max": float(ratio_c.max())},
+        "ratio_vs_greedy": {
+            "p50": float(np.percentile(ratio_d, 50)),
+            "max": float(ratio_d.max())},
+        "heron_goodput_total": float(heron.goodput().sum()),
+        "dynamollm_goodput_total": float(base_c.goodput().sum()),
+        "slots": int(power_w.shape[1]),
+    })
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+    emit(run(fast=True, trace_name="conversation"))
+
+
+if __name__ == "__main__":
+    main()

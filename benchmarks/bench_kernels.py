@@ -1,0 +1,97 @@
+"""Kernel micro-bench: Pallas (interpret) vs oracle correctness + XLA-path
+wall clock. CPU wall-times are NOT TPU predictions — the roofline bench is
+the perf story; this bench pins correctness deltas and the XLA fallback
+cost of each kernel's shape regime.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = True):
+    rows = []
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 8)
+
+    # flash attention (prefill regime)
+    B, S, H, KVH, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32)
+    us_ref = _time(lambda *a: ref.attention_ref(*a, causal=True), q, k, v)
+    out_p = ops.flash_attention(q, k, v, causal=True)
+    err = float(jnp.abs(out_p - ref.attention_ref(q, k, v, causal=True)).max())
+    rows.append(row("kernel_flash_attention", us_ref,
+                    f"S={S} GQA4 max|err|={err:.1e} vs oracle"))
+
+    # decode attention (ragged cache)
+    S = 4096
+    q1 = jax.random.normal(ks[3], (4, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[4], (4, S, KVH, hd), jnp.float32)
+    vc = jax.random.normal(ks[5], (4, S, KVH, hd), jnp.float32)
+    lens = jnp.array([S, S // 2, 100, 1], jnp.int32)
+    us_ref = _time(ref.decode_attention_ref, q1, kc, vc, lens)
+    err = float(jnp.abs(ops.decode_attention(q1, kc, vc, lens)
+                        - ref.decode_attention_ref(q1, kc, vc, lens)).max())
+    rows.append(row("kernel_decode_attention", us_ref,
+                    f"S={S} ragged max|err|={err:.1e} vs oracle"))
+
+    # grouped matmul (MoE regime)
+    E, C, D, F = 8, 256, 256, 512
+    xe = jax.random.normal(ks[6], (E, C, D), jnp.bfloat16)
+    w = jax.random.normal(ks[7], (E, D, F), jnp.bfloat16)
+    fill = jnp.array([C, C // 2, 0, C, 10, C, C // 4, C], jnp.int32)
+    want = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                      w.astype(jnp.float32))
+    rw = jnp.arange(C)[None, :, None]
+    want = jnp.where(rw < fill[:, None, None], want, 0)
+    got = ops.expert_matmul(xe, w, fill)
+    err = float(jnp.abs(got.astype(jnp.float32) - want).max())
+    us_ref = _time(lambda a, b: jnp.einsum("ecd,edf->ecf", a, b), xe, w)
+    rows.append(row("kernel_grouped_matmul", us_ref,
+                    f"E={E} bf16 max|err|={err:.1e} vs fp32 oracle"))
+
+    # wkv6 (rwkv6 recurrence)
+    B, S, Hh, hd = 1, 256, 4, 64
+    kk = jax.random.split(jax.random.key(1), 6)
+    r = jax.random.normal(kk[0], (B, S, Hh, hd)) * 0.5
+    kx = jax.random.normal(kk[1], (B, S, Hh, hd)) * 0.5
+    vx = jax.random.normal(kk[2], (B, S, Hh, hd)) * 0.5
+    logw = jnp.clip(-jax.nn.softplus(jax.random.normal(kk[3], (B, S, Hh, hd))),
+                    -1.5, -1e-6)
+    u = jax.random.normal(kk[4], (Hh, hd)) * 0.3
+    s0 = jnp.zeros((B, Hh, hd, hd))
+    us_ref = _time(lambda *a: ref.wkv6_ref(*a)[0], r, kx, vx, logw, u, s0)
+    o_p, _ = ops.wkv6(r, kx, vx, logw, u, s0)
+    o_r, _ = ref.wkv6_ref(r, kx, vx, logw, u, s0)
+    err = float(jnp.abs(o_p - o_r).max())
+    rows.append(row("kernel_wkv6", us_ref,
+                    f"S={S} chunked max|err|={err:.1e} vs token-serial oracle"))
+
+    save("kernels", {r[0]: r[2] for r in rows})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig 13 / §5.1 — the profiling exercise that fills the lookup tables."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, TPU_V5E
+
+
+def run(fast: bool = True):
+    rows = []
+    t = Timer()
+    tables = {}
+    with t():
+        for name in ("coding", "conversation"):
+            tr = make_trace(name, base_rps=1.0, seed=11)
+            tables[name] = build_table(PAPER_MODEL, tr, H100_DGX)
+    n_total = sum(len(tb) for tb in tables.values())
+    rows.append(row("fig13_tables", t.us,
+                    f"{n_total} SLO-valid rows over 2 traces "
+                    "(paper ~2,000)"))
+
+    # Fig 13's qualitative grid for the MM class
+    tb = tables["conversation"]
+    mm = tb.valid_rows(4)
+    grid = {}
+    for r in mm:
+        grid[f"tp{r.tp}_f{r.freq}_l{r.load}"] = {
+            "power_w": r.power, "e2e_s": r.e2e, "ttft_s": r.ttft}
+    tp2_max = max((r.load for r in mm if r.tp == 2), default=0.0)
+    tp8_max = max((r.load for r in mm if r.tp == 8), default=0.0)
+    rows.append(row("fig13_mm_grid", 0.0,
+                    f"MM: TP2 tops out at {tp2_max} rps vs TP8 {tp8_max} rps "
+                    "(grey-cell pattern)"))
+
+    # hardware-adapted TPU target table (DESIGN.md §3)
+    with t():
+        tr = make_trace("conversation", base_rps=1.0, seed=11)
+        tpu_table = build_table(PAPER_MODEL, tr, TPU_V5E)
+    rows.append(row("profiling_tpu_v5e", t.us,
+                    f"{len(tpu_table)} rows on the TPU v5e profile "
+                    f"(TP {TPU_V5E.tp_degrees})"))
+
+    save("profiling", {
+        "rows_per_trace": {k: len(v) for k, v in tables.items()},
+        "mm_grid_conversation": grid,
+        "tpu_rows": len(tpu_table),
+    })
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Figs 3/4/5 — OPEX vs CAPEX, C/P parity, fleet provisioning."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.core.rightsizing import (PRICE_CALIFORNIA, PRICE_GERMANY,
+                                    PRICE_GERMANY_CRISIS, PRICE_US_ENTERPRISE,
+                                    PRICE_WIND_PPA, availability_at_percentile,
+                                    capability_per_price, fleet_provisioning,
+                                    opex_fraction, parity_year)
+from repro.data.wind import make_default_fleet, make_site_population
+
+
+def run(fast: bool = True):
+    rows = []
+    t = Timer()
+
+    # Fig 3: lifetime OPEX fraction at the paper's price points
+    with t():
+        fig3 = {
+            "us_30k_5y": opex_fraction(5, PRICE_US_ENTERPRISE, 30_000),
+            "us_20k_5y": opex_fraction(5, PRICE_US_ENTERPRISE, 20_000),
+            "de_30k_5y": opex_fraction(5, PRICE_GERMANY, 30_000),
+            "de_20k_5y": opex_fraction(5, PRICE_GERMANY, 20_000),
+            "ca_30k_5y": opex_fraction(5, PRICE_CALIFORNIA, 30_000),
+            "de_crisis_30k_5y": opex_fraction(5, PRICE_GERMANY_CRISIS, 30_000),
+        }
+    rows.append(row("fig3_opex_fraction", t.us,
+                    f"US/30K 5y = {fig3['us_30k_5y']:.1%} (paper 12.4%)"))
+
+    # Fig 4: C/P parity years at provisioning percentiles
+    fleet = make_default_fleet(seed=7)
+    lt = fleet.sites[0].long_term_mw
+    with t():
+        parity = {}
+        for pct in (5.0, 15.0, 20.0):
+            av = availability_at_percentile(lt, pct)
+            parity[f"p{int(pct)}"] = {
+                "availability": av,
+                "parity_year": parity_year(PRICE_US_ENTERPRISE,
+                                           PRICE_WIND_PPA, av),
+            }
+    rows.append(row("fig4_cp_parity", t.us,
+                    f"parity {parity['p5']['parity_year']:.1f}y @p5 / "
+                    f"{parity['p20']['parity_year']:.1f}y @p20 "
+                    "(paper 2y / 5y)"))
+
+    # Fig 5: fleet provisioning at the largest 20% of farms
+    n_sites = 60 if fast else 400
+    sites = make_site_population(n_sites, seed=13)
+    with t():
+        fig5 = {}
+        for pct in (5.0, 10.0, 20.0):
+            provs = fleet_provisioning(sites, pct=pct, largest_fraction=0.2)
+            fig5[f"p{int(pct)}"] = {
+                "total_superpods": sum(p.superpods for p in provs),
+                "total_gpus": sum(p.gpus for p in provs),
+                "min_deployment_pods": min((p.superpods for p in provs
+                                            if p.superpods), default=0),
+            }
+    rows.append(row("fig5_provisioning", t.us,
+                    f"{fig5['p20']['total_gpus']/1e3:.0f}K GPUs @p20 over "
+                    f"{n_sites} farms; min site "
+                    f"{fig5['p20']['min_deployment_pods']} pods"))
+
+    save("rightsizing", {"fig3": fig3, "fig4": parity, "fig5": fig5})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""§Roofline — per-(arch × shape) roofline terms from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+the three-term table: compute / memory / collective seconds per step,
+dominant bottleneck, MODEL_FLOPS/HLO ratio, roofline fraction.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import Timer, row, save
+from repro.analysis.roofline import load_table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def run(fast: bool = True, pod: str = "pod1", tag: str = ""):
+    rows = []
+    t = Timer()
+    if not os.path.isdir(DRYRUN_DIR):
+        rows.append(row("roofline", 0.0,
+                        "NO ARTIFACTS — run python -m repro.launch.dryrun --all first"))
+        return rows
+    with t():
+        table = load_table(DRYRUN_DIR, pod=pod, tag=tag)
+    if not table:
+        rows.append(row("roofline", t.us, f"no {pod} artifacts found"))
+        return rows
+
+    by_dom = {}
+    payload = []
+    for terms in table:
+        d = terms.as_dict()
+        payload.append(d)
+        by_dom.setdefault(terms.dominant, []).append(terms)
+        rows.append(row(
+            f"roofline_{terms.arch}_{terms.shape}", 0.0,
+            f"{terms.dominant}-bound; step {terms.step_time_s*1e3:.2f}ms; "
+            f"C/M/X = {terms.compute_s*1e3:.2f}/{terms.memory_s*1e3:.2f}/"
+            f"{terms.collective_s*1e3:.2f} ms; "
+            f"roofline {terms.roofline_fraction:.1%}; "
+            f"useful {terms.useful_ratio:.2f}"))
+    summary = ", ".join(f"{k}:{len(v)}" for k, v in sorted(by_dom.items()))
+    rows.append(row("roofline_summary", t.us,
+                    f"{len(table)} cells ({pod}); dominated by {summary}"))
+    save(f"roofline_{pod}" + (f"_{tag}" if tag else ""), {"cells": payload})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Fig 14 right — Planner-L / Planner-S / packing execution time vs #sites."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import SiteSpec, plan_l
+from repro.core.planner_s import plan_s
+from repro.core.scheduler import RequestScheduler
+from repro.data.wind import make_site_population
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
+
+
+def run(fast: bool = True):
+    rows = []
+    trace = make_trace("coding", base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+    counts = (4, 8, 16) if fast else (4, 8, 16, 32, 64)
+    pop = make_site_population(max(counts), seed=13)
+
+    results = {}
+    for n in counts:
+        sites, power = [], []
+        for s in pop[:n]:
+            pods = max(1, int(np.percentile(s.long_term_mw, 20.0)
+                              // SUPERPOD_PEAK_MW))
+            sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+            power.append(min(s.series_mw[100],
+                             np.percentile(s.long_term_mw, 20.0)) * 1e6)
+        power = np.array(power)
+        # demand scaled to the fleet (~30% of GPU capacity at ~0.1 rps/GPU)
+        total_gpus = sum(s.num_gpus for s in sites)
+        load = np.full(9, total_gpus * 0.1 * 0.3 / 9)
+        t0 = time.perf_counter()
+        pl = plan_l(table, sites, power, load, objective="latency",
+                    time_limit=300)
+        t_l = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ps = plan_s(table, sites, power, load, pl.gpu_budget())
+        t_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        disp = RequestScheduler(n, packing=True)
+        disp.dispatch(disp.groups_from_plan(pl), load)
+        t_p = time.perf_counter() - t0
+        results[n] = {"planner_l_s": t_l, "planner_s_s": t_s,
+                      "packing_s": t_p, "columns": len(pl.columns),
+                      "status": pl.status}
+
+    n_hi = max(counts)
+    r = results[n_hi]
+    rows.append(row("fig14r_scalability", r["planner_l_s"] * 1e6,
+                    f"{n_hi} sites: L {r['planner_l_s']:.1f}s / "
+                    f"S {r['planner_s_s']:.2f}s / pack {r['packing_s']*1e3:.0f}ms"
+                    " (paper: L ≤ 6 min @64, S ~30x faster)"))
+    speedup = r["planner_l_s"] / max(r["planner_s_s"], 1e-9)
+    rows.append(row("fig14r_planner_s_speedup", 0.0,
+                    f"Planner-S {speedup:.0f}x faster than Planner-L"))
+    save("scalability", {str(k): v for k, v in results.items()})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Multi-pod weak-scaling efficiency — large-scale runnability evidence.
+
+Compares each cell's per-device roofline terms on the 256-chip single-pod
+vs 512-chip multi-pod mesh. The ``pod`` axis is pure DP, so ideal weak
+scaling halves per-device FLOPs at fixed global shape; the ratio of
+(pod1 step time) / (2 x pod2 step time) is the scaling efficiency. Cells
+whose collective term GROWS cross-pod expose where the pod axis hurts
+(gradient reduction now crosses the DCN/pod boundary).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.analysis.roofline import load_table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def run(fast: bool = True):
+    rows = []
+    t = Timer()
+    if not os.path.isdir(DRYRUN_DIR):
+        return [row("scaling", 0.0, "NO ARTIFACTS — run dryrun --both-meshes")]
+    with t():
+        p1 = {(x.arch, x.shape): x for x in load_table(DRYRUN_DIR, pod="pod1")}
+        p2 = {(x.arch, x.shape): x for x in load_table(DRYRUN_DIR, pod="pod2")}
+    effs = []
+    payload = []
+    for k in sorted(p1):
+        if k not in p2:
+            continue
+        a, b = p1[k], p2[k]
+        # ideal: per-device compute halves; efficiency = t1 / (2*t2) for
+        # compute-dominated cells, capped at 1 for fixed-cost cells
+        eff = min(a.step_time_s / max(2 * b.step_time_s, 1e-30), 1.0)
+        coll_growth = b.collective_s / max(a.collective_s, 1e-30)
+        effs.append(eff)
+        payload.append({"arch": k[0], "shape": k[1],
+                        "step_pod1_ms": a.step_time_s * 1e3,
+                        "step_pod2_ms": b.step_time_s * 1e3,
+                        "weak_scaling_eff": eff,
+                        "collective_growth": coll_growth})
+    if not effs:
+        return [row("scaling", t.us, "no pod2 artifacts")]
+    worst = min(payload, key=lambda p: p["weak_scaling_eff"])
+    rows.append(row("multipod_weak_scaling", t.us,
+                    f"median eff {np.median(effs):.2f} over {len(effs)} "
+                    f"cells; worst {worst['arch']}/{worst['shape']} "
+                    f"{worst['weak_scaling_eff']:.2f}"))
+    save("scaling", {"cells": payload})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""§5.2 configuration stickiness — R_L sweep.
+
+The paper: R_L down to 3% costs no significant E2E/power inflation;
+below 3% latency inflates. We sweep r_frac over a drought-crossing window
+and report the 95th-pctile of per-slot mean E2E and mean power.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import SiteSpec
+from repro.data.wind import make_default_fleet
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+from repro.sim.cluster import simulate_week
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
+
+
+def run(fast: bool = True, trace_name: str = "coding"):
+    rows = []
+    t = Timer()
+    trace = make_trace(trace_name, base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+    fleet = make_default_fleet(seed=7)
+    sites, thr = [], []
+    for s in fleet.sites:
+        pods = int(s.percentile_mw(20.0) // SUPERPOD_PEAK_MW)
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        thr.append(s.percentile_mw(20.0))
+    power = np.minimum(fleet.week(), np.array(thr)[:, None])
+    sl = slice(480, 480 + (48 if fast else 672))
+    arr = trace.class_arrivals(multiplier=600.0)[:, sl] / (15 * 60)
+    pw = power[:, sl]
+
+    out = {}
+    with t():
+        for rf in (0.30, 0.03, 0.01):
+            wk = simulate_week("heron", table, sites, pw, arr, r_frac=rf)
+            e2e = wk.mean_e2e()
+            out[rf] = {
+                "e2e_p95": float(np.percentile(e2e[e2e > 0], 95)),
+                "power_mean_mw": float(wk.power().mean() / 1e6),
+                "reconfigs_total": int(sum(s.reconfigs for s in wk.slots)),
+                "dropped": float(wk.drops().sum()),
+            }
+    base = out[0.30]["e2e_p95"]
+    infl3 = out[0.03]["e2e_p95"] / base - 1
+    infl1 = out[0.01]["e2e_p95"] / base - 1
+    rows.append(row(f"s52_stickiness_{trace_name}", t.us,
+                    f"E2E p95 inflation: {infl3:+.1%} @R_L=3%, "
+                    f"{infl1:+.1%} @R_L=1% (paper: flat to 3%)"))
+    save(f"stickiness_{trace_name}", {str(k): v for k, v in out.items()})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

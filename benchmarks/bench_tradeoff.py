@@ -1,0 +1,66 @@
+"""Fig 16 — latency ↔ power trade-off of the two Planner-L objectives."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import SiteSpec, plan_l
+from repro.data.wind import make_default_fleet
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.0, 1.4, 2.0))
+
+
+def run(fast: bool = True, trace_name: str = "coding"):
+    rows = []
+    t = Timer()
+    trace = make_trace(trace_name, base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+    fleet = make_default_fleet(seed=7)
+    sites, thr = [], []
+    for s in fleet.sites:
+        pods = int(s.percentile_mw(20.0) // SUPERPOD_PEAK_MW)
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        thr.append(s.percentile_mw(20.0))
+    power = np.minimum(fleet.week(), np.array(thr)[:, None])
+    mult = 600.0
+    arr = trace.class_arrivals(multiplier=mult) / (15 * 60)
+
+    n_slots = 16 if fast else 96
+    pts = []
+    with t():
+        for i in range(n_slots):
+            sl = 140 + i * 4
+            pw = power[:, sl] * 1e6
+            load = arr[:, sl]
+            p_lat = plan_l(table, sites, pw, load, objective="latency",
+                           time_limit=20)
+            p_pow = plan_l(table, sites, pw, load, objective="power",
+                           time_limit=20)
+            if p_lat.unserved.sum() > 1e-6 or p_pow.unserved.sum() > 1e-6:
+                continue
+            e_lat, e_pow = p_lat.mean_e2e(load), p_pow.mean_e2e(load)
+            w_lat, w_pow = p_lat.total_power(), p_pow.total_power()
+            if e_pow > 0 and w_pow > 0:
+                pts.append({"lat_gain_pct": 100 * (1 - e_lat / e_pow),
+                            "power_cost_pct": 100 * (w_lat / w_pow - 1)})
+    lat_gain = np.array([p["lat_gain_pct"] for p in pts])
+    pow_cost = np.array([p["power_cost_pct"] for p in pts])
+    rows.append(row(f"fig16_tradeoff_{trace_name}", t.us,
+                    f"mean {lat_gain.mean():.0f}% lower E2E costs "
+                    f"{pow_cost.mean():.0f}% more power over {len(pts)} slots"
+                    " (paper: 25% ↔ 42%)"))
+    save(f"tradeoff_{trace_name}", {"points": pts})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing.
+
+Every bench module exposes ``run(fast: bool) -> list[Row]`` where a Row is
+``(name, us_per_call, derived)`` — the CSV contract of benchmarks.run —
+and writes its raw numbers under artifacts/bench/<module>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "bench")
+
+
+def save(name: str, payload: dict) -> None:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+class Timer:
+    def __init__(self):
+        self.us = 0.0
+
+    @contextmanager
+    def __call__(self):
+        t0 = time.perf_counter()
+        yield
+        self.us = (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived: str) -> tuple:
+    return (name, round(us, 1), derived)
+
+
+def emit(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

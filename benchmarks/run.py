@@ -1,0 +1,70 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
+
+    bench_rightsizing      Figs 3/4/5   (OPEX/CAPEX, C/P parity, fleet)
+    bench_complementarity  Figs 6/7     (CoV, autocorrelation)
+    bench_traces           Fig 12       (length/arrival characteristics)
+    bench_profiling        Fig 13/§5.1  (lookup tables)
+    bench_goodput          Figs 8/14/15 (drops + goodput vs baselines)
+    bench_tradeoff         Fig 16       (latency ↔ power)
+    bench_components       Fig 17/§5.3  (Planner-S, packing, elasticity)
+    bench_scalability      Fig 14 right (planner runtimes vs #sites)
+    bench_stickiness       §5.2         (R_L sweep)
+    bench_kernels          kernels      (Pallas vs oracle)
+    bench_roofline         §Roofline    (dry-run artifact table)
+
+``python -m benchmarks.run [--full] [--only mod1,mod2]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_rightsizing",
+    "bench_complementarity",
+    "bench_traces",
+    "bench_profiling",
+    "bench_goodput",
+    "bench_tradeoff",
+    "bench_components",
+    "bench_scalability",
+    "bench_stickiness",
+    "bench_kernels",
+    "bench_roofline",
+    "bench_scaling",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full-week / full-grid runs (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+    mods = [m.strip() for m in args.only.split(",") if m.strip()] or MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run(fast=not args.full)
+            for r_name, us, derived in rows:
+                print(f"{r_name},{us},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,FAILED: {e}")
+            traceback.print_exc(file=sys.stderr)
+        dt = time.perf_counter() - t0
+        print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,65 @@
+"""Quickstart: the Heron cross-site router in 60 seconds.
+
+Builds the paper's evaluation world — 4 European wind sites right-sized at
+the 20th percentile, the Azure-like coding trace, a Llama-3.1-70B lookup
+table — plans one 15-min slot with Planner-L, refines it with Planner-S,
+and dispatches a slot of requests through the WRR + packing scheduler.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import SiteSpec
+from repro.core.router import HeronRouter
+from repro.data.wind import make_default_fleet
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+
+
+def main():
+    # 1. the workload: one week of Azure-like coding trace, 9 classes
+    trace = make_trace("coding", base_rps=1.0, seed=11)
+    print(f"trace: {trace.arrivals.sum():,} requests/week, "
+          f"class mix {np.round(trace.class_mix(), 2)}")
+
+    # 2. the profiling exercise -> lookup tables e2e(c,f,t,l), power(...)
+    table = build_table(PAPER_MODEL, trace, H100_DGX,
+                        load_grid=(0.25, 1.0, 4.0, 16.0),
+                        freq_grid=(1.2, 2.0))
+    print(f"lookup table: {len(table)} SLO-valid rows "
+          f"({PAPER_MODEL.name} on {H100_DGX.name})")
+
+    # 3. the fleet: 4 wind farms, compute right-sized at the 20th pctile
+    fleet = make_default_fleet(seed=7)
+    sites = []
+    for s in fleet.sites:
+        pods = int(s.percentile_mw(20.0) // SUPERPOD_PEAK_MW)
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        print(f"  {s.name:12s} peak {s.peak_mw:.0f} MW -> "
+              f"{pods} SuperPODs ({pods * SUPERPOD_GPUS:,} GPUs)")
+
+    # 4. Heron plans a slot (Planner-L) and refines it (Planner-S)
+    router = HeronRouter(table=table, sites=sites, objective="latency")
+    thr = np.array([s.percentile_mw(20.0) for s in fleet.sites])
+    power_w = np.minimum(fleet.week()[:, 150], thr) * 1e6
+    load = trace.class_arrivals(multiplier=600.0)[:, 150] / (15 * 60)
+    plan = router.step_slot(power_w, load)
+    print(f"Planner-L: {plan.status} in {plan.solve_seconds:.2f}s, "
+          f"power {plan.total_power()/1e6:.1f} MW, "
+          f"unserved {plan.unserved.sum():.2f} rps")
+
+    plan_s = router.step_seconds(now=5.0, power_w=power_w * 0.9,
+                                 observed_load=load)
+    print(f"Planner-S (−10% power): unserved {plan_s.unserved.sum():.2f} rps")
+
+    # 5. dispatch one second of arrivals
+    res = router.dispatch(load)
+    print(f"dispatch: served {res.served.sum():.1f} rps, "
+          f"dropped {res.dropped.sum():.2f}, packed {res.packed.sum():.2f}, "
+          f"per-site {np.round(res.per_site_load, 1)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Serve batched requests across two wind-site engines via Heron weights.
+
+A real (CPU-scale) end-to-end serving pass: reduced llama3.2 replicas
+behind the Heron planning layer — Planner-L's WRR weights steer actual
+requests into two continuous-batching ServingEngines.
+
+    PYTHONPATH=src python examples/serve_multisite.py [--requests 32]
+"""
+import argparse
+
+from repro.launch.serve import serve_demo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--sites", type=int, default=2)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    args = ap.parse_args()
+    out = serve_demo(arch=args.arch, num_requests=args.requests,
+                     num_sites=args.sites)
+    assert out["completed"] == out["submitted"]
+
+
+if __name__ == "__main__":
+    main()

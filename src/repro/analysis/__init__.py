@@ -1,0 +1,4 @@
+"""Compiled-artifact analysis: trip-count-aware HLO costs, roofline terms."""
+from repro.analysis.hlo import HloCost, analyze
+
+__all__ = ["HloCost", "analyze"]

@@ -1,0 +1,178 @@
+"""Roofline term assembly from dry-run artifacts (assignment §ROOFLINE).
+
+Per (arch × shape × mesh) cell, from the compiled per-device program:
+
+    compute    = flops_dev / peak_FLOPs_chip            [s]
+    memory     = hbm_bytes_dev / hbm_bw_chip            [s]
+    collective = collective_bytes_dev / link_bw_chip    [s]
+
+Hardware constants (assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI, per TPU v5e chip.
+
+``flops_dev`` / ``collective_bytes_dev`` come from the trip-count-aware
+HLO analysis stored by dryrun.py (``hlo_cost``). ``hbm_bytes_dev`` uses
+the dot-operand traffic from the same walk as an HBM proxy, floored by
+the analytic weight/cache stream for the cell (whichever is larger —
+dot operands under-count elementwise traffic; the analytic floor
+captures the weight/KV streaming that defines decode).
+
+MODEL_FLOPS (useful compute) = 6·N_active·tokens for train, 2·N_active·
+tokens (+ attention term) for prefill/decode; the useful-compute ratio
+MODEL_FLOPS / (flops_dev × chips) flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+BYTES_PARAM = 2
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: dominant term (perfect overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / roofline step time ∈ (0, 1]."""
+        chips = max(self.chips, 1)
+        useful_s = self.model_flops / (chips * PEAK_FLOPS)
+        return useful_s / max(self.step_time_s, 1e-30)
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "compute_s": self.compute_s,
+            "memory_s": self.memory_s, "collective_s": self.collective_s,
+            "dominant": self.dominant, "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.hlo_flops_total,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs per step: 6·N_active·D (train) / 2·N_active·D (+attn)."""
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return cfg.flops_per_token(shape.seq_len, "train") * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return cfg.flops_per_token(shape.seq_len, "prefill") * tokens
+    tokens = shape.global_batch                      # decode: 1 new token/seq
+    return cfg.flops_per_token(shape.seq_len, "decode") * tokens
+
+
+def analytic_memory_floor(cfg: ModelConfig, shape: ShapeConfig,
+                          chips: int, *, microbatches: int = 4,
+                          model_axis: int = 16,
+                          kv_bytes_per_el: int = 2) -> float:
+    """Per-device HBM bytes floor: weight stream + KV/state stream.
+
+    Train shards params over the whole mesh (FSDP) and streams them
+    fwd+bwd+remat ≈ 3 passes per microbatch. Serving shards params over
+    the model axis only (replicated across data) — the weight stream per
+    decode step divides by TP, not by the whole mesh. Decode additionally
+    streams the cache shard once per token.
+    """
+    if shape.kind == "train":
+        w_dev = cfg.param_count() * BYTES_PARAM / max(chips, 1)
+        return 3.0 * microbatches * w_dev
+    w_dev = cfg.param_count() * BYTES_PARAM / max(model_axis, 1)
+    if shape.kind == "prefill":
+        return w_dev
+    cache_dev = (cfg.kv_bytes_per_token(kv_bytes_per_el) * shape.seq_len
+                 * shape.global_batch / max(chips, 1))
+    return w_dev + cache_dev
+
+
+def load_cell(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def terms_from_report(rep: dict) -> RooflineTerms:
+    arch, shape_name = rep["arch"], rep["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = rep.get("mesh", {})
+    chips = 1
+    for v in mesh.values():
+        chips *= int(v)
+    hc = rep.get("hlo_cost", {}) or {}
+    flops_dev = float(hc.get("flops", 0.0))
+    coll_dev = float(hc.get("collective_bytes", 0.0))
+    dot_bytes_dev = float(hc.get("dot_bytes", 0.0))
+    mb = rep.get("num_microbatches") or 4
+    kv_el = 1 if rep.get("kv_cache_dtype") == "int8" else 2
+    mem_floor = analytic_memory_floor(
+        cfg, shape, chips, microbatches=mb,
+        model_axis=int(mesh.get("model", 16)), kv_bytes_per_el=kv_el)
+    if shape.kind == "decode":
+        # decode runs through the Pallas split-K kernel on TPU: HBM traffic
+        # is weights-once + cache-once at the STORED dtype (the XLA graph's
+        # fp32-upcast dot operands are a lowering artifact the kernel's
+        # fused dequant eliminates — validated in tests/test_kv_int8.py).
+        mem_dev = mem_floor
+    else:
+        mem_dev = max(dot_bytes_dev, mem_floor)
+    mf = model_flops(cfg, shape)
+    total_hlo = flops_dev * chips
+    return RooflineTerms(
+        arch=arch, shape=shape_name,
+        mesh="x".join(str(v) for v in mesh.values()),
+        chips=chips,
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=mem_dev / HBM_BW,
+        collective_s=coll_dev / LINK_BW,
+        model_flops=mf,
+        hlo_flops_total=total_hlo,
+        useful_ratio=mf / total_hlo if total_hlo else 0.0,
+    )
+
+
+def load_table(dryrun_dir: str, *, pod: str = "pod1",
+               tag: str = "") -> list:
+    out = []
+    for fname in sorted(os.listdir(dryrun_dir)):
+        if not fname.endswith(".json"):
+            continue
+        parts = fname[:-5].split("__")
+        if len(parts) < 3 or parts[2] != pod:
+            continue
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        rep = load_cell(os.path.join(dryrun_dir, fname))
+        if rep.get("ok"):
+            out.append(terms_from_report(rep))
+    return out

@@ -1,0 +1,4 @@
+"""Atomic async sharded checkpoints with manifest + restart."""
+from repro.checkpoint.store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

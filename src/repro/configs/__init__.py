@@ -1,0 +1,72 @@
+"""Architecture registry: the 10 assigned architectures + reduced smoke configs."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduced
+from repro.configs.phi35_moe_42b import CONFIG as phi35_moe_42b
+from repro.configs.deepseek_v2_236b import CONFIG as deepseek_v2_236b
+from repro.configs.rwkv6_1b6 import CONFIG as rwkv6_1b6
+from repro.configs.llama3_8b import CONFIG as llama3_8b
+from repro.configs.llama32_1b import CONFIG as llama32_1b
+from repro.configs.qwen3_14b import CONFIG as qwen3_14b
+from repro.configs.deepseek_7b import CONFIG as deepseek_7b
+from repro.configs.seamless_m4t_medium import CONFIG as seamless_m4t_medium
+from repro.configs.paligemma_3b import CONFIG as paligemma_3b
+from repro.configs.zamba2_7b import CONFIG as zamba2_7b
+from repro.configs.llama31_70b import CONFIG as llama31_70b
+
+# The paper's own profiling/serving model (not in the assigned 40 cells).
+PAPER_MODEL: ModelConfig = llama31_70b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        phi35_moe_42b,
+        deepseek_v2_236b,
+        rwkv6_1b6,
+        llama3_8b,
+        llama32_1b,
+        qwen3_14b,
+        deepseek_7b,
+        seamless_m4t_medium,
+        paligemma_3b,
+        zamba2_7b,
+    ]
+}
+
+# long_500k requires sub-quadratic attention: only SSM/hybrid archs run it
+# (skip note: DESIGN.md §Arch-applicability).
+LONG_CONTEXT_ARCHS = {"rwkv6-1.6b", "zamba2-7b"}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return reduced(get_config(name))
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch × shape) dry-run cells, honouring long_500k skips."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            skipped = shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape, skipped))
+    return out
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "LONG_CONTEXT_ARCHS",
+    "get_config", "get_shape", "smoke_config", "reduced", "cells", "PAPER_MODEL",
+]

@@ -1,0 +1,25 @@
+"""paligemma-3b — gemma decoder backbone, SigLIP frontend STUB (MQA kv=1).
+
+The vision frontend provides precomputed patch embeddings via
+``input_specs()`` (assignment rule for [vlm] archs).
+
+[arXiv:2407.07726; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    d_ff=16384,
+    vocab_size=257216,
+    head_dim=256,
+    frontend="siglip_stub",
+    num_prefix_embeddings=256,  # 16x16 patches from the (stubbed) SigLIP tower
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    source="arXiv:2407.07726",
+)

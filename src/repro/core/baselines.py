@@ -1,0 +1,148 @@
+"""Baseline schedulers (paper §5.2 (c) and (d)).
+
+(c) WRR + DynamoLLM: a weighted-round-robin router splits the workload
+    across sites ∝ provisioned compute; each site runs a DynamoLLM-style
+    scheduler that picks per-class (TP, f, load) minimizing power/energy,
+    assuming a traditional DC — i.e. *power-variability agnostic* (it
+    plans as if the site always has its full provisioned power).
+
+(d) Greedy min-latency: assigns TP_max + highest frequency, capping each
+    GPU instance's load at the per-class knee point of the latency-vs-load
+    curve (the paper's fix for the naive lowest-load variant that strands
+    ~33% of requests on capacity limits).
+
+Both baselines produce the same ``Plan`` shape as the Heron planners, so
+the simulator scores everyone identically: when the *actual* available
+power at a site is below the plan's draw, whole instances brown out
+(greedy highest-power-first shedding) and their load is dropped — exactly
+the C1 failure mode of Fig. 8.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lookup import LookupTable, Row
+from repro.core.planner_l import Plan, SiteSpec, plan_l
+
+
+def wrr_split(sites: list[SiteSpec], load_per_class: np.ndarray) -> list[np.ndarray]:
+    """Split the global per-class load across sites ∝ provisioned GPUs."""
+    w = np.array([s.num_gpus for s in sites], float)
+    w = w / w.sum()
+    return [load_per_class * wi for wi in w]
+
+
+def dynamollm_site_plan(table: LookupTable, site: SiteSpec,
+                        site_load: np.ndarray, time_limit: float = 30.0) -> Plan:
+    """Site-local min-power assignment with *assumed-infinite* power."""
+    inf_power = np.array([1e15])
+    return plan_l(table, [site], inf_power, site_load, objective="power",
+                  time_limit=time_limit)
+
+
+def baseline_wrr_dynamollm(table: LookupTable, sites: list[SiteSpec],
+                           load_per_class: np.ndarray,
+                           time_limit: float = 30.0) -> Plan:
+    """Baseline (c): per-site DynamoLLM under a compute-proportional WRR."""
+    splits = wrr_split(sites, load_per_class)
+    columns, counts = [], []
+    unserved = np.zeros(9)
+    for s, (site, sl) in enumerate(zip(sites, splits)):
+        p = dynamollm_site_plan(table, site, sl, time_limit)
+        for (_, r), x in zip(p.columns, p.counts):
+            if x > 0:
+                columns.append((s, r))
+                counts.append(int(x))
+        unserved += p.unserved
+    return Plan(columns=columns, counts=np.array(counts, int),
+                unserved=unserved, objective="power", status="baseline",
+                solve_seconds=0.0, num_sites=len(sites))
+
+
+def knee_points(table: LookupTable) -> dict[int, Row]:
+    """Per class: the TP_max/f_max row at the knee of e2e-vs-load.
+
+    Knee = the largest load whose marginal latency increase per doubling
+    stays below 25% of the base latency (paper: "the latency increase
+    before such a point is small").
+    """
+    out: dict[int, Row] = {}
+    tp_max = max(table.hw.tp_degrees)
+    f_max = table.hw.f_max
+    for c in range(9):
+        rows = [r for r in table.valid_rows(c)
+                if r.tp == tp_max and abs(r.freq - f_max) < 1e-9]
+        rows.sort(key=lambda r: r.load)
+        if not rows:
+            continue
+        base = rows[0].e2e
+        knee = rows[0]
+        for r in rows[1:]:
+            if r.e2e <= 1.25 * base:
+                knee = r
+            else:
+                break
+        out[c] = knee
+    return out
+
+
+def baseline_greedy_min_latency(table: LookupTable, sites: list[SiteSpec],
+                                load_per_class: np.ndarray) -> Plan:
+    """Baseline (d): TP_max + f_max instances at knee-point loads, WRR."""
+    knees = knee_points(table)
+    splits = wrr_split(sites, load_per_class)
+    columns, counts = [], []
+    unserved = np.zeros(9)
+    for s, (site, sl) in enumerate(zip(sites, splits)):
+        gpus_left = site.num_gpus
+        for c in range(9):
+            if c not in knees or sl[c] <= 0:
+                unserved[c] += max(sl[c], 0.0) if c not in knees else 0.0
+                continue
+            r = knees[c]
+            need = int(np.ceil(sl[c] / r.load))
+            fit = min(need, gpus_left // r.tp)
+            if fit > 0:
+                columns.append((s, r))
+                counts.append(fit)
+                gpus_left -= fit * r.tp
+            if fit < need:
+                unserved[c] += (need - fit) * r.load
+    return Plan(columns=columns, counts=np.array(counts, int),
+                unserved=unserved, objective="latency", status="baseline",
+                solve_seconds=0.0, num_sites=len(sites))
+
+
+def apply_power_reality(plan: Plan, actual_power_w: np.ndarray) -> Plan:
+    """Brown out instances where the plan draws more than reality provides.
+
+    Variability-agnostic baselines routinely overshoot during droughts; we
+    shed whole instance groups (highest power-per-rps first — the site
+    keeps its most power-efficient capacity alive, which is the DynamoLLM-
+    friendly assumption) until the site fits its actual power.
+    """
+    S = plan.num_sites
+    counts = plan.counts.copy()
+    extra_unserved = np.zeros(9)
+    for s in range(S):
+        idx = [i for i, (site, r) in enumerate(plan.columns)
+               if site == s and counts[i] > 0]
+        draw = sum(counts[i] * plan.columns[i][1].power for i in idx)
+        budget = actual_power_w[s]
+        if draw <= budget:
+            continue
+        # shed order: worst power-per-served-rps first
+        idx.sort(key=lambda i: plan.columns[i][1].power
+                 / max(plan.columns[i][1].load, 1e-9), reverse=True)
+        for i in idx:
+            r = plan.columns[i][1]
+            while counts[i] > 0 and draw > budget:
+                counts[i] -= 1
+                draw -= r.power
+                extra_unserved[r.cls] += r.load
+            if draw <= budget:
+                break
+    return Plan(columns=plan.columns, counts=counts,
+                unserved=plan.unserved + extra_unserved,
+                objective=plan.objective, status=plan.status + "+reality",
+                solve_seconds=plan.solve_seconds, num_sites=S)

@@ -1,0 +1,111 @@
+"""MILP solving substrate for the Heron planners.
+
+Exact solves go through ``scipy.optimize.milp`` (HiGHS branch-and-cut —
+the offline stand-in for the paper's COIN-OR CBC). Very large instances or
+solver timeouts fall back to LP relaxation + floor-rounding + greedy
+repair, which preserves feasibility of the ≤-constraints by construction
+and repairs ≥-constraints (serving capacity) greedily by cheapest column.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+from scipy import sparse
+from scipy.optimize import Bounds, LinearConstraint, linprog, milp
+
+
+@dataclass
+class MilpResult:
+    x: np.ndarray
+    status: str                 # 'optimal' | 'fallback' | 'infeasible'
+    objective: float
+    solve_seconds: float
+    used_fallback: bool = False
+
+
+def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
+               integrality=None, upper=None, time_limit: float = 60.0,
+               mip_rel_gap: float = 1e-3) -> MilpResult:
+    """min c.x  s.t.  A_ub x <= b_ub,  A_lb x >= b_lb,  0 <= x <= upper."""
+    t0 = time.perf_counter()
+    n = len(c)
+    cons = []
+    if A_ub is not None and A_ub.shape[0]:
+        cons.append(LinearConstraint(A_ub, -np.inf, b_ub))
+    if A_lb is not None and A_lb.shape[0]:
+        cons.append(LinearConstraint(A_lb, b_lb, np.inf))
+    ub = np.full(n, np.inf) if upper is None else np.asarray(upper, float)
+    bounds = Bounds(np.zeros(n), ub)
+    integ = np.zeros(n) if integrality is None else np.asarray(integrality)
+    res = milp(c=c, constraints=cons, bounds=bounds, integrality=integ,
+               options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap})
+    dt = time.perf_counter() - t0
+    if res.status == 0 and res.x is not None:
+        x = np.where(integ > 0, np.round(res.x), res.x)
+        return MilpResult(x=x, status="optimal", objective=float(res.fun),
+                          solve_seconds=dt)
+    # ---- fallback: LP relax + round down + greedy repair ----
+    x = _lp_round_repair(c, A_ub, b_ub, A_lb, b_lb, integ, ub)
+    dt = time.perf_counter() - t0
+    if x is None:
+        return MilpResult(x=np.zeros(n), status="infeasible",
+                          objective=float("inf"), solve_seconds=dt,
+                          used_fallback=True)
+    return MilpResult(x=x, status="fallback", objective=float(c @ x),
+                      solve_seconds=dt, used_fallback=True)
+
+
+def _lp_round_repair(c, A_ub, b_ub, A_lb, b_lb, integ, ub):
+    n = len(c)
+    A_parts, bl_parts, bu_parts = [], [], []
+    if A_ub is not None and A_ub.shape[0]:
+        A_parts.append(A_ub)
+        bl_parts.append(np.full(A_ub.shape[0], -np.inf))
+        bu_parts.append(b_ub)
+    if A_lb is not None and A_lb.shape[0]:
+        A_parts.append(A_lb)
+        bl_parts.append(b_lb)
+        bu_parts.append(np.full(A_lb.shape[0], np.inf))
+    A = sparse.vstack(A_parts) if A_parts else None
+    res = linprog(c, A_ub=sparse.vstack([A_ub, -A_lb]) if A_lb is not None else A_ub,
+                  b_ub=np.concatenate([b_ub, -b_lb]) if A_lb is not None else b_ub,
+                  bounds=list(zip(np.zeros(n), ub)), method="highs")
+    if not res.success:
+        return None
+    x = res.x.copy()
+    x[integ > 0] = np.floor(x[integ > 0] + 1e-9)
+    # repair >= constraints (capacity) by bumping the cheapest helpful column
+    if A_lb is not None and A_lb.shape[0]:
+        A_lb_d = sparse.csr_matrix(A_lb)
+        for _ in range(10_000):
+            lhs = A_lb_d @ x
+            short = lhs < b_lb - 1e-9
+            if not short.any():
+                break
+            i = int(np.argmax(b_lb - lhs))
+            col_gain = A_lb_d[i].toarray().ravel()
+            cand = np.where((col_gain > 1e-12) & (x < ub - 1e-9))[0]
+            if len(cand) == 0:
+                break  # cannot repair; return best effort
+            j = cand[np.argmin(c[cand] / col_gain[cand])]
+            x[j] += 1.0 if integ[j] > 0 else (b_lb[i] - lhs[i]) / col_gain[j]
+        # re-check <= feasibility; if violated, undo proportionally
+    if A_ub is not None and A_ub.shape[0]:
+        A_ub_d = sparse.csr_matrix(A_ub)
+        for _ in range(10_000):
+            lhs = A_ub_d @ x
+            over = lhs > b_ub + 1e-6
+            if not over.any():
+                break
+            i = int(np.argmax(lhs - b_ub))
+            row = A_ub_d[i].toarray().ravel()
+            cand = np.where((row > 1e-12) & (x > 1e-9))[0]
+            if len(cand) == 0:
+                break
+            j = cand[np.argmax(row[cand] * np.maximum(x[cand], 1))]
+            x[j] = max(0.0, x[j] - (1.0 if integ[j] > 0 else
+                                    (lhs[i] - b_ub[i]) / row[j]))
+    return x

@@ -1,0 +1,126 @@
+"""Planner-S — the seconds-scale frequency/load re-planner (paper Fig. 11).
+
+Planner-S keeps Planner-L's TP assignments (re-sharding is expensive) and
+re-solves only the frequency and load dimension against *near-real-time*
+power and workload, inside the GPU budget GPU_{s,c,t} that Planner-L
+granted. Two effects (paper §5.3):
+
+  * power drops below the 15-min prediction → downclock / shed load
+    instead of dropping requests (elasticity);
+  * power rises above it → upclock for better TTFT/TBT than planned.
+
+The Fig. 11 ILP has no single-(f,l) constraint (no Y variables) — Planner-S
+may split a config across frequencies; it is therefore much smaller and
+runs in milliseconds-to-seconds even at 64 sites.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+from scipy import sparse
+
+from repro.core.lookup import LookupTable, Row
+from repro.core.milp import solve_milp
+from repro.core.planner_l import DROP_PENALTY, Objective, Plan, SiteSpec
+
+
+def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
+           load_per_class: np.ndarray, gpu_budget: dict[tuple[int, int, int], int],
+           *, objective: Objective = "latency",
+           frozen_sct: Optional[set] = None,
+           time_limit: float = 10.0) -> Plan:
+    """Solve the Fig. 11 ILP.
+
+    ``gpu_budget``: {(site, class, tp): gpus} from Planner-L's last plan.
+    ``frozen_sct``: (s,c,t) groups with pending TP reconfigurations — the
+    Configurator excludes them from placement (paper §4, Configurator).
+    """
+    S = len(sites)
+    frozen = frozen_sct or set()
+    # columns: only (s, row) whose (s, cls, tp) has a budget and is not frozen
+    cols: list[tuple[int, Row]] = []
+    for (s, cls, tp), gpus in gpu_budget.items():
+        if gpus <= 0 or (s, cls, tp) in frozen:
+            continue
+        for r in table.valid_rows(cls):
+            if r.tp == tp:
+                cols.append((s, r))
+    n = len(cols)
+    if n == 0:
+        return Plan(columns=[], counts=np.zeros(0, int),
+                    unserved=np.maximum(load_per_class, 0.0),
+                    objective=objective, status="empty", solve_seconds=0.0,
+                    num_sites=S)
+
+    col_cost = np.array([r.e2e if objective == "latency" else r.power
+                         for _, r in cols])
+    col_power = np.array([r.power for _, r in cols])
+    col_load = np.array([r.load for _, r in cols])
+    col_cls = np.array([r.cls for _, r in cols])
+    col_site = np.array([s for s, _ in cols])
+    col_tp = np.array([r.tp for _, r in cols])
+
+    nv = n + 9
+    iZ = np.arange(n)
+    iSl = n + np.arange(9)
+    c_vec = np.zeros(nv)
+    c_vec[iZ] = col_cost
+    c_vec[iSl] = DROP_PENALTY
+
+    rows_ub, cols_ub, data_ub, b_ub = [], [], [], []
+
+    def add_ub(terms, rhs):
+        i = len(b_ub)
+        for j, v in terms:
+            rows_ub.append(i)
+            cols_ub.append(j)
+            data_ub.append(v)
+        b_ub.append(rhs)
+
+    # (1) per-site power cap at near-real-time power
+    for s in range(S):
+        mask = np.where(col_site == s)[0]
+        add_ub([(iZ[j], float(col_power[j])) for j in mask], float(power_w[s]))
+    # (3) per-(s,c,t) GPU budget from Planner-L
+    keys = sorted(gpu_budget)
+    for (s, cls, tp) in keys:
+        mask = np.where((col_site == s) & (col_cls == cls) & (col_tp == tp))[0]
+        if len(mask):
+            add_ub([(iZ[j], float(col_tp[j])) for j in mask],
+                   float(gpu_budget[(s, cls, tp)]))
+    A_ub = sparse.csr_matrix((data_ub, (rows_ub, cols_ub)),
+                             shape=(len(b_ub), nv))
+    b_ub = np.array(b_ub)
+
+    # (2) capacity with slack
+    rows_lb, cols_lb, data_lb, b_lb = [], [], [], []
+    for cidx in range(9):
+        mask = np.where(col_cls == cidx)[0]
+        i = len(b_lb)
+        for j in mask:
+            rows_lb.append(i)
+            cols_lb.append(iZ[j])
+            data_lb.append(float(col_load[j]))
+        rows_lb.append(i)
+        cols_lb.append(iSl[cidx])
+        data_lb.append(1.0)
+        b_lb.append(float(load_per_class[cidx]))
+    A_lb = sparse.csr_matrix((data_lb, (rows_lb, cols_lb)),
+                             shape=(len(b_lb), nv))
+    b_lb = np.array(b_lb)
+
+    integrality = np.zeros(nv)
+    integrality[iZ] = 1
+    upper = np.full(nv, np.inf)
+    upper[iZ] = np.array([gpu_budget[(s, r.cls, r.tp)] // r.tp
+                          for s, r in cols], float)
+    upper[iSl] = np.maximum(load_per_class, 0.0)
+
+    res = solve_milp(c_vec, A_ub=A_ub, b_ub=b_ub, A_lb=A_lb, b_lb=b_lb,
+                     integrality=integrality, upper=upper,
+                     time_limit=time_limit)
+    return Plan(columns=cols, counts=np.round(res.x[iZ]).astype(int),
+                unserved=np.maximum(res.x[iSl], 0.0), objective=objective,
+                status=res.status, solve_seconds=res.solve_seconds,
+                num_sites=S)

@@ -1,0 +1,119 @@
+"""Heron — the logically-centralized cross-site router (paper Fig. 9).
+
+Ties the components together for online operation:
+
+    Planner-L  (15 min)   TP + frequency + load assignment, sticky (R_L)
+    Configurator          applies TP re-shards, freezes pending groups
+    Planner-S  (~5 s)     frequency/load re-solve inside L's GPU budget
+    RequestScheduler      WRR dispatch + packing heuristic
+
+``HeronRouter.step_slot`` advances one 15-min slot; ``step_seconds``
+advances Planner-S/dispatch inside the slot. The same object also exposes
+the straggler mitigation used at 1000+-node scale: per-site service-
+latency EWMAs deweight slow sites inside the WRR (the router is the
+failure/straggler absorber — the paper's own K1 story).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.lookup import LookupTable
+from repro.core.planner_l import Objective, Plan, SiteSpec, plan_l
+from repro.core.planner_s import plan_s
+from repro.core.predictor import SeriesPredictor
+from repro.core.scheduler import Configurator, DispatchResult, RequestScheduler
+
+
+@dataclass
+class HeronRouter:
+    table: LookupTable
+    sites: list[SiteSpec]
+    objective: Objective = "latency"
+    r_frac: float = 0.03
+    planner_s_period: float = 5.0
+    packing: bool = True
+    time_limit_l: float = 60.0
+    time_limit_s: float = 10.0
+    straggler_alpha: float = 0.2          # EWMA coefficient
+    straggler_threshold: float = 2.0      # deweight sites slower than 2x fleet
+
+    _plan_l: Optional[Plan] = None
+    _plan_s: Optional[Plan] = None
+    _cfgtor: Configurator = field(default_factory=Configurator)
+    _dispatcher: Optional[RequestScheduler] = None
+    _site_latency_ewma: Optional[np.ndarray] = None
+    _site_alive: Optional[np.ndarray] = None
+    _now: float = 0.0
+
+    def __post_init__(self):
+        S = len(self.sites)
+        self._dispatcher = RequestScheduler(S, packing=self.packing)
+        self._site_latency_ewma = np.zeros(S)
+        self._site_alive = np.ones(S, bool)
+
+    # ---------------- site health (fault tolerance) ----------------
+    def mark_site_down(self, s: int) -> None:
+        """Site lost (grid trip, fibre cut, maintenance) — replan without it."""
+        self._site_alive[s] = False
+
+    def mark_site_up(self, s: int) -> None:
+        self._site_alive[s] = True
+
+    def observe_latency(self, s: int, latency: float) -> None:
+        a = self.straggler_alpha
+        self._site_latency_ewma[s] = (1 - a) * self._site_latency_ewma[s] + a * latency
+
+    def _effective_power(self, power_w: np.ndarray) -> np.ndarray:
+        p = power_w.copy()
+        p[~self._site_alive] = 0.0
+        # stragglers: fleet-relative EWMA deweighting inside the WRR is
+        # expressed to the planner as a power haircut (fewer requests land)
+        ew = self._site_latency_ewma
+        if ew.max() > 0:
+            fleet = max(np.median(ew[ew > 0]) if (ew > 0).any() else 0.0, 1e-9)
+            slow = ew > self.straggler_threshold * fleet
+            p[slow] *= 0.5
+        return p
+
+    # ---------------- planning ----------------
+    def step_slot(self, predicted_power_w: np.ndarray,
+                  predicted_load: np.ndarray) -> Plan:
+        """Run Planner-L for the next 15-min slot."""
+        p = plan_l(self.table, self.sites,
+                   self._effective_power(predicted_power_w), predicted_load,
+                   objective=self.objective, old=self._plan_l,
+                   r_frac=self.r_frac, time_limit=self.time_limit_l)
+        self._cfgtor.apply(self._plan_l, p, self._now)
+        self._plan_l = p
+        self._plan_s = None
+        return p
+
+    def step_seconds(self, now: float, power_w: np.ndarray,
+                     observed_load: np.ndarray) -> Plan:
+        """Run Planner-S against near-real-time power/load."""
+        assert self._plan_l is not None, "step_slot first"
+        self._now = now
+        frozen = self._cfgtor.frozen(now)
+        p = plan_s(self.table, self.sites, self._effective_power(power_w),
+                   observed_load, self._plan_l.gpu_budget(),
+                   objective=self.objective, frozen_sct=frozen,
+                   time_limit=self.time_limit_s)
+        if p.status != "empty":
+            self._plan_s = p
+        return self._plan_s or self._plan_l
+
+    # ---------------- dispatch ----------------
+    def dispatch(self, arrivals_rps: np.ndarray) -> DispatchResult:
+        plan = self._plan_s or self._plan_l
+        assert plan is not None
+        groups = self._dispatcher.groups_from_plan(plan)
+        res = self._dispatcher.dispatch(groups, arrivals_rps)
+        for s in range(len(self.sites)):
+            if res.per_site_load[s] > 0:
+                m = [g.row.e2e for g in groups if g.site == s]
+                if m:
+                    self.observe_latency(s, float(np.mean(m)))
+        return res

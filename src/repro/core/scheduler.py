@@ -1,0 +1,173 @@
+"""Request Scheduler, packing heuristic, and Configurator (paper §4).
+
+The Request Scheduler dispatches arriving inference requests across sites
+with weighted round-robin (WRR), weights taken from the latest plan's
+provisioned per-class capacity. The paper's Request Class Predictor
+(Albert/DistilBert + regressor, 99.95% bucket accuracy) is treated as an
+oracle exactly as the paper does ("we treat output length as an oracle in
+our experiments") — ``classify`` on the trace plays that role.
+
+The packing heuristic moves smaller-class requests into under-loaded
+instances configured for larger classes (LS→LM, …), starting from the
+larger requests — improving latency when a class transiently overloads
+its own instances while a bigger class has headroom.
+
+The Configurator applies TP/frequency changes between plans; groups with
+pending TP re-shards are frozen (excluded from Planner-S placement) for
+``tp_reshard_seconds`` — the paper's C3 overhead, hidden DynamoLLM-style
+by background weight transfer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.lookup import LookupTable, Row
+from repro.core.planner_l import Plan
+
+# class index helpers: c = 3*input_bucket + output_bucket
+def _in_bucket(c: int) -> int:
+    return c // 3
+
+
+def _out_bucket(c: int) -> int:
+    return c % 3
+
+
+def smaller_classes(c: int) -> list[int]:
+    """Classes strictly dominated by c (both buckets <=, not equal) —
+    requests of those classes can safely run on a class-c instance."""
+    ic, oc = _in_bucket(c), _out_bucket(c)
+    return [3 * i + o for i in range(ic + 1) for o in range(oc + 1)
+            if (i, o) != (ic, oc)]
+
+
+@dataclass
+class InstanceGroup:
+    """All instances at one (site, row) operating point."""
+    site: int
+    row: Row
+    count: int
+
+    @property
+    def capacity(self) -> float:
+        return self.count * self.row.load
+
+
+@dataclass
+class DispatchResult:
+    served: np.ndarray            # [9] rps served within capacity
+    dropped: np.ndarray           # [9] rps dropped (power/capacity)
+    mean_e2e: np.ndarray          # [9] load-weighted mean E2E per class
+    packed: np.ndarray            # [9] rps moved by the packing heuristic
+    per_site_load: np.ndarray     # [S] rps landing on each site
+
+    def aggregate_e2e(self) -> float:
+        m = self.served > 0
+        if not m.any():
+            return 0.0
+        return float((self.mean_e2e[m] * self.served[m]).sum()
+                     / self.served[m].sum())
+
+
+class RequestScheduler:
+    """WRR dispatch + optional packing, fluid-flow semantics."""
+
+    def __init__(self, num_sites: int, packing: bool = True):
+        self.num_sites = num_sites
+        self.packing = packing
+
+    def groups_from_plan(self, plan: Plan) -> list[InstanceGroup]:
+        return [InstanceGroup(site=s, row=r, count=int(x))
+                for s, r, x in plan.active()]
+
+    def dispatch(self, groups: list[InstanceGroup], arrivals: np.ndarray,
+                 backlog: np.ndarray | None = None) -> DispatchResult:
+        """Route ``arrivals`` [9] rps across ``groups`` by WRR weights.
+
+        Queueing beyond rated capacity inflates latency via a fluid
+        backlog (Little's law); arrivals beyond 2x capacity are dropped.
+        """
+        S = self.num_sites
+        served = np.zeros(9)
+        dropped = np.zeros(9)
+        packed = np.zeros(9)
+        e2e_num = np.zeros(9)
+        per_site = np.zeros(S)
+        cap = np.zeros(9)
+        for g in groups:
+            cap[g.row.cls] += g.capacity
+
+        load = arrivals.astype(float).copy()
+        free = {id(g): g.capacity for g in groups}
+
+        # ---- first pass: own-class WRR (∝ group capacity) ----
+        overflow = np.zeros(9)
+        for c in range(9):
+            gs = [g for g in groups if g.row.cls == c]
+            if not gs or cap[c] <= 0:
+                overflow[c] = load[c]
+                continue
+            take = min(load[c], cap[c])
+            overflow[c] = load[c] - take
+            for g in gs:
+                share = take * (g.capacity / cap[c])
+                free[id(g)] -= share
+                served[c] += share
+                e2e_num[c] += share * g.row.e2e
+                per_site[g.site] += share
+        # ---- packing: overflow of smaller classes into larger hosts ----
+        if self.packing:
+            for c in range(8, -1, -1):        # larger requests first (paper)
+                if overflow[c] <= 1e-12:
+                    continue
+                hosts = [g for g in groups
+                         if c in smaller_classes(g.row.cls)
+                         and free[id(g)] > 1e-12]
+                hosts.sort(key=lambda g: g.row.e2e)
+                for g in hosts:
+                    if overflow[c] <= 1e-12:
+                        break
+                    take = min(overflow[c], free[id(g)])
+                    free[id(g)] -= take
+                    overflow[c] -= take
+                    served[c] += take
+                    packed[c] += take
+                    # a smaller request on a larger-class instance finishes
+                    # no slower than the host class's e2e
+                    e2e_num[c] += take * g.row.e2e
+                    per_site[g.site] += take
+        dropped = overflow
+        mean_e2e = np.where(served > 0, e2e_num / np.maximum(served, 1e-12), 0.0)
+        return DispatchResult(served=served, dropped=dropped, mean_e2e=mean_e2e,
+                              packed=packed, per_site_load=per_site)
+
+
+@dataclass
+class Configurator:
+    """Tracks TP re-shards between consecutive plans; freezes groups."""
+    tp_reshard_seconds: float = 30.0
+    freq_switch_seconds: float = 0.05
+    _pending: dict[tuple[int, int, int], float] = field(default_factory=dict)
+
+    def apply(self, old: Plan | None, new: Plan, now: float) -> None:
+        """Diff (s,c,t) instance counts; start re-shard timers on changes."""
+        if old is None:
+            return
+        o = old.agg_by_sct()
+        n = new.agg_by_sct()
+        for k in set(o) | set(n):
+            if o.get(k, 0) != n.get(k, 0):
+                self._pending[k] = now + self.tp_reshard_seconds
+
+    def frozen(self, now: float) -> set:
+        self._pending = {k: t for k, t in self._pending.items() if t > now}
+        return set(self._pending)
+
+    def reconfig_count(self, old: Plan | None, new: Plan) -> int:
+        if old is None:
+            return 0
+        o = old.agg_by_sct()
+        n = new.agg_by_sct()
+        return int(sum(abs(o.get(k, 0) - n.get(k, 0)) for k in set(o) | set(n)))

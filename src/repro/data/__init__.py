@@ -1,0 +1,5 @@
+from repro.data.wind import WindSite, WindFleet, make_default_fleet
+from repro.data.workload import WorkloadTrace, make_trace, CLASSES
+
+__all__ = ["WindSite", "WindFleet", "make_default_fleet", "WorkloadTrace",
+           "make_trace", "CLASSES"]

@@ -1,0 +1,52 @@
+"""Training data pipeline: deterministic synthetic LM token stream.
+
+No datasets ship offline, so the train driver consumes a synthetic
+next-token corpus with enough structure to give a falling loss curve
+(Zipf unigram mixture + short-range bigram structure). The pipeline is:
+
+  * **deterministic & resumable** — batch ``i`` is a pure function of
+    (seed, i); checkpoint restore just sets the step counter (no iterator
+    state to persist);
+  * **shard-friendly** — each host materialises the full [B, S] batch and
+    hands it to jit under the batch in_sharding (GSPMD slices per device);
+    at 1000-node scale, swap ``global_batch_fn`` for a per-host slice fn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def batch(self, step: int) -> dict:
+        """Deterministic batch for ``step``: {tokens, labels} [B, S]."""
+        rng = np.random.default_rng((self.seed, step))
+        B, S, V = self.global_batch, self.seq_len, self.vocab_size
+        # Zipf unigrams restricted to the vocab
+        u = rng.zipf(self.zipf_a, size=(B, S + 1))
+        u = (u - 1) % V
+        # bigram structure: with p=0.5, next token = (prev * 31 + 7) % V —
+        # learnable short-range dependency so loss falls below unigram entropy
+        mask = rng.random((B, S)) < 0.5
+        nxt = (u[:, :-1] * 31 + 7) % V
+        tok = u.copy()
+        tok[:, 1:][mask] = nxt[mask]
+        tokens = jnp.asarray(tok[:, :-1], jnp.int32)
+        labels = jnp.asarray(tok[:, 1:], jnp.int32)
+        return {"tokens": tokens, "labels": labels}
+
+    def batches(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (
+    axis_rules, shard, logical_to_pspec, current_rules, ParallelConfig,
+)
+
+__all__ = ["axis_rules", "shard", "logical_to_pspec", "current_rules", "ParallelConfig"]

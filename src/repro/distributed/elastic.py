@@ -1,0 +1,103 @@
+"""Elastic re-meshing and failure handling (1000+-node posture).
+
+Two failure domains, two mechanisms:
+
+  * **cross-site** (a wind site browns out / fibre cut): Heron's own job —
+    ``HeronRouter.mark_site_down`` re-plans the fleet without the site.
+    That is the paper's K1 story; nothing here.
+
+  * **intra-site** (a pod or a data-parallel slice of the serving/training
+    mesh dies): ``shrink_mesh`` drops the failed slice and returns the new
+    ParallelConfig; ``reshard_tree`` device_puts a (restored) pytree onto
+    the surviving mesh. Training restarts from the latest atomic
+    checkpoint; serving replays in-flight requests (engine slots are
+    request-scoped, so replay == resubmit).
+
+The mesh math is plain: losing a pod on (pod=2, data=16, model=16) yields
+(16, 16); losing a data slice yields (15, 16) — model-axis groups are
+never split because TP shards are co-located in a pod (ICI domain), which
+is why the survivable axes are exactly the pure-DP ones.
+
+``StragglerTracker`` is the router-level mitigation: per-site EWMA of
+service latency, deweighted in WRR when slower than ``threshold`` x fleet
+median (used by HeronRouter.observe_latency).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import ParallelConfig
+
+
+def shrink_mesh(parallel: ParallelConfig, *, lost_axis: str,
+                lost_index: int) -> ParallelConfig:
+    """Drop slice ``lost_index`` of ``lost_axis`` from the mesh.
+
+    Only pure data-parallel axes are survivable (model-axis loss means the
+    TP group is gone — that replica restarts from checkpoint elsewhere).
+    """
+    mesh = parallel.mesh
+    assert mesh is not None, "no mesh to shrink"
+    if lost_axis not in parallel.data_axes:
+        raise ValueError(
+            f"axis {lost_axis!r} is not a pure-DP axis; a TP-group loss "
+            "is handled by full replica restart, not elastic shrink")
+    axis_pos = mesh.axis_names.index(lost_axis)
+    devs = np.moveaxis(mesh.devices, axis_pos, 0)
+    keep = [i for i in range(devs.shape[0]) if i != lost_index]
+    if not keep:
+        raise ValueError("cannot shrink to zero slices")
+    new_devs = np.moveaxis(devs[keep], 0, axis_pos)
+    new_mesh = Mesh(new_devs, mesh.axis_names)
+    return replace(parallel, mesh=new_mesh)
+
+
+def reshard_tree(tree, parallel: ParallelConfig, specs):
+    """device_put every leaf onto ``parallel.mesh`` under ``specs``.
+
+    ``specs``: pytree of PartitionSpec (or None) matching ``tree`` — the
+    restore path after an elastic shrink (checkpoint → new mesh).
+    """
+    mesh = parallel.mesh
+
+    def put(x, spec):
+        if mesh is None or spec is None:
+            return x
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, specs)
+
+
+@dataclass
+class StragglerTracker:
+    """Per-site latency EWMAs with fleet-median deweighting."""
+    num_sites: int
+    alpha: float = 0.2
+    threshold: float = 2.0
+    floor_weight: float = 0.25
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.num_sites)
+
+    def observe(self, site: int, latency_s: float) -> None:
+        e = self.ewma[site]
+        self.ewma[site] = latency_s if e == 0 else \
+            (1 - self.alpha) * e + self.alpha * latency_s
+
+    def weights(self) -> np.ndarray:
+        """Multiplicative WRR deweights in (0, 1]."""
+        w = np.ones(self.num_sites)
+        seen = self.ewma > 0
+        if seen.sum() >= 2:
+            fleet = np.median(self.ewma[seen])
+            if fleet > 0:
+                ratio = self.ewma / fleet
+                slow = seen & (ratio > self.threshold)
+                w[slow] = np.maximum(self.floor_weight,
+                                     self.threshold / ratio[slow])
+        return w

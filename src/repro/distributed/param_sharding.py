@@ -1,0 +1,219 @@
+"""Per-leaf PartitionSpecs for params / batches / caches.
+
+The models annotate *activations* with logical axes (sharding.py); this
+module assigns physical specs to *storage* — parameter leaves, input
+batches, and decode caches — by tree-path rules with divisibility
+fallback (a dim is only mapped to mesh axes that divide it; otherwise the
+mapping is dropped, never an error — exactly the MaxText-style behaviour
+that lets one rule table serve ten architectures).
+
+Conventions (see DESIGN.md §5):
+  * TP ("model" axis): attention q/o over heads, FFN hidden, vocab;
+  * EP: MoE expert dim over "model"; per-expert FFN width over the data
+    axes (weight-stationary storage sharding, gathered per layer);
+  * FSDP (train only): remaining large dims of ≥2-D leaves over the data
+    axes — params, grads and optimizer state all inherit it;
+  * caches: batch over data axes; cache sequence over "model"
+    (flash-decoding) or kv_heads over "model" (classic TP decode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ParallelConfig
+
+# leaf names whose LAST dim carries TP output features (col-parallel)
+_COL_PARALLEL = {"wq", "w_gate", "w_up", "cm_k", "w_uq"}
+# leaf names whose SECOND-TO-LAST dim carries TP input features (row-parallel)
+_ROW_PARALLEL = {"wo", "w_down", "cm_v", "w_out"}
+# kv projections: col-parallel only when kv_heads divide the model axis
+_KV_PROJ = {"wk", "wv"}
+# rwkv time-mix projections behave col-parallel (state heads over model)
+_RWKV_COL = {"w_r", "w_k", "w_v", "w_g"}
+_RWKV_ROW = {"w_o"}
+
+
+def _fits(shape, dim: int, axes) -> bool:
+    """Can dim ``dim`` of ``shape`` be sharded over mesh axes ``axes``?"""
+    if not axes:
+        return False
+    n = int(np.prod([_AXIS_SIZES.get(a, 1) for a in axes]))
+    return shape[dim] % n == 0 and shape[dim] >= n
+
+
+_AXIS_SIZES: dict[str, int] = {}
+
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def _leaf_spec(cfg: ModelConfig, parallel: ParallelConfig, names: list[str],
+               shape: tuple, *, fsdp: bool) -> P:
+    m = parallel.model_axis
+    d_axes = tuple(parallel.data_axes)
+    msize = parallel.model_size()
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    in_moe = "moe" in names
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def try_set(dim: int, axes):
+        ax = axes if isinstance(axes, tuple) else (axes,)
+        if spec[dim] is None and _fits(shape, dim, ax):
+            spec[dim] = axes
+
+    heads_ok = cfg.num_heads % msize == 0
+    kv_ok = cfg.num_kv_heads % msize == 0 and not cfg.use_mla
+
+    if name == "embed" and nd == 2:
+        try_set(0, m)                                 # vocab-parallel
+        if spec[0] is None:
+            try_set(1, m)
+    elif name == "lm_head":
+        try_set(1, m)
+        if spec[1] is None:
+            try_set(0, m)
+    elif in_moe and name in ("w_gate", "w_up") and nd >= 3:
+        if getattr(parallel, "moe_expert_axis", "model") == "data":
+            # §Perf H8: [*, E, D, F] — experts over data, F TP over model
+            try_set(nd - 3, d_axes)
+            try_set(nd - 1, m)
+        else:
+            # [*, E, D, F]: experts over model, F over data (storage)
+            try_set(nd - 3, m)
+            if parallel.expert_tp_over_data:
+                try_set(nd - 1, d_axes)
+    elif in_moe and name == "w_down" and nd >= 3:
+        if getattr(parallel, "moe_expert_axis", "model") == "data":
+            try_set(nd - 3, d_axes)                   # [*, E, F, D]
+            try_set(nd - 2, m)
+        else:
+            try_set(nd - 3, m)
+            if parallel.expert_tp_over_data:
+                try_set(nd - 2, d_axes)
+    elif parent == "shared" and name in ("w_gate", "w_up"):
+        try_set(nd - 1, m)                            # shared experts: TP
+    elif parent == "shared" and name == "w_down":
+        try_set(nd - 2, m)
+    elif name == "router":
+        pass                                          # tiny, replicated
+    elif name in _KV_PROJ:
+        if kv_ok:
+            try_set(nd - 1, m)
+    elif name in _COL_PARALLEL or name in _RWKV_COL:
+        if name in ("wq", "w_uq") and not heads_ok:
+            pass
+        else:
+            try_set(nd - 1, m)
+    elif name in _ROW_PARALLEL or name in _RWKV_ROW:
+        if name == "wo" and not heads_ok and not cfg.use_mla:
+            pass
+        else:
+            try_set(nd - 2, m)
+    elif name in ("w_uk", "w_uv"):                    # MLA up-projections
+        if heads_ok:
+            try_set(nd - 1, m)
+
+    # FSDP: storage-shard the largest still-replicated dim over data axes
+    # (skip leaves that already consumed a data axis, e.g. EP expert FFNs —
+    # a mesh axis may appear at most once per spec)
+    used = {a for s in spec if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))}
+    if (fsdp and nd >= 2 and int(np.prod(shape)) >= 1 << 16
+            and not used.intersection(d_axes)):
+        order = sorted(range(nd), key=lambda i: -shape[i])
+        for dim in order:
+            if spec[dim] is None and _fits(shape, dim, d_axes):
+                spec[dim] = d_axes
+                break
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, parallel: ParallelConfig, params_shape, *,
+                fsdp: bool = False):
+    """Pytree of PartitionSpec matching ``params_shape`` (a specs pytree)."""
+    global _AXIS_SIZES
+    _AXIS_SIZES = parallel.axis_sizes
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [
+        _leaf_spec(cfg, parallel, _path_names(path), tuple(leaf.shape),
+                   fsdp=fsdp)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ModelConfig, parallel: ParallelConfig,
+                shape: ShapeConfig):
+    """Input batch specs: batch over data axes (model axis for seq via the
+    in-model constraints)."""
+    global _AXIS_SIZES
+    _AXIS_SIZES = parallel.axis_sizes
+    d_axes = tuple(parallel.data_axes)
+    dp = parallel.data_size()
+    b_ax = d_axes if shape.global_batch % max(dp, 1) == 0 else ()
+    b = b_ax if b_ax else None
+
+    def spec_for(leaf_shape):
+        return P(b, *([None] * (len(leaf_shape) - 1)))
+
+    return spec_for
+
+
+def cache_specs_tree(cfg: ModelConfig, parallel: ParallelConfig,
+                     cache_shape, shape: ShapeConfig):
+    """Decode-cache specs: batch over data; cache seq / kv-heads over model.
+
+    For global_batch < data size (long_500k), the cache sequence dim is
+    spread over (model + data) — flash-decoding across the whole mesh.
+    """
+    global _AXIS_SIZES
+    _AXIS_SIZES = parallel.axis_sizes
+    m = parallel.model_axis
+    d_axes = tuple(parallel.data_axes)
+    dp = parallel.data_size()
+    batch_ok = shape.global_batch % max(dp, 1) == 0
+    long_ctx = not batch_ok                     # e.g. B=1 long-context decode
+    seq_axes = (m,) + d_axes if long_ctx else (m,)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    S = shape.seq_len
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        if name == "pos" or nd <= 1:
+            return P()
+        spec: list = [None] * nd
+        # stacked leaves are [L, B, ...]: batch at axis 1
+        if batch_ok and leaf.shape[1] == shape.global_batch:
+            spec[1] = d_axes
+        # find the cache-sequence dim (== max_seq) and shard it over model
+        for dim in range(2, nd):
+            n = int(np.prod([_AXIS_SIZES.get(a, 1) for a in seq_axes]))
+            if leaf.shape[dim] == S and leaf.shape[dim] % n == 0:
+                spec[dim] = seq_axes if len(seq_axes) > 1 else m
+                break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    specs = [leaf_spec(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_shardings(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

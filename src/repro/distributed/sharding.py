@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules (flax-linen style, dependency-free).
+
+Models annotate activations/params with *logical* axis names via ``shard``;
+a rules table (installed with ``axis_rules``) maps logical names to mesh
+axes. With no rules installed (CPU smoke tests), ``shard`` is the identity.
+
+Rules are built per (arch × shape-kind × mesh) by ``make_rules`` — e.g.
+``kv_heads`` maps to the ``model`` axis only when the head count divides the
+axis size, and decode-shape rules shard the KV-cache sequence dimension.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How a step function is distributed. ``None`` mesh == single process."""
+    mesh: Optional[Mesh] = None
+    data_axes: tuple[str, ...] = ("data",)      # pure-DP axes (incl. 'pod')
+    model_axis: Optional[str] = "model"         # TP axis
+    # beyond-paper knobs (see EXPERIMENTS.md §Perf)
+    seq_shard_cache: bool = True                # flash-decoding over sharded cache
+    expert_tp_over_data: bool = True            # weight-stationary EP + expert TP
+    moe_expert_axis: str = "model"              # "model" | "data" (§Perf H8:
+    # experts over data + expert-F TP over model — weights stay, tokens move)
+    fsdp_params: bool = True                    # shard params over data axes (train)
+    remat: bool = True
+
+    @property
+    def axis_sizes(self) -> dict[str, int]:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def data_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.axis_sizes.get(a, 1)
+        return n
+
+    def model_size(self) -> int:
+        return self.axis_sizes.get(self.model_axis, 1) if self.mesh else 1
+
+
+def current_rules() -> dict:
+    return getattr(_STATE, "rules", None) or {}
+
+
+@contextmanager
+def axis_rules(rules: dict):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], rules: Optional[dict] = None) -> P:
+    rules = current_rules() if rules is None else rules
+    out = []
+    for name in logical:
+        axes = rules.get(name) if name else None
+        out.append(axes if axes else None)
+    # trim trailing Nones for tidy specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x, *logical: Optional[str]):
+    """Annotate ``x`` with logical axes; identity when no rules installed."""
+    rules = current_rules()
+    if not rules:
+        return x
+    spec = logical_to_pspec(logical, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def make_rules(cfg, parallel: ParallelConfig, kind: str) -> dict:
+    """Logical→physical rules for an (arch, shape-kind) under ``parallel``.
+
+    Logical names used across the model zoo:
+      batch, seq (activations), heads, kv_heads, head_dim, embed, vocab,
+      ffn, experts, expert_ffn, cache_seq, cache_kv_heads, fsdp (param dim0)
+    """
+    if parallel.mesh is None:
+        return {}
+    d_axes = tuple(parallel.data_axes)
+    m = parallel.model_axis
+    msize = parallel.model_size()
+    kv_shardable = cfg.num_kv_heads % max(msize, 1) == 0 and not cfg.use_mla
+    rules: dict[str, tuple] = {
+        "batch": d_axes,
+        "heads": (m,),
+        "embed": None,
+        "vocab": (m,),
+        "ffn": (m,),
+        "experts": (m,),
+        "head_dim": None,
+        "act_embed": None,
+    }
+    if parallel.expert_tp_over_data:
+        rules["expert_ffn"] = d_axes  # within-expert TP over the data row
+    if kind in ("train", "prefill"):
+        # sequence-parallel residual stream between blocks
+        rules["seq"] = (m,)
+        rules["kv_heads"] = (m,) if kv_shardable else None
+        rules["cache_seq"] = None
+        rules["cache_kv_heads"] = (m,) if kv_shardable else None
+    else:  # decode
+        rules["seq"] = None
+        if kv_shardable and not parallel.seq_shard_cache:
+            rules["cache_kv_heads"] = (m,)
+            rules["cache_seq"] = None
+            rules["kv_heads"] = (m,)
+            rules["dec_heads"] = (m,)
+        else:
+            # flash-decoding layout: cache sequence over the model axis
+            # (GSPMD turns the softmax reductions into all-reduces);
+            # q heads replicated — decode projections are negligible FLOPs.
+            rules["cache_seq"] = (m,)
+            rules["cache_kv_heads"] = None
+            rules["kv_heads"] = None
+            rules["dec_heads"] = None
+            rules["heads"] = None
+            rules["ffn"] = (m,)
+            rules["vocab"] = (m,)
+        if cfg.attn_free or cfg.family == "hybrid":
+            # recurrent state: heads over model
+            rules["state_heads"] = (m,)
+    # batch==1 long-context: spread the cache over the data axes as well
+    rules["cache_seq_long"] = tuple(a for a in ((rules.get("cache_seq") or ()) + d_axes))
+    # FSDP storage for params (train only; serving re-materialises per layer)
+    rules["fsdp"] = d_axes if (parallel.fsdp_params and kind == "train") else None
+    return rules

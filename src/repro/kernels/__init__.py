@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Kernels (each: pl.pallas_call + explicit BlockSpec VMEM tiling):
+  flash_attention  — prefill online-softmax attention (TTFT hot spot)
+  decode_attention — split-K ragged-cache decode (decode/long-ctx hot spot)
+  grouped_matmul   — capacity-bucketed MoE expert GEMM
+  wkv6             — chunked RWKV6 recurrence (long_500k arch)
+
+``ops`` holds the jit'd dispatch wrappers; ``ref`` the pure-jnp oracles.
+Validated with interpret=True on CPU (tests/test_kernels.py sweeps).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,181 @@
+"""Pallas TPU decode-attention kernel (decode_32k / long_500k hot spot).
+
+Decode is HBM-bound KV streaming: one new token's q attends over a long
+cache. TPU-native split-K design:
+
+  * grid = (batch x kv_head, kv_splits); each split streams one
+    [BLOCK_K, hd] cache chunk HBM→VMEM and folds it into running
+    (m, l, acc) partial-softmax state held in VMEM scratch — the classic
+    split-K combine without materialising per-split partials in HBM;
+  * the q tile is tiny ([G, hd] — the GQA group of the kv head), so the
+    whole kernel is bandwidth-limited by design: bytes moved ≈ cache bytes,
+    the roofline floor for decode;
+  * per-sequence valid length masks the tail chunk via iota compare, so
+    ragged batches (continuous batching) need no cache compaction.
+
+VMEM: k,v chunks 2·256·128·2B = 128 KB + q/acc ≈ negligible — far under
+budget, leaving room for the pipeline's double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, block_k: int, num_splits: int,
+                ks_ref=None, vs_ref=None):
+    """One (bh, split) grid step. q_ref: [1, G, hd]; k/v_ref: [1, bk, hd].
+
+    ``ks_ref``/``vs_ref``: optional [1, bk] per-token dequant scales — the
+    int8-cache path (§Perf H3): the cache streams HBM→VMEM at 1 B/element
+    and is dequantised here, in VMEM, for free alongside the MXU feed.
+    """
+    sp = pl.program_id(1)
+
+    @pl.when(sp == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = sp * block_k
+    # skip chunks entirely past this sequence's valid length
+    @pl.when(k_start < length)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [G, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * ks_ref[0][:, None]                    # fused dequant
+            v = v * vs_ref[0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, bk]
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(sp == num_splits - 1)
+    def _fin():
+        o_ref[0, ...] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True):
+    """Single-token attention over a ragged KV cache.
+
+    q: [B, H, hd]; k_cache/v_cache: [B, S, KVH, hd]; lengths: [B] int32
+    (number of valid cached tokens per sequence, including any freshly
+    inserted current-token K/V). Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    lens = jnp.repeat(lengths.astype(jnp.int32), KVH)      # [B*KVH]
+
+    kernel = functools.partial(_dec_kernel, scale=scale, block_k=block_k,
+                               num_splits=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KVH, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, sp: (bh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda bh, sp: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, sp: (bh, sp, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, sp: (bh, sp, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, sp: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return out.reshape(B, H, hd)
+
+
+def decode_attention_int8(q, k_cache, v_cache, k_scale, v_scale, lengths, *,
+                          block_k: int = DEFAULT_BLOCK_K,
+                          interpret: bool = True):
+    """int8-cache decode attention (§Perf H3).
+
+    q: [B, H, hd] (fp); k/v_cache: [B, S, KVH, hd] int8 with per-(token,
+    kv-head) scales [B, S, KVH] fp32. The cache streams at 1 B/element —
+    halving the decode memory-roofline term — and is dequantised inside
+    the kernel while feeding the MXU. Returns [B, H, hd] in q.dtype.
+    """
+    import functools as _ft
+    B, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B * KVH, G, hd)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    ksr = k_scale.transpose(0, 2, 1).reshape(B * KVH, S)
+    vsr = v_scale.transpose(0, 2, 1).reshape(B * KVH, S)
+    lens = jnp.repeat(lengths.astype(jnp.int32), KVH)
+
+    def kernel(len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+               m_scr, l_scr, acc_scr):
+        _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                    acc_scr, scale=scale, block_k=block_k, num_splits=nk,
+                    ks_ref=ks_ref, vs_ref=vs_ref)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KVH, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, sp: (bh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda bh, sp: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, sp: (bh, sp, 0)),
+            pl.BlockSpec((1, block_k), lambda bh, sp: (bh, sp)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, sp: (bh, sp, 0)),
+            pl.BlockSpec((1, block_k), lambda bh, sp: (bh, sp)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, sp: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qr, kr, ksr, vr, vsr)
+    return out.reshape(B, H, hd)

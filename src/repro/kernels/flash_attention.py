@@ -1,0 +1,153 @@
+"""Pallas TPU flash-attention kernel (prefill hot spot).
+
+Prefill dominates TTFT — the latency term Heron trades against power — so
+this is the first kernel on the serving path. TPU-native design (not a CUDA
+port): the online-softmax tiling is laid out for the MXU/VMEM hierarchy:
+
+  * grid = (batch x kv_head, q_blocks, kv_blocks); the kv dimension is the
+    innermost (sequential) axis so each (b, h, qb) accumulates its running
+    (m, l, acc) in VMEM scratch across kv steps — no HBM round-trips for
+    the softmax state;
+  * q/k/v blocks are (BLOCK_Q x head_dim) / (BLOCK_K x head_dim) VMEM tiles
+    with BLOCK_Q = BLOCK_K = 128 (MXU-native 128x128 systolic tiles);
+  * GQA is handled by folding the q-head group into the q-block rows:
+    a [G*BLOCK_Q, hd] q tile shares one [BLOCK_K, hd] k/v tile, so kv HBM
+    traffic is amortised G-fold (the point of GQA);
+  * causal masking skips fully-masked kv blocks via ``pl.when`` on the
+    block index — ~2x fewer MXU flops at long sequence.
+
+VMEM budget at (G=4, block 128, hd=128), fp32 accumulators:
+  q (G·128·128·4) + k,v (2·128·128·4) + s (G·128·128·4) + acc (G·128·128·4)
+  ≈ 1.2 MB << 16 MB/core.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               num_kv_blocks: int, prefix_len: int):
+    """One (bh, qb, kb) grid step.
+
+    q_ref: [1, G*block_q, hd] — this q block's rows for every grouped head,
+    interleaved as (G, block_q). k_ref/v_ref: [1, block_k, hd].
+    Scratch m/l: [G*block_q, 1]; acc: [G*block_q, hd] — persist across kb.
+    """
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block skip: a kv block strictly after the q block contributes
+    # nothing (the bidirectional prefix only ever *adds* visibility for
+    # kv positions < prefix_len, which live in early blocks).
+    q_start = qb * block_q
+    k_start = kb * block_k
+    needed = jnp.logical_or(
+        jnp.logical_not(jnp.bool_(causal)),
+        jnp.logical_or(k_start <= q_start + block_q - 1,
+                       k_start < prefix_len))
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [G*bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G*bq, bk]
+        if causal:
+            gbq = s.shape[0]
+            rows = jax.lax.broadcasted_iota(jnp.int32, (gbq, block_k), 0)
+            q_pos = q_start + rows % block_q              # row -> q position
+            k_pos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (gbq, block_k), 1)
+            mask = jnp.logical_or(q_pos >= k_pos, k_pos < prefix_len)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                               # [G*bq, 1]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(kb == num_kv_blocks - 1)
+    def _fin():
+        o_ref[0, ...] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, prefix_len: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """Flash attention. q: [B, Sq, H, hd]; k/v: [B, Sk, KVH, hd] with
+    H % KVH == 0 (GQA). Returns [B, Sq, H, hd].
+
+    ``prefix_len`` marks a bidirectional prefix (PaliGemma-style): kv
+    positions < prefix_len stay visible to every q row under causal.
+    ``interpret=True`` executes on CPU (this container); pass False on TPU.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0, (Sq, block_q)
+    assert Sk % block_k == 0, (Sk, block_k)
+    scale = 1.0 / math.sqrt(hd)
+    nq = Sq // block_q
+    nk = Sk // block_k
+
+    # layout: fold (B, KVH) into the leading grid dim; per q block the G
+    # grouped heads are stacked into rows so one k/v tile serves them all.
+    qr = (q.reshape(B, nq, block_q, KVH, G, hd).transpose(0, 3, 1, 4, 2, 5)
+          .reshape(B * KVH, nq * G * block_q, hd))
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KVH, Sk, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KVH, Sk, hd)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, num_kv_blocks=nk, prefix_len=prefix_len)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KVH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G * block_q, hd), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qb, kb: (bh, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G * block_q, hd),
+                               lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, nq * G * block_q, hd),
+                                       q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    # undo the per-block head interleave
+    out = (out.reshape(B, KVH, nq, G, block_q, hd).transpose(0, 2, 4, 1, 3, 5)
+           .reshape(B, Sq, H, hd))
+    return out

@@ -1,0 +1,91 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op dispatches between the Pallas kernel (TPU target; ``interpret=True``
+executes it on this CPU container) and the pure-XLA fallback used by the
+model zoo when shapes don't tile (odd head_dim, tiny smoke shapes). The
+wrappers are the integration point the serving engine and models call; the
+oracles live in ``ref.py`` and the sweep tests in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.grouped_matmul import expert_matmul as _gmm_pallas
+from repro.kernels.wkv6 import wkv6 as _wkv6_pallas
+
+# hardware-aligned tiling requirements (MXU lane = 128)
+_FLASH_MIN_BLOCK = 16
+
+
+def _tileable(n: int, block: int) -> bool:
+    return n % block == 0 or (n < block and block % n == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "prefix_len",
+                                             "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, prefix_len: int = 0,
+                    use_pallas: bool = True, interpret: bool = True):
+    """[B,Sq,H,hd] x [B,Sk,KVH,hd]² -> [B,Sq,H,hd]."""
+    Sq, Sk, hd = q.shape[1], k.shape[1], q.shape[-1]
+    ok = (use_pallas and Sq % _FLASH_MIN_BLOCK == 0
+          and Sk % _FLASH_MIN_BLOCK == 0 and hd % 8 == 0)
+    if ok:
+        bq = min(128, Sq)
+        bk = min(128, Sk)
+        return _flash_pallas(q, k, v, causal=causal, prefix_len=prefix_len,
+                             block_q=bq, block_k=bk, interpret=interpret)
+    return ref.attention_ref(q, k, v, causal=causal, prefix_len=prefix_len)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, use_pallas: bool = True,
+                     interpret: bool = True):
+    """[B,H,hd] against ragged [B,S,KVH,hd] caches -> [B,H,hd]."""
+    S, hd = k_cache.shape[1], q.shape[-1]
+    ok = use_pallas and S % _FLASH_MIN_BLOCK == 0 and hd % 8 == 0
+    if ok:
+        bk = min(256, S)
+        return _decode_pallas(q, k_cache, v_cache, lengths, block_k=bk,
+                              interpret=interpret)
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def expert_matmul(xe, w, fill=None, *, use_pallas: bool = True,
+                  interpret: bool = True):
+    """Capacity-bucketed expert GEMM [E,C,D]x[E,D,F] -> [E,C,F]."""
+    E, C, D = xe.shape
+    F = w.shape[-1]
+    ok = (use_pallas and C % _FLASH_MIN_BLOCK == 0 and D % 128 == 0
+          and F % 128 == 0)
+    if ok:
+        bc = min(128, C)
+        bd = min(512, D)
+        bf = min(128, F)
+        return _gmm_pallas(xe, w, fill, block_c=bc, block_d=bd, block_f=bf,
+                           interpret=interpret)
+    y = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(xe.dtype)
+    if fill is not None:
+        row = jnp.arange(C)[None, :, None]
+        y = jnp.where(row < fill[:, None, None], y, 0).astype(xe.dtype)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret"))
+def wkv6(r, k, v, logw, u, state0, *, chunk: int = 64,
+         use_pallas: bool = True, interpret: bool = True):
+    """Chunked WKV6 recurrence -> (out fp32, state fp32)."""
+    S, hd = r.shape[1], r.shape[-1]
+    ok = use_pallas and S % min(chunk, S) == 0 and hd % 8 == 0
+    if ok:
+        return _wkv6_pallas(r, k, v, logw, u, state0,
+                            chunk=min(chunk, S), interpret=interpret)
+    return ref.wkv6_ref(r, k, v, logw, u, state0)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+Each function is the direct O(S²)/O(E·T) math with fp32 accumulation —
+slow but obviously correct. The kernels must match these across the
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, prefix_len: int = 0):
+    """q: [B,Sq,H,hd]; k/v: [B,Sk,KVH,hd] (GQA). Full S×S softmax in fp32."""
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if causal:
+        q_pos = jnp.arange(Sq)[:, None]
+        k_pos = jnp.arange(Sk)[None, :]
+        mask = (q_pos >= k_pos) | (k_pos < prefix_len)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B,H,hd]; caches: [B,S,KVH,hd]; lengths: [B] valid tokens.
+
+    One-token attention over the valid prefix of the cache.
+    """
+    B, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = (q.reshape(B, KVH, G, hd) / math.sqrt(hd)).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def grouped_matmul_ref(x, w, group_sizes):
+    """x: [T, D]; w: [E, D, F]; group_sizes: [E] with sum == T.
+
+    Rows of ``x`` are laid out group-contiguously (tokens of expert e are
+    rows offset[e] .. offset[e]+group_sizes[e]); row t is multiplied by its
+    group's weight matrix. Returns [T, F] in x.dtype (fp32 accumulation).
+    """
+    T, D = x.shape
+    E, _, F = w.shape
+    offsets = jnp.cumsum(group_sizes) - group_sizes
+    gid = jnp.sum(jnp.arange(T)[:, None] >= offsets[None, :], axis=1) - 1
+    gid = jnp.clip(gid, 0, E - 1)
+    wt = w[gid]                                    # [T, D, F]
+    y = jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                   wt.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, state0):
+    """Token-by-token WKV6 recurrence (the definitional form).
+
+    r/k/v/logw: [B,S,H,hd]; u: [H,hd]; state0: [B,H,hd,hd].
+        S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+        out_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    Returns (out [B,S,H,hd] fp32, state [B,H,hd,hd] fp32).
+    """
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, logw))
+    u = u.astype(f32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                     # [B,H,hd]
+        rk_u = jnp.einsum("bhd,bhd->bh", r_t * u[None], k_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S) + rk_u[..., None] * v_t
+        S = jnp.exp(w_t)[..., None] * S + jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, out = jax.lax.scan(step, state0.astype(f32), xs)
+    return jnp.moveaxis(out, 0, 1), state

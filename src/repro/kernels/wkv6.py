@@ -1,0 +1,116 @@
+"""Pallas TPU chunked-WKV6 kernel (RWKV6 recurrence — long_500k hot spot).
+
+rwkv6-1.6b is the arch that *runs* the long_500k cell, and its cost is the
+WKV recurrence. The token-by-token form is a length-S serial chain; the
+chunked linear-attention form turns it into MXU work:
+
+  intra-chunk:  s = (r·e^{c_prev}) (k·e^{-c})ᵀ  (strictly lower)  → 2 GEMMs
+  inter-chunk:  out += (r·e^{c_prev}) S_prev                      → 1 GEMM
+  state carry:  S ← e^{c_last} ⊙ S + (k·e^{c_last - c})ᵀ v        → 1 GEMM
+
+TPU-native layout: grid = (batch x head, num_chunks) with the chunk axis
+sequential — the [hd, hd] state lives in VMEM scratch across chunks (never
+round-trips to HBM), which is exactly the property that makes the decode
+path O(1) in sequence. Chunk = 64 tokens balances the O(C²) intra-chunk
+score tile against per-chunk GEMM efficiency; all tiles ([C, hd], [hd, hd],
+[C, C]) are ≤ 64·64·4B = 16 KB — trivially VMEM-resident.
+
+The per-token log-decay is assumed pre-clamped (rwkv6.py clamps to
+[-1.5, 0)), so exp(±cumsum) stays in fp32 range for C = 64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                 s_scr, *, num_chunks: int):
+    """One (bh, chunk) grid step. r/k/v/w_ref: [1, C, hd]; u/s0: per-bh."""
+    ch = pl.program_id(1)
+
+    @pl.when(ch == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # [C, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)          # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)          # [1, hd] bonus
+    C = r.shape[0]
+
+    c = jnp.cumsum(w, axis=0)                 # inclusive log-decay cumsum
+    c_prev = c - w
+    A = r * jnp.exp(c_prev)                   # decay-to-chunk-start queries
+    Bm = k * jnp.exp(-c)                      # inverse-decayed keys
+    s = jax.lax.dot_general(A, Bm, (((1,), (1,)), ((), ())))   # [C, C]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    s = jnp.where(rows > cols, s, 0.0)        # strictly causal (j < t)
+    intra = jax.lax.dot_general(s, v, (((1,), (0,)), ((), ())))
+    diag = jnp.sum(r * u * k, axis=-1, keepdims=True)          # bonus term
+    intra = intra + diag * v
+    inter = jax.lax.dot_general(A, s_scr[...], (((1,), (0,)), ((), ())))
+    o_ref[0, ...] = (intra + inter).astype(o_ref.dtype)
+
+    # state carry: S ← e^{c_last} ⊙ S + (k e^{c_last − c})ᵀ v
+    c_last = c[-1:, :]                        # [1, hd]
+    k_dec = k * jnp.exp(c_last - c)
+    s_scr[...] = (jnp.exp(c_last).T * s_scr[...] +
+                  jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ()))))
+
+    @pl.when(ch == num_chunks - 1)
+    def _fin():
+        sT_ref[0, ...] = s_scr[...]
+
+
+def wkv6(r, k, v, logw, u, state0, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = True):
+    """Chunked WKV6. r/k/v/logw: [B, S, H, hd]; u: [H, hd];
+    state0: [B, H, hd, hd]. Returns (out [B,S,H,hd] fp32, state fp32).
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nch = S // chunk
+
+    def fold(a):  # [B,S,H,hd] -> [B*H, S, hd]
+        return a.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    rr, kk, vv, ww = fold(r), fold(k), fold(v), fold(logw)
+    uu = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    s0 = state0.reshape(B * H, hd, hd)
+
+    kernel = functools.partial(_wkv6_kernel, num_chunks=nch)
+    out, state = pl.pallas_call(
+        kernel,
+        grid=(B * H, nch),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, 1, hd), lambda bh, ch: (bh, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, ch: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ch: (bh, ch, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, ch: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu, s0)
+
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return out, state.reshape(B, H, hd, hd)

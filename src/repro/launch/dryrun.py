@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device
+count on first init). For every assigned cell this script:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step (train_step / prefill / serve_step) against
+     ShapeDtypeStruct inputs with full in/out shardings — no allocation,
+  3. ``.compile()``s it (GSPMD partitioning must succeed — sharding
+     mismatches / unsupported collectives surface here),
+  4. records ``memory_analysis`` (fits-per-device proof),
+     ``cost_analysis`` (FLOPs / bytes) and the collective-bytes total
+     parsed from the optimized HLO — the §Roofline inputs.
+
+Artifacts land in artifacts/dryrun/<cell>.json; EXPERIMENTS.md §Dry-run
+and benchmarks/bench_roofline.py read them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--all] [--fsdp] [--out artifacts/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cells, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.param_sharding import (batch_specs, cache_specs_tree,
+                                              param_specs, to_shardings)
+from repro.distributed.sharding import ParallelConfig, axis_rules, make_rules
+from repro.launch.mesh import make_parallel
+from repro.models.api import build
+from repro.training import AdamW, make_train_step
+
+# ----------------------------------------------------------------- HLO parse
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+_SHAPE_RE = re.compile(r"\b(bf16|f32|f16|f64|s32|s8|u8|u32|s64|u16|s16|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "s64": 8, "u16": 2, "s16": 2, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Returns {op_kind: bytes, ..., 'total': bytes}. Sizes are per-device
+    (post-SPMD shapes); *-start ops are counted once (-done is shapeless).
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        kind = m.group(1)
+        # operand shapes: everything after the op name's '(' — use the
+        # argument list region to avoid counting the (tuple) result shape.
+        paren = line.find("(", m.end())
+        region = line[paren:line.find(")", paren) + 1] if paren != -1 else line
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(region))
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ----------------------------------------------------------------- lowering
+def _specs_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp: bool | None = None, num_microbatches: int = 4,
+               seq_shard_cache: bool = True, expert_tp_over_data: bool = True,
+               remat: bool = True, donate: bool = True,
+               flash_threshold: int | None = None,
+               kv_cache_dtype: str | None = None,
+               moe_expert_axis: str = "model",
+               ssd_chunk: int | None = None):
+    """Lower one (arch, shape, mesh) cell. Returns (lowered, meta)."""
+    if flash_threshold is not None:
+        from repro.models import layers as Lyr
+        Lyr.set_flash_threshold(flash_threshold)
+    if ssd_chunk is not None:
+        from repro.models import mamba2 as M2
+        M2.set_ssd_chunk(ssd_chunk)
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    parallel = make_parallel(multi_pod=multi_pod,
+                             seq_shard_cache=seq_shard_cache,
+                             expert_tp_over_data=expert_tp_over_data,
+                             moe_expert_axis=moe_expert_axis,
+                             remat=remat)
+    mesh = parallel.mesh
+    model = build(cfg, parallel)
+    kind = shape.kind
+    use_fsdp = (kind == "train") if fsdp is None else fsdp
+
+    rules = make_rules(cfg, parallel, kind)
+    dp = parallel.data_size()
+    if kind == "decode" and shape.global_batch % dp != 0:
+        # long-context (B=1): batch cannot shard — spread the cache
+        # sequence over model+data axes instead (mesh-wide flash-decoding)
+        rules["cache_seq"] = rules["cache_seq_long"]
+        rules["batch"] = None
+
+    p_shapes = model.param_specs()
+    p_spec = param_specs(cfg, parallel, p_shapes, fsdp=use_fsdp)
+    p_shard = to_shardings(mesh, p_spec)
+    in_specs = model.input_specs(shape)
+    bspec_fn = batch_specs(cfg, parallel, shape)
+    in_shard = {k: NamedSharding(mesh, bspec_fn(v.shape))
+                for k, v in in_specs.items()}
+
+    with mesh, axis_rules(rules):
+        if kind == "train":
+            opt = AdamW()
+            step = make_train_step(model.loss_fn, opt,
+                                   num_microbatches=num_microbatches,
+                                   grad_spec=p_spec)
+            o_shapes = jax.eval_shape(opt.init, p_shapes)
+            # optimizer state mirrors param sharding (mu/nu per leaf)
+            o_spec = type(o_shapes)(step=P(),
+                                    mu=param_specs(cfg, parallel,
+                                                   o_shapes.mu, fsdp=use_fsdp),
+                                    nu=param_specs(cfg, parallel,
+                                                   o_shapes.nu, fsdp=use_fsdp))
+            o_shard = to_shardings(mesh, o_spec)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, in_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(p_shapes, o_shapes, in_specs)
+        elif kind == "prefill":
+            fn = jax.jit(model.prefill_fn,
+                         in_shardings=(p_shard, in_shard),
+                         out_shardings=None)
+            lowered = fn.lower(p_shapes, in_specs)
+        else:  # decode / serve_step
+            c_shapes = model.cache_specs(shape, kv_dtype=kv_cache_dtype)
+            c_spec = cache_specs_tree(cfg, parallel, c_shapes, shape)
+            c_shard = to_shardings(mesh, c_spec)
+            fn = jax.jit(model.decode_fn,
+                         in_shardings=(p_shard, in_shard, c_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(p_shapes, in_specs, c_shapes)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": kind,
+            "multi_pod": multi_pod, "fsdp": use_fsdp,
+            "mesh": dict(zip(mesh.axis_names,
+                             [int(s) for s in mesh.devices.shape])),
+            "num_microbatches": num_microbatches if kind == "train" else None,
+            "flash_threshold": flash_threshold,
+            "kv_cache_dtype": kv_cache_dtype}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             **kw) -> dict:
+    """Lower + compile one cell; return the roofline-input report."""
+    t0 = time.perf_counter()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod, **kw)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    report = dict(meta)
+    report["ok"] = True
+    report["seconds_lower"] = round(t_lower, 2)
+    report["seconds_compile"] = round(t_compile, 2)
+    try:
+        ma = compiled.memory_analysis()
+        report["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:                      # CPU backend may not support
+        report["memory_analysis"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        report["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+    except Exception as e:
+        report["cost_analysis"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        report["collectives"] = collective_bytes(hlo)
+        report["hlo_bytes"] = len(hlo)
+        # trip-count-aware re-analysis: XLA's cost_analysis counts while
+        # bodies once; this walks the call graph with loop trip counts
+        # (repro.analysis.hlo) — the numbers §Roofline actually uses.
+        from repro.analysis.hlo import analyze as hlo_analyze
+        report["hlo_cost"] = hlo_analyze(hlo).as_dict()
+    except Exception as e:
+        report["collectives"] = {"error": str(e)}
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--no-seq-shard-cache", dest="seq_shard_cache",
+                    action="store_false")
+    ap.add_argument("--no-expert-tp", dest="expert_tp", action="store_false")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--flash-threshold", type=int, default=None,
+                    help="one-shot->chunked attention switch (§Perf H1)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache for decode cells (§Perf H3)")
+    ap.add_argument("--moe-expert-axis", choices=("model", "data"),
+                    default="model", help="2-level EP layout (§Perf H8)")
+    ap.add_argument("--ssd-chunk", type=int, default=None,
+                    help="Mamba2/SSD chunk length (§Perf H9)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if not skip]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            name = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+            if args.tag:
+                name += f"__{args.tag}"
+            path = os.path.join(args.out, name + ".json")
+            try:
+                rep = run_cell(arch, shape, multi_pod=mp, fsdp=args.fsdp,
+                               num_microbatches=args.microbatches,
+                               seq_shard_cache=args.seq_shard_cache,
+                               expert_tp_over_data=args.expert_tp,
+                               flash_threshold=args.flash_threshold,
+                               kv_cache_dtype="int8" if args.kv_int8 else None,
+                               moe_expert_axis=args.moe_expert_axis,
+                               ssd_chunk=args.ssd_chunk)
+                coll = rep.get("collectives", {}).get("total", 0)
+                print(f"[dryrun] OK  {name}: "
+                      f"compile={rep['seconds_compile']}s "
+                      f"flops={rep['cost_analysis'].get('flops', 0):.3e} "
+                      f"coll={coll/1e6:.1f}MB")
+            except Exception as e:
+                failures += 1
+                rep = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "ok": False, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                print(f"[dryrun] FAIL {name}: {e}")
+            with open(path, "w") as f:
+                json.dump(rep, f, indent=1)
+            jax.clear_caches()        # keep the 64-cell sweep's RSS bounded
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

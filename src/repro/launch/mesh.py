@@ -1,0 +1,31 @@
+"""Production meshes (assignment §MULTI-POD DRY-RUN).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_parallel(*, multi_pod: bool = False, **overrides) -> ParallelConfig:
+    """ParallelConfig over the production mesh. ``pod`` is a pure-DP axis."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return ParallelConfig(mesh=mesh, data_axes=data_axes, **overrides)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for tests on --xla_force_host_platform_device_count=4+."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,116 @@
+"""End-to-end training driver: data → train_step → checkpoint → restart.
+
+Runs REAL steps on whatever devices exist (CPU here: use a reduced config;
+TPU fleet: the full config under the production mesh). The same loop is
+what examples/train_100m.py drives for a few hundred steps.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --reduce --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.configs.base import reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models.api import build
+from repro.training import AdamW, default_schedule, make_train_step
+
+
+def train_loop(*, arch: str, steps: int, global_batch: int, seq_len: int,
+               reduce_cfg: bool = True, lr: float = 3e-3,
+               num_microbatches: int = 1, compress_grads: bool = False,
+               ckpt_dir: str | None = None, ckpt_every: int = 50,
+               resume: bool = False, log_every: int = 10,
+               d_model: int | None = None, num_layers: int | None = None,
+               seed: int = 0) -> dict:
+    cfg = get_config(arch)
+    if reduce_cfg:
+        over = {}
+        if d_model:
+            over.update(d_model=d_model, head_dim=None,
+                        d_ff=int(d_model * 8 // 3 // 64 * 64) or 128)
+        if num_layers:
+            over["num_layers"] = num_layers
+        cfg = reduced(cfg, **over) if over else smoke_config(arch)
+    model = build(cfg)
+    opt = AdamW(lr=lr)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                       global_batch=global_batch, seed=seed)
+    step_fn = jax.jit(make_train_step(
+        model.loss_fn, opt, num_microbatches=num_microbatches,
+        compress_grads=compress_grads,
+        schedule=default_schedule(steps, warmup=max(steps // 20, 1))))
+
+    params = model.init_params(jax.random.key(seed))
+    state = opt.init(params)
+    start = 0
+    store = CheckpointStore(ckpt_dir) if ckpt_dir else None
+    if store and resume and store.latest_step() is not None:
+        restored, extra = store.restore({"params": params, "opt": state})
+        params, state = restored["params"], restored["opt"]
+        start = int(extra.get("data_step", 0))
+        print(f"[train] resumed from step {start}")
+
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(start, steps):
+        params, state, m = step_fn(params, state, data.batch(i))
+        losses.append(float(m["loss"]))
+        if log_every and (i + 1) % log_every == 0:
+            dt = time.perf_counter() - t0
+            print(f"[train] step {i+1}/{steps} loss={losses[-1]:.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"({dt/ max(len(losses),1):.2f}s/step)")
+        if store and (i + 1) % ckpt_every == 0:
+            store.save_async(i + 1, {"params": params, "opt": state},
+                             extra={"data_step": i + 1,
+                                    "loss": losses[-1]})
+    if store:
+        store.wait()
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "first_loss": losses[0] if losses else None,
+            "params": n_params, "steps_run": len(losses)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (TPU fleet; do not use on CPU)")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override reduced width (e.g. 512 for ~100M)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+    out = train_loop(arch=args.arch, steps=args.steps,
+                     global_batch=args.batch, seq_len=args.seq,
+                     reduce_cfg=not args.full, lr=args.lr,
+                     num_microbatches=args.microbatches,
+                     compress_grads=args.compress_grads,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     resume=args.resume,
+                     d_model=args.d_model, num_layers=args.layers)
+    print(f"[train] done: {out['steps_run']} steps, "
+          f"{out['params']/1e6:.1f}M params, "
+          f"loss {out['first_loss']:.4f} -> {out['final_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

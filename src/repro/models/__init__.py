@@ -1,0 +1,3 @@
+from repro.models.api import Model, build
+
+__all__ = ["Model", "build"]

@@ -1,0 +1,80 @@
+"""Public model API: one ``Model`` bundle per architecture.
+
+``build(cfg, parallel)`` returns a bundle exposing:
+
+    init_params(key)                      -> params pytree
+    loss_fn(params, batch)                -> scalar
+    prefill_fn(params, inputs)            -> (logits, cache)
+    decode_fn(params, inputs, cache)      -> (logits, cache)
+    input_specs(shape)                    -> dict of ShapeDtypeStruct
+    cache_specs(shape)                    -> cache pytree of ShapeDtypeStruct
+    param_specs()                         -> params pytree of ShapeDtypeStruct
+
+``input_specs``/``cache_specs``/``param_specs`` never allocate — they are
+what the multi-pod dry-run lowers against. Modality frontends ([audio]/
+[vlm]) are STUBS: ``input_specs`` carries precomputed frame/patch
+embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ParallelConfig
+from repro.models import transformer as T
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    parallel: Optional[ParallelConfig]
+    init_params: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+
+    # ---------------- shape-only views (dry-run) ----------------
+    def param_specs(self):
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f = lambda sh, dt=jnp.int32: jax.ShapeDtypeStruct(sh, dt)
+        emb = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            specs = {"tokens": f((B, S)), "labels": f((B, S))}
+            if cfg.family == "encdec":
+                specs["frames"] = f((B, cfg.num_prefix_embeddings, cfg.d_model), emb)
+            if cfg.family == "vlm":
+                specs["patches"] = f((B, cfg.num_prefix_embeddings, cfg.d_model), emb)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": f((B, S))}
+            if cfg.family == "encdec":
+                specs["frames"] = f((B, cfg.num_prefix_embeddings, cfg.d_model), emb)
+            if cfg.family == "vlm":
+                specs["patches"] = f((B, cfg.num_prefix_embeddings, cfg.d_model), emb)
+            return specs
+        return {"token": f((B,))}  # decode
+
+    def cache_specs(self, shape: ShapeConfig, kv_dtype: Optional[str] = None):
+        return jax.eval_shape(
+            functools.partial(T.make_decode_cache, self.cfg, shape.global_batch,
+                              shape.seq_len, dtype=kv_dtype))
+
+
+def build(cfg: ModelConfig, parallel: Optional[ParallelConfig] = None) -> Model:
+    return Model(
+        cfg=cfg,
+        parallel=parallel,
+        init_params=functools.partial(T.init_params, cfg),
+        loss_fn=functools.partial(T.loss_fn, cfg, parallel),
+        prefill_fn=functools.partial(T.prefill_fn, cfg, parallel),
+        decode_fn=functools.partial(T.decode_fn, cfg, parallel),
+    )

@@ -1,0 +1,380 @@
+"""Shared transformer building blocks (pure-functional JAX).
+
+Conventions:
+  * params are nested dicts of jnp arrays; stacked layers carry a leading
+    ``L`` dimension and are consumed with ``lax.scan``.
+  * activations/params are annotated with *logical* axes via
+    ``repro.distributed.shard`` — identity unless rules are installed.
+  * softmax/norm accumulate in fp32 regardless of the param dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import current_rules, shard
+
+# attention falls back from one-shot to KV-chunked (flash-style) above this.
+# §Perf: the one-shot path materialises [B,H,Sq,Sk] score tensors, which
+# GSPMD cannot reshard across the seq<->heads transition (it falls back to
+# full replication) — lowering the threshold is hillclimb H1.
+FLASH_SEQ_THRESHOLD = 8192
+KV_CHUNK = 512
+
+
+def set_flash_threshold(n: int) -> None:
+    """Tune the one-shot -> chunked attention switchover (dry-run knob)."""
+    global FLASH_SEQ_THRESHOLD
+    FLASH_SEQ_THRESHOLD = n
+
+
+def _norm_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = shape[0] if fan_in is None else fan_in
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_params(key, dim, dtype, num_layers=None):
+    shape = (dim,) if num_layers is None else (num_layers, dim)
+    return {"scale": _norm_init(key, shape, dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_table(positions, head_dim: int, theta: float):
+    """positions: int array [...]; returns (cos, sin) of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., S, H, D]; cos/sin: [..., S, D/2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def attention_params(key, cfg, num_layers=None):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KVH = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    L = () if num_layers is None else (num_layers,)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], (*L, d, H * hd), dt, d),
+        "wk": dense_init(ks[1], (*L, d, KVH * hd), dt, d),
+        "wv": dense_init(ks[2], (*L, d, KVH * hd), dt, d),
+        "wo": dense_init(ks[3], (*L, H * hd, d), dt, H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = _norm_init(ks[4], (*L, hd), dt)
+        p["k_norm"] = _norm_init(ks[5], (*L, hd), dt)
+    return p
+
+
+def _qk_normalize(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _causal_mask(q_pos, k_pos, prefix_len: int = 0):
+    """True where attention is allowed. prefix positions attend bidirectionally."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if prefix_len:
+        m = jnp.logical_or(m, (k_pos < prefix_len)[..., None, :])
+    return m
+
+
+def multihead_attention(q, k, v, *, causal: bool, q_offset=0, prefix_len: int = 0):
+    """q: [B,Sq,H,hd]; k/v: [B,Sk,KVH,hd]. One-shot (S^2) path for short seqs."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        k_pos = jnp.arange(k.shape[1])
+        mask = _causal_mask(q_pos, k_pos, prefix_len)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def flash_attention_xla(q, k, v, *, causal: bool, q_offset=0, prefix_len: int = 0,
+                        kv_chunk: int = KV_CHUNK):
+    """KV-chunked online-softmax attention (no S×S materialisation).
+
+    Pure-XLA analogue of the Pallas kernel in ``repro.kernels.flash_attention``
+    — used for shapes too long for the one-shot path. Differentiable.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                       # may differ from hd (MLA: 192/128)
+    G = H // KVH
+    while kv_chunk > 1 and Sk % kv_chunk:  # halve until it divides Sk
+        kv_chunk //= 2
+    nchunk = Sk // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.reshape(B, Sq, KVH, G, hd) * scale).astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    kc = jnp.moveaxis(k.reshape(B, nchunk, kv_chunk, KVH, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nchunk, kv_chunk, KVH, vd), 1, 0)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        k_i, v_i, idx = chunk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_i.astype(jnp.float32))
+        if causal:
+            k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+            mask = _causal_mask(q_pos, k_pos, prefix_len)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    vd = v.shape[-1]
+    m0 = jnp.full((B, KVH, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KVH, G, Sq, vd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(nchunk)))
+    o = acc / l[..., None]
+    o = jnp.moveaxis(o, -2, 1).reshape(B, Sq, H, vd)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, k_new, v_new, pos):
+    """Single-token attention against a [B,S,KVH,hd] cache.
+
+    ``pos``: [B] int32 — number of valid cached tokens per sequence; the new
+    token's K/V participate via explicit concat-free accumulation. Softmax
+    reductions over a sharded cache-sequence dim lower to all-reduces
+    (flash-decoding across the mesh).
+    """
+    B, _, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.reshape(B, KVH, G, hd) * scale).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg, k_new.astype(jnp.float32))
+    m = jnp.maximum(s.max(axis=-1), s_new)
+    p = jnp.exp(s - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    l = p.sum(axis=-1) + p_new
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    o = o + p_new[..., None] * v_new.astype(jnp.float32)[:, :, None, :]
+    o = (o / l[..., None]).reshape(B, 1, H, hd)
+    return o.astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, q_offset=0, prefix_len=0):
+    if q.shape[1] <= FLASH_SEQ_THRESHOLD and k.shape[1] <= FLASH_SEQ_THRESHOLD:
+        return multihead_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                   prefix_len=prefix_len)
+    return flash_attention_xla(q, k, v, causal=causal, q_offset=q_offset,
+                               prefix_len=prefix_len)
+
+
+def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
+                    cache=None, pos=None, cross_kv=None, qkv_delta=None):
+    """Full attention sub-block: projections + rope + attend (+ cache update).
+
+    Returns (out, new_cache). ``cache`` is a dict(k=[B,S,KVH,hd], v=...) for
+    decode; ``cross_kv`` short-circuits K/V to precomputed encoder K/V;
+    ``qkv_delta`` adds (dq, dk, dv) [B,S,*] post-projection (zamba2 LoRA).
+    """
+    hd = cfg.resolved_head_dim
+    H, KVH = cfg.num_heads, cfg.num_kv_heads
+    B, Sq, _ = x.shape
+    decode = cache is not None and Sq == 1
+
+    q_p, k_p, v_p = x @ p["wq"], None, None
+    if cross_kv is None:
+        k_p = x @ p["wk"]
+        v_p = x @ p["wv"]
+    if qkv_delta is not None:
+        dq, dk, dv = qkv_delta
+        q_p = q_p + dq.astype(q_p.dtype)
+        k_p = k_p + dk.astype(k_p.dtype)
+        v_p = v_p + dv.astype(v_p.dtype)
+    q = shard(q_p.reshape(B, Sq, H, hd), "batch", None, "heads", None)
+    if cross_kv is None:
+        k = k_p.reshape(B, Sq, KVH, hd)
+        v = v_p.reshape(B, Sq, KVH, hd)
+        # (§Perf H6, REFUTED: repeating KV heads to H when TP > KVH was
+        # predicted to recover head sharding of the score tensors, but it
+        # added 35 GB of collective-permute resharding — see EXPERIMENTS.md)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = _qk_normalize(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = _qk_normalize(k, p["k_norm"], cfg.norm_eps)
+
+    use_rope = cross_kv is None and not (cfg.family == "encdec" and causal is False)
+    if use_rope:
+        cos, sin = rope_table(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        if cross_kv is None:
+            k = apply_rope(k, cos, sin)
+
+    new_cache = cache
+    if decode:
+        if cross_kv is not None:
+            o = attend_cross_decode(q, k, v, cfg)
+        elif "k_scale" in cache:
+            # int8 cache (§Perf H3): dequantize for the attention math (the
+            # Pallas decode kernel fuses this into the HBM->VMEM stream on
+            # TPU), re-quantize the new token on insert.
+            ks_ = shard(cache["k_scale"], "batch", "cache_seq", None)
+            vs_ = shard(cache["v_scale"], "batch", "cache_seq", None)
+            kc = shard(cache["k"], "batch", "cache_seq", "cache_kv_heads", None)
+            vc = shard(cache["v"], "batch", "cache_seq", "cache_kv_heads", None)
+            kd = kc.astype(jnp.float32) * ks_[..., None]
+            vd = vc.astype(jnp.float32) * vs_[..., None]
+            o = decode_attention(q, kd.astype(q.dtype), vd.astype(q.dtype),
+                                 k[:, 0], v[:, 0], pos)
+            kq, ksc = quantize_kv(k[:, 0])
+            vq, vsc = quantize_kv(v[:, 0])
+            new_cache = {
+                "k": _cache_insert(kc, kq, pos),
+                "k_scale": _cache_insert(ks_, ksc, pos),
+                "v": _cache_insert(vc, vq, pos),
+                "v_scale": _cache_insert(vs_, vsc, pos)}
+        else:
+            kc = shard(cache["k"], "batch", "cache_seq", "cache_kv_heads", None)
+            vc = shard(cache["v"], "batch", "cache_seq", "cache_kv_heads", None)
+            o = decode_attention(q, kc, vc, k[:, 0], v[:, 0], pos)
+            kc = _cache_insert(kc, k[:, 0], pos)
+            vc = _cache_insert(vc, v[:, 0], pos)
+            new_cache = {"k": shard(kc, "batch", "cache_seq", "cache_kv_heads", None),
+                         "v": shard(vc, "batch", "cache_seq", "cache_kv_heads", None)}
+    else:
+        o = attend(q, k, v, causal=causal, prefix_len=prefix_len)
+        if cache is not None:  # prefill writes the cache
+            new_cache = {"k": k, "v": v}
+    o = o.reshape(B, Sq, H * hd)
+    out = o @ p["wo"]
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def attend_cross_decode(q, k, v, cfg):
+    B, _, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = (q.reshape(B, KVH, G, hd) / math.sqrt(hd)).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _cache_insert(cache, new, pos):
+    """cache: [B,S,...]; new: [B,...]; pos: [B] — per-sequence scatter."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(new.astype(cache.dtype))
+
+
+def quantize_kv(x):
+    """Per-(batch, kv-head) absmax int8 quantization of one K or V token.
+
+    x: [B, KVH, hd] -> (q int8 [B,KVH,hd], scale f32 [B,KVH]).
+    """
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(x32).max(axis=-1), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_params(key, cfg, num_layers=None, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    L = () if num_layers is None else (num_layers,)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_gate": dense_init(ks[0], (*L, d, f), dt, d),
+        "w_up": dense_init(ks[1], (*L, d, f), dt, d),
+        "w_down": dense_init(ks[2], (*L, f, d), dt, f),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", None, "ffn")
+    return shard(h @ p["w_down"], "batch", "seq", None)
+
+
+# ------------------------------------------------------------ embeddings
+def embedding_params(key, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    p = {"embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt, cfg.d_model)
+    return p
+
+
+def embed(p, tokens, cfg):
+    e = shard(p["embed"], "vocab", None)
+    x = jnp.take(e, tokens, axis=0)
+    if cfg.family == "vlm":  # gemma normalisation
+        x = x * math.sqrt(cfg.d_model)
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def logits(p, x, cfg):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    out = x @ w
+    return shard(out, "batch", None, "vocab")
+
+
+def cross_entropy(logit, labels, mask=None):
+    """Vocab-parallel-safe CE (§Perf H7).
+
+    ``take_along_axis`` over a vocab-sharded logit forces GSPMD to gather
+    the full fp32 logits (8.6 GB/microbatch on llama3-8b/train_4k). The
+    one-hot multiply-reduce keeps every op elementwise/local in the vocab
+    dim; only the reduced [B, S] tensors cross shards.
+    """
+    logit = logit.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logit, axis=-1)
+    onehot = jax.nn.one_hot(labels, logit.shape[-1], dtype=logit.dtype)
+    gold = jnp.sum(logit * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

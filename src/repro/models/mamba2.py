@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) block — used by the zamba2-7b hybrid backbone.
+
+Per head ``h`` with scalar decay, state ``S`` in R^{P x N} (P=head_dim,
+N=d_state):
+    a_t = exp(-dt_t * A_h)                      (dt_t = softplus(raw), A_h > 0)
+    S_t = a_t S_{t-1} + (dt_t x_t) B_t^T
+    y_t = S_t C_t + D_h x_t
+
+Train/prefill use the chunked SSD form (two matmuls per chunk + scanned
+state carry); decode is the O(1) recurrent update. The causal depthwise
+conv (width 4) over x/B/C carries its last ``width-1`` inputs as decode
+state. Per-token log-decay is clamped to LOG_A_MIN so the intra-chunk
+exp(-cumsum) stays in fp32 range (see rwkv6.py for the same reasoning).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, rmsnorm
+
+CHUNK = 32
+LOG_A_MIN = -1.5
+
+
+def set_ssd_chunk(n: int) -> None:
+    """Tune the SSD chunk (§Perf H9): the inter-chunk state ([B,H,P,N] per
+    layer) round-trips once per chunk, so state traffic scales with S/chunk
+    while the intra-chunk O(C²) tile stays VMEM-sized well past C=128."""
+    global CHUNK
+    CHUNK = n
+
+
+def mamba2_params(key, cfg, num_layers=None):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 6)
+    L = () if num_layers is None else (num_layers,)
+    dt = jnp.dtype(cfg.dtype)
+    conv_dim = d_in + 2 * N
+    return {
+        # in_proj -> [z (gate, d_in), xBC (conv stream), dt (H)]
+        "w_in": dense_init(ks[0], (*L, d, 2 * d_in + 2 * N + H), dt, d),
+        "conv_w": dense_init(ks[1], (*L, W, conv_dim), dt, W),
+        "conv_b": jnp.zeros((*L, conv_dim), dt),
+        "A_log": jnp.zeros((*L, H), jnp.float32),          # A = exp(A_log) > 0
+        "dt_bias": jnp.zeros((*L, H), jnp.float32),
+        "D": jnp.ones((*L, H), jnp.float32),
+        "ssm_norm": jnp.ones((*L, d_in), dt),
+        "w_out": dense_init(ks[2], (*L, d_in, d), dt, d_in),
+        "ln": jnp.ones((*L, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, conv_state):
+    """Depthwise causal conv. x: [B,S,C]; w: [W,C]; conv_state: [B,W-1,C]."""
+    W = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else conv_state
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def ssd_chunked(x, dt_v, Bm, Cm, A, state0, chunk: int = CHUNK):
+    """Chunked SSD scan.
+
+    x: [B,S,H,P]; dt_v: [B,S,H]; Bm/Cm: [B,S,N]; A: [H]; state0: [B,H,P,N].
+    Returns (y [B,S,H,P], state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, f"S={S} % chunk={chunk}"
+    n = S // chunk
+    f32 = jnp.float32
+    loga = jnp.clip(-dt_v.astype(f32) * A[None, None].astype(f32), LOG_A_MIN, 0.0)
+    xd = x.astype(f32) * dt_v.astype(f32)[..., None]            # dt-weighted input
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(Bsz, n, chunk, *a.shape[2:]), 1, 0)
+
+    xc, lc, bc, cc = map(to_chunks, (xd, loga, Bm.astype(f32), Cm.astype(f32)))
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32))                # inclusive causal
+
+    def body(S0, xs):
+        x_i, l_i, b_i, c_i = xs          # [B,C,H,P], [B,C,H], [B,C,N], [B,C,N]
+        cum = jnp.cumsum(l_i, axis=1)    # [B,C,H] inclusive
+        # intra-chunk: y_t += sum_{j<=t} exp(cum_t - cum_j) (C_t.B_j) xd_j
+        gram = jnp.einsum("btn,bjn->btj", c_i, b_i)              # [B,C,C]
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # [B,C,C,H]
+        s = gram[..., None] * dec * tri[None, :, :, None]
+        intra = jnp.einsum("btjh,bjhp->bthp", s, x_i)
+        # inter-chunk: y_t += exp(cum_t) C_t . S0
+        inter = jnp.einsum("bth,bhpn,btn->bthp", jnp.exp(cum), S0, c_i)
+        # state: S1 = exp(cum_last) S0 + sum_j exp(cum_last - cum_j) xd_j b_j^T
+        last = cum[:, -1:, :]                                    # [B,1,H]
+        kdec = jnp.exp(last - cum)                               # [B,C,H]
+        S1 = jnp.exp(last[:, 0])[..., None, None] * S0 + jnp.einsum(
+            "bjh,bjhp,bjn->bhpn", kdec, x_i, b_i)
+        return S1, intra + inter
+
+    state, y = lax.scan(body, state0.astype(f32), (xc, lc, bc, cc))
+    y = jnp.moveaxis(y, 0, 1).reshape(Bsz, S, H, P)
+    return y, state
+
+
+def ssd_decode(x, dt_v, Bm, Cm, A, state):
+    """One-token SSD update. x: [B,H,P]; dt_v: [B,H]; Bm/Cm: [B,N]."""
+    f32 = jnp.float32
+    loga = jnp.clip(-dt_v.astype(f32) * A[None].astype(f32), LOG_A_MIN, 0.0)
+    xd = x.astype(f32) * dt_v.astype(f32)[..., None]
+    new_state = jnp.exp(loga)[..., None, None] * state + jnp.einsum(
+        "bhp,bn->bhpn", xd, Bm.astype(f32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(f32))
+    return y, new_state
+
+
+def mamba2_state_init(cfg, batch: int, num_layers: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    N, P, W = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv_width
+    H = d_in // P
+    return {
+        "ssm": jnp.zeros((num_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((num_layers, batch, W - 1, d_in + 2 * N), jnp.float32),
+    }
+
+
+def mamba2_block(cfg, p, x, state_slice):
+    """Pre-norm Mamba2 block. x: [B,S,D]; state_slice: {'ssm','conv'} per layer."""
+    B, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    H = d_in // P
+    h = rmsnorm({"scale": p["ln"]}, x, cfg.norm_eps)
+    proj = h @ p["w_in"]
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state_slice["conv"])
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = jnp.exp(p["A_log"])
+    xs = shard(xs.reshape(B, S, H, P), "batch", None, "state_heads", None)
+    if S == 1:
+        y, new_ssm = ssd_decode(xs[:, 0], dt_v[:, 0], Bm[:, 0], Cm[:, 0], A,
+                                state_slice["ssm"])
+        y = y[:, None]
+    else:
+        chunk = CHUNK if S % CHUNK == 0 else (8 if S % 8 == 0 else 1)
+        y, new_ssm = ssd_chunked(xs, dt_v, Bm, Cm, A, state_slice["ssm"], chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm({"scale": p["ssm_norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["w_out"]
+    return x + shard(out, "batch", "seq", None), {
+        "ssm": new_ssm, "conv": new_conv.astype(jnp.float32)}

@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill/train use the *expanded* form (latent → per-head K/V, flash path);
+decode uses the *absorbed* form: scores are computed directly against the
+compressed latent cache (kv_lora + rope dims per token), so the decode
+memory term streams ~576 B/token instead of 128 heads × 256 dims.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+from repro.models.layers import (
+    dense_init, rmsnorm, rope_table, apply_rope, attend, _cache_insert,
+)
+
+
+def mla_params(key, cfg, num_layers=None):
+    d = cfg.d_model
+    H = cfg.num_heads
+    nope, rope_d, v_hd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qk_hd = nope + rope_d
+    ks = jax.random.split(key, 9)
+    L = () if num_layers is None else (num_layers,)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_dq": dense_init(ks[0], (*L, d, cfg.q_lora_rank), dt, d),
+        "q_ln": jnp.ones((*L, cfg.q_lora_rank), dt),
+        "w_uq": dense_init(ks[1], (*L, cfg.q_lora_rank, H * qk_hd), dt, cfg.q_lora_rank),
+        "w_dkv": dense_init(ks[2], (*L, d, cfg.kv_lora_rank), dt, d),
+        "kv_ln": jnp.ones((*L, cfg.kv_lora_rank), dt),
+        "w_kr": dense_init(ks[3], (*L, d, rope_d), dt, d),
+        "w_uk": dense_init(ks[4], (*L, cfg.kv_lora_rank, H * nope), dt, cfg.kv_lora_rank),
+        "w_uv": dense_init(ks[5], (*L, cfg.kv_lora_rank, H * v_hd), dt, cfg.kv_lora_rank),
+        "wo": dense_init(ks[6], (*L, H * v_hd, d), dt, H * v_hd),
+    }
+
+
+def _project_q(cfg, p, x, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm({"scale": p["q_ln"]}, x @ p["w_dq"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(B, S, H, nope + rope_d)
+    q = shard(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_table(positions, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(cfg, p, x, positions):
+    ckv = rmsnorm({"scale": p["kv_ln"]}, x @ p["w_dkv"], cfg.norm_eps)
+    kr = x @ p["w_kr"]  # [B, S, rope_d], shared across heads
+    cos, sin = rope_table(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    kr = apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_prefill(cfg, p, x, positions, want_cache: bool):
+    """Expanded-form attention; optionally returns the latent cache."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d, v_hd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    ckv, kr = _project_kv_latent(cfg, p, x, positions)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, S, H, nope)
+    v = (ckv @ p["w_uv"]).reshape(B, S, H, v_hd)
+    k_nope = shard(k_nope, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, rope_d))], axis=-1)
+    o = attend(q, k, v, causal=True)
+    out = o.reshape(B, S, H * v_hd) @ p["wo"]
+    cache = {"ckv": ckv, "kr": kr} if want_cache else None
+    return shard(out, "batch", "seq", None), cache
+
+
+def mla_decode(cfg, p, x, cache, pos):
+    """Absorbed-form decode against the latent cache.
+
+    cache: {"ckv": [B,S,kv_lora], "kr": [B,S,rope_d]}; pos: [B] valid length.
+    """
+    B, _, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d, v_hd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    q_nope, q_rope = _project_q(cfg, p, x, pos[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]            # [B,H,*]
+    ckv_new, kr_new = _project_kv_latent(cfg, p, x, pos[:, None])
+    ckv_new, kr_new = ckv_new[:, 0], kr_new[:, 0]
+
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, H, nope)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))            # [B,H,kv_lora]
+
+    ckv_c = shard(cache["ckv"], "batch", "cache_seq", None)
+    kr_c = shard(cache["kr"], "batch", "cache_seq", None)
+    S = ckv_c.shape[1]
+    s = jnp.einsum("bhl,bsl->bhs", q_lat, ckv_c.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                       kr_c.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(S)[None, :] < pos[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    # current token's own K/V
+    s_new = (jnp.einsum("bhl,bl->bh", q_lat, ckv_new.astype(jnp.float32))
+             + jnp.einsum("bhr,br->bh", q_rope.astype(jnp.float32),
+                          kr_new.astype(jnp.float32))) * scale
+    m = jnp.maximum(s.max(-1), s_new)
+    pr = jnp.exp(s - m[..., None])
+    pr_new = jnp.exp(s_new - m)
+    l = pr.sum(-1) + pr_new
+    out_lat = jnp.einsum("bhs,bsl->bhl", pr, ckv_c.astype(jnp.float32))
+    out_lat = out_lat + pr_new[..., None] * ckv_new.astype(jnp.float32)[:, None, :]
+    out_lat = out_lat / l[..., None]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, H, v_hd)
+    o = jnp.einsum("bhl,lhv->bhv", out_lat, w_uv.astype(jnp.float32))
+    out = o.reshape(B, 1, H * v_hd).astype(x.dtype) @ p["wo"]
+    new_cache = {
+        "ckv": shard(_cache_insert(ckv_c, ckv_new, pos), "batch", "cache_seq", None),
+        "kr": shard(_cache_insert(kr_c, kr_new, pos), "batch", "cache_seq", None),
+    }
+    return shard(out, "batch", None, None), new_cache

@@ -1,0 +1,316 @@
+"""Mixture-of-Experts block: dense reference + expert-parallel shard_map path.
+
+EP design (TPU-native, weight-stationary — DESIGN.md §5):
+  * experts sharded over the ``model`` axis (E % model_size == 0);
+  * each expert's FFN width stored sharded over the data axes (pure storage
+    sharding — all-gathered one layer at a time inside the scan, ≤ ~0.5 GB
+    transient even for deepseek-v2);
+  * tokens (sharded over data×model) are bucketed by destination shard with
+    a capacity bound and exchanged with ``all_to_all`` over ``model`` —
+    tokens move, weights stay.
+Capacity overflow drops tokens (standard GShard semantics); the router's
+load-balance auxiliary loss keeps drop rates low in training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.distributed.sharding import ParallelConfig, shard
+from repro.models.layers import dense_init
+
+CAPACITY_FACTOR = 1.5
+
+
+def moe_params(key, cfg, num_layers=None):
+    d, f, E = cfg.d_model, cfg.resolved_moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    L = () if num_layers is None else (num_layers,)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "router": dense_init(ks[0], (*L, d, E), jnp.float32, d),
+        "w_gate": dense_init(ks[1], (*L, E, d, f), dt, d),
+        "w_up": dense_init(ks[2], (*L, E, d, f), dt, d),
+        "w_down": dense_init(ks[3], (*L, E, f, d), dt, f),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kss[0], (*L, d, fs), dt, d),
+            "w_up": dense_init(kss[1], (*L, d, fs), dt, d),
+            "w_down": dense_init(kss[2], (*L, fs, d), dt, fs),
+        }
+    return p
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down):
+    """xe: [E, C, D]; weights: [E, D, F] / [E, F, D]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _route(x32, router_w, k):
+    gates = jax.nn.softmax(x32 @ router_w, axis=-1)          # [T, E]
+    weights, idx = lax.top_k(gates, k)                        # [T, k]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch-style)
+    E = gates.shape[-1]
+    me = gates.mean(axis=0)
+    ce = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / idx.size
+    aux = E * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def moe_dense_ref(cfg, p, x):
+    """Reference path (single device / smoke tests): computes all experts."""
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    weights, idx, aux = _route(xf.astype(jnp.float32), p["router"], cfg.experts_per_token)
+    E = cfg.num_experts
+    comb = jnp.zeros((T, E), jnp.float32)
+    comb = comb.at[jnp.arange(T)[:, None], idx].add(weights)   # [T, E]
+    ye = _expert_ffn(jnp.broadcast_to(xf, (E, T, D)).astype(x.dtype),
+                     p["w_gate"], p["w_up"], p["w_down"])      # [E, T, D]
+    y = jnp.einsum("te,etd->td", comb, ye.astype(jnp.float32)).astype(x.dtype)
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+    return y.reshape(B, S, D), aux
+
+
+def _bucket_by(ids, values, num_buckets, capacity):
+    """Scatter ``values`` [N, D] into [num_buckets, capacity, D] by ``ids``.
+
+    Returns (buckets, slot, kept) — ``slot`` is the in-bucket position of each
+    entry, ``kept`` masks capacity overflow.
+    """
+    N = ids.shape[0]
+    onehot = (ids[:, None] == jnp.arange(num_buckets)[None]).astype(jnp.int32)
+    slot = (jnp.cumsum(onehot, axis=0) - 1)
+    slot = jnp.take_along_axis(slot, ids[:, None], axis=1)[:, 0]        # [N]
+    kept = slot < capacity
+    safe_ids = jnp.where(kept, ids, 0)
+    safe_slot = jnp.where(kept, slot, capacity)                          # overflow row
+    buckets = jnp.zeros((num_buckets, capacity + 1, *values.shape[1:]), values.dtype)
+    buckets = buckets.at[safe_ids, safe_slot].set(values * kept.reshape(-1, *([1] * (values.ndim - 1))).astype(values.dtype))
+    return buckets[:, :capacity], slot, kept
+
+
+def moe_ep(cfg, p, x, parallel: ParallelConfig):
+    """Expert-parallel MoE via shard_map (tokens all_to_all over ``model``)."""
+    mesh = parallel.mesh
+    m_axis = parallel.model_axis
+    d_axes = tuple(parallel.data_axes)
+    M = parallel.model_size()
+    DP = parallel.data_size()
+    E, k = cfg.num_experts, cfg.experts_per_token
+    assert E % M == 0, f"experts {E} must divide model axis {M}"
+    E_local = E // M
+    B, S, D = x.shape
+    # token sharding: batch over data axes, seq over model (SP) when possible
+    seq_shardable = S % M == 0
+    batch_shardable = B % DP == 0
+    x_spec = P(d_axes if batch_shardable else None,
+               m_axis if seq_shardable else None, None)
+    T_local = (B // (DP if batch_shardable else 1)) * (S // (M if seq_shardable else 1))
+    cap_send = max(8, int(T_local * k / M * CAPACITY_FACTOR))
+    # expected tokens landing on a local expert = T_local*k/E_local (each
+    # shard receives ~T_local*k across its E_local experts). Deriving from
+    # cap_send would square the min-8 floor at small T (decode): a 12x
+    # expert-GEMM inflation observed in the decode_32k dry-run (§Perf H2).
+    cap_expert = max(8, int(T_local * k / E_local * CAPACITY_FACTOR ** 2))
+
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(m_axis, None, d_axes),
+        "w_up": P(m_axis, None, d_axes),
+        "w_down": P(m_axis, d_axes, None),
+    }
+    shared_spec = {"w_gate": P(None, m_axis), "w_up": P(None, m_axis),
+                   "w_down": P(m_axis, None)}
+
+    def local_fn(x_l, router_w, w_gate, w_up, w_down, shared):
+        Bl, Sl, _ = x_l.shape
+        xf = x_l.reshape(-1, D)
+        Tl = xf.shape[0]
+        weights, idx, aux = _route(xf.astype(jnp.float32), router_w, k)
+        aux = lax.pmean(aux, (*d_axes, m_axis))
+        # ---- dispatch: bucket (token, slot) pairs by destination shard ----
+        flat_idx = idx.reshape(-1)                       # [Tl*k] expert id
+        dest = flat_idx // E_local                       # destination model shard
+        payload = jnp.concatenate(
+            [jnp.repeat(xf, k, axis=0),
+             (flat_idx % E_local)[:, None].astype(x_l.dtype),
+             jnp.ones((Tl * k, 1), x_l.dtype)], axis=-1)
+        send, slot, kept = _bucket_by(dest, payload, M, cap_send)
+        recv = lax.all_to_all(send, m_axis, split_axis=0, concat_axis=0, tiled=False)
+        # recv: [M, cap_send, D+2] — tokens other shards routed to my experts
+        rflat = recv.reshape(M * cap_send, D + 2)
+        r_x = rflat[:, :D]
+        r_eid = jnp.round(rflat[:, D].astype(jnp.float32)).astype(jnp.int32)
+        r_valid = rflat[:, D + 1].astype(jnp.float32) > 0.5
+        r_eid = jnp.where(r_valid, r_eid, E_local)       # sentinel bucket
+        xe_all, eslot, ekept = _bucket_by(r_eid, r_x, E_local + 1, cap_expert)
+        xe = xe_all[:E_local]
+        # ---- expert FFN (weights all-gathered over data: storage sharding) --
+        wg = _gather_ffn(w_gate, d_axes, axis=2)
+        wu = _gather_ffn(w_up, d_axes, axis=2)
+        wd = _gather_ffn(w_down, d_axes, axis=1)
+        ye = _expert_ffn(xe, wg, wu, wd)                 # [E_local, cap_expert, D]
+        # ---- un-bucket back to recv order, return via all_to_all ----------
+        safe_es = jnp.minimum(eslot, cap_expert - 1)
+        y_r = ye[jnp.minimum(r_eid, E_local - 1), safe_es]
+        y_r = y_r * (r_valid & ekept & (eslot < cap_expert))[:, None].astype(y_r.dtype)
+        back = lax.all_to_all(y_r.reshape(M, cap_send, D), m_axis,
+                              split_axis=0, concat_axis=0, tiled=False)
+        # ---- combine at source ------------------------------------------
+        safe_slot = jnp.minimum(slot, cap_send - 1)
+        y_slots = back[dest, safe_slot]                  # [Tl*k, D]
+        y_slots = y_slots * kept[:, None].astype(y_slots.dtype)
+        w_flat = weights.reshape(-1)[:, None].astype(y_slots.dtype)
+        y = (y_slots * w_flat).reshape(Tl, k, D).sum(axis=1)
+        if shared is not None:
+            # shared experts are *storage*-sharded over model; gather per layer
+            # (tokens differ per model shard, so TP-psum here would be wrong)
+            wg_s = lax.all_gather(shared["w_gate"], m_axis, axis=1, tiled=True)
+            wu_s = lax.all_gather(shared["w_up"], m_axis, axis=1, tiled=True)
+            wd_s = lax.all_gather(shared["w_down"], m_axis, axis=0, tiled=True)
+            h = jax.nn.silu(xf @ wg_s) * (xf @ wu_s)
+            y = y + (h @ wd_s).astype(jnp.float32)
+        return y.reshape(Bl, Sl, D).astype(x_l.dtype), aux
+
+    def _gather_ffn(w, axes, axis):
+        for a in axes[::-1]:
+            w = lax.all_gather(w, a, axis=axis, tiled=True)
+        return w
+
+    shared = p.get("shared")
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, w_specs["router"], w_specs["w_gate"], w_specs["w_up"],
+                  w_specs["w_down"],
+                  {k_: shared_spec[k_] for k_ in shared} if shared is not None else None),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
+
+
+def moe_ep_over_data(cfg, p, x, parallel: ParallelConfig):
+    """2-level EP (§Perf H8): experts sharded over the DATA axes, each
+    expert's FFN width TP-sharded over MODEL.
+
+    The baseline layout (experts over model, F storage-sharded over data)
+    must all-gather every expert's F-shards each layer — 4.3 GB/device/step
+    on dsv2 decode. Inverting the axes makes weights fully stationary:
+    tokens all_to_all over data (MB-scale payloads), the F contraction
+    psums over model (token-sized partials). Requires E % data == 0.
+    """
+    mesh = parallel.mesh
+    m_axis = parallel.model_axis
+    d_axes = tuple(parallel.data_axes)
+    M = parallel.model_size()
+    DP = parallel.data_size()
+    E, k = cfg.num_experts, cfg.experts_per_token
+    assert E % DP == 0, f"experts {E} must divide data axes {DP}"
+    E_local = E // DP
+    B, S, D = x.shape
+    batch_shardable = B % DP == 0
+    seq_shardable = S % DP == 0
+    # tokens: sharded over data (batch if divisible, else seq), REPLICATED
+    # over model — every model rank in a data column computes the same
+    # routing and holds the same tokens (the F-TP requirement).
+    x_spec = P(d_axes if batch_shardable else None,
+               d_axes if (not batch_shardable and seq_shardable) else None,
+               None)
+    T_local = (B // (DP if batch_shardable else 1)) * (
+        S // (DP if (not batch_shardable and seq_shardable) else 1))
+    cap_send = max(8, int(T_local * k / DP * CAPACITY_FACTOR))
+    cap_expert = max(8, int(T_local * k * CAPACITY_FACTOR ** 2 / E_local))
+
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(d_axes, None, m_axis),
+        "w_up": P(d_axes, None, m_axis),
+        "w_down": P(d_axes, m_axis, None),
+    }
+    shared_spec = {"w_gate": P(None, m_axis), "w_up": P(None, m_axis),
+                   "w_down": P(m_axis, None)}
+    d_name = d_axes if len(d_axes) > 1 else d_axes[0]
+
+    def local_fn(x_l, router_w, w_gate, w_up, w_down, shared):
+        Bl, Sl, _ = x_l.shape
+        xf = x_l.reshape(-1, D)
+        Tl = xf.shape[0]
+        weights, idx, aux = _route(xf.astype(jnp.float32), router_w, k)
+        aux = lax.pmean(aux, (*d_axes, m_axis))
+        flat_idx = idx.reshape(-1)
+        dest = flat_idx // E_local                 # destination DATA shard
+        payload = jnp.concatenate(
+            [jnp.repeat(xf, k, axis=0),
+             (flat_idx % E_local)[:, None].astype(x_l.dtype),
+             jnp.ones((Tl * k, 1), x_l.dtype)], axis=-1)
+        send, slot, kept = _bucket_by(dest, payload, DP, cap_send)
+        recv = lax.all_to_all(send, d_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+        rflat = recv.reshape(DP * cap_send, D + 2)
+        r_x = rflat[:, :D]
+        r_eid = jnp.round(rflat[:, D].astype(jnp.float32)).astype(jnp.int32)
+        r_valid = rflat[:, D + 1].astype(jnp.float32) > 0.5
+        r_eid = jnp.where(r_valid, r_eid, E_local)
+        xe_all, eslot, ekept = _bucket_by(r_eid, r_x, E_local + 1, cap_expert)
+        xe = xe_all[:E_local]
+        # expert FFN with F TP-sharded over model: local partials + psum
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w_up)
+        y_part = jnp.einsum("ecf,efd->ecd", h, w_down)
+        ye = lax.psum(y_part, m_axis)              # [E_local, cap, D] full
+        safe_es = jnp.minimum(eslot, cap_expert - 1)
+        y_r = ye[jnp.minimum(r_eid, E_local - 1), safe_es]
+        y_r = y_r * (r_valid & ekept & (eslot < cap_expert))[:, None].astype(y_r.dtype)
+        back = lax.all_to_all(y_r.reshape(DP, cap_send, D), d_name,
+                              split_axis=0, concat_axis=0, tiled=False)
+        safe_slot = jnp.minimum(slot, cap_send - 1)
+        y_slots = back[dest, safe_slot]
+        y_slots = y_slots * kept[:, None].astype(y_slots.dtype)
+        w_flat = weights.reshape(-1)[:, None].astype(y_slots.dtype)
+        y = (y_slots * w_flat).reshape(Tl, k, D).sum(axis=1)
+        if shared is not None:
+            # shared experts: clean TP over model (partials psum'd) — no
+            # gather, unlike the baseline storage-sharded path
+            hs = jax.nn.silu(xf @ shared["w_gate"]) * (xf @ shared["w_up"])
+            y = y + lax.psum((hs @ shared["w_down"]).astype(jnp.float32),
+                             m_axis)
+        return y.reshape(Bl, Sl, D).astype(x_l.dtype), aux
+
+    shared = p.get("shared")
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, w_specs["router"], w_specs["w_gate"],
+                  w_specs["w_up"], w_specs["w_down"],
+                  {k_: shared_spec[k_] for k_ in shared}
+                  if shared is not None else None),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
+
+
+def moe_block(cfg, p, x, parallel: Optional[ParallelConfig]):
+    if parallel is not None and parallel.mesh is not None:
+        if (parallel.moe_expert_axis == "data"
+                and cfg.num_experts % max(parallel.data_size(), 1) == 0):
+            return moe_ep_over_data(cfg, p, x, parallel)
+        if cfg.num_experts >= parallel.model_size():
+            return moe_ep(cfg, p, x, parallel)
+    return moe_dense_ref(cfg, p, x)

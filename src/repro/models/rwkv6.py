@@ -1,0 +1,216 @@
+"""RWKV6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Recurrence (per head, state ``S`` in R^{hd x hd}):
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    out_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+Train/prefill use a *chunked* linear-attention form: intra-chunk pairwise
+decays become two MXU matmuls; inter-chunk state is carried with
+``lax.scan``. Decode is the O(1) recurrent update (this is why rwkv6 runs
+the ``long_500k`` cell: no KV cache, constant state).
+
+Numerical note: per-token log-decay is clamped to [LOG_W_MIN, LOG_W_MAX]
+so that the intra-chunk ``exp(-cumsum)`` factor stays inside fp32 range for
+CHUNK tokens (|LOG_W_MIN|·CHUNK < 88). This bounds how fast a channel can
+forget within one chunk — a documented deviation from unclamped Finch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, rmsnorm
+
+CHUNK = 32
+LOG_W_MIN = -1.5   # per-token; CHUNK * 1.5 = 48 << 88 (fp32 exp overflow)
+LOG_W_MAX = -1e-6
+
+DDLERP_RANK = 32   # low-rank data-dependence of the decay (Finch's token-shift LoRA)
+
+
+def rwkv6_params(key, cfg, num_layers=None):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    assert H * hd == d, "rwkv6 time-mix assumes heads*head_dim == d_model"
+    ks = jax.random.split(key, 16)
+    L = () if num_layers is None else (num_layers,)
+    dt = jnp.dtype(cfg.dtype)
+    r = DDLERP_RANK
+    p = {
+        # time-mix projections
+        "w_r": dense_init(ks[0], (*L, d, d), dt, d),
+        "w_k": dense_init(ks[1], (*L, d, d), dt, d),
+        "w_v": dense_init(ks[2], (*L, d, d), dt, d),
+        "w_g": dense_init(ks[3], (*L, d, d), dt, d),
+        "w_o": dense_init(ks[4], (*L, d, d), dt, d),
+        # static token-shift interpolation weights per stream
+        "mu_r": jnp.full((*L, d), 0.5, dt),
+        "mu_k": jnp.full((*L, d), 0.5, dt),
+        "mu_v": jnp.full((*L, d), 0.5, dt),
+        "mu_g": jnp.full((*L, d), 0.5, dt),
+        "mu_w": jnp.full((*L, d), 0.5, dt),
+        # data-dependent decay: LoRA on the shifted stream
+        "w_decay_a": dense_init(ks[5], (*L, d, r), dt, d),
+        "w_decay_b": dense_init(ks[6], (*L, r, d), dt, r),
+        "decay_base": jnp.full((*L, d), -1.0, jnp.float32),  # w ~ exp(-softplus)
+        "bonus_u": dense_init(ks[7], (*L, H, hd), jnp.float32, hd),
+        "ln_x": jnp.ones((*L, d), dt),  # per-head group-norm scale on the wkv out
+        # channel-mix
+        "cm_k": dense_init(ks[8], (*L, d, cfg.d_ff), dt, d),
+        "cm_v": dense_init(ks[9], (*L, cfg.d_ff, d), dt, cfg.d_ff),
+        "cm_r": dense_init(ks[10], (*L, d, d), dt, d),
+        "cm_mu_k": jnp.full((*L, d), 0.5, dt),
+        "cm_mu_r": jnp.full((*L, d), 0.5, dt),
+        # pre-norms
+        "ln1": jnp.ones((*L, d), dt),
+        "ln2": jnp.ones((*L, d), dt),
+    }
+    return p
+
+
+def _token_shift(x, prev):
+    """x: [B,S,D]; prev: [B,D] (last token of the previous segment)."""
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, shifted, mu):
+    return x + (shifted - x) * mu
+
+
+def _log_decay(p, xw):
+    """Data-dependent per-channel log decay in [LOG_W_MIN, LOG_W_MAX]."""
+    lora = jnp.tanh(xw @ p["w_decay_a"]) @ p["w_decay_b"]
+    raw = p["decay_base"].astype(jnp.float32) + lora.astype(jnp.float32)
+    logw = -jax.nn.softplus(raw)          # <= 0
+    return jnp.clip(logw, LOG_W_MIN, LOG_W_MAX)
+
+
+def wkv6_chunked(r, k, v, logw, u, state0, chunk: int = CHUNK):
+    """Chunked WKV6 scan.
+
+    r/k/v: [B,S,H,hd]; logw: [B,S,H,hd]; u: [H,hd]; state0: [B,H,hd,hd].
+    Returns (out [B,S,H,hd], state [B,H,hd,hd]). fp32 inside.
+    """
+    B, S, H, hd = r.shape
+    assert S % chunk == 0, f"S={S} % chunk={chunk} != 0"
+    n = S // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, n, chunk, H, hd)
+    kc = k.astype(f32).reshape(B, n, chunk, H, hd)
+    vc = v.astype(f32).reshape(B, n, chunk, H, hd)
+    wc = logw.astype(f32).reshape(B, n, chunk, H, hd)
+    # scan over chunks (time-major)
+    rc, kc, vc, wc = (jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, wc))
+
+    tri_lo = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)   # strictly lower
+
+    def body(S0, xs):
+        r_i, k_i, v_i, w_i = xs                       # [B,C,H,hd]
+        c = jnp.cumsum(w_i, axis=1)                   # inclusive cumsum of log w
+        c_prev = c - w_i                              # cumsum up to t-1
+        A = r_i * jnp.exp(c_prev)                     # queries with decay-to-start
+        Bm = k_i * jnp.exp(-c)                        # keys with inverse decay
+        # intra-chunk scores: [B,H,C,C], strictly causal (j < t)
+        s = jnp.einsum("bthd,bjhd->bhtj", A, Bm) * tri_lo[None, None]
+        intra = jnp.einsum("bhtj,bjhd->bthd", s, v_i)
+        # diagonal (current-token bonus u)
+        diag = jnp.einsum("bthd,bthd->bth", r_i * u[None, None], k_i)
+        intra = intra + diag[..., None] * v_i
+        # inter-chunk: state contribution
+        inter = jnp.einsum("bthk,bhkv->bthv", A, S0)
+        # state update: S_C = diag(exp(c_last)) S0 + sum_j (k_j exp(c_last - c_j)) v_j^T
+        c_last = c[:, -1:, :, :]                      # [B,1,H,hd]
+        k_dec = k_i * jnp.exp(c_last - c)
+        S1 = jnp.exp(c_last[:, 0])[..., None] * S0 + jnp.einsum(
+            "bthk,bthv->bhkv", k_dec, v_i)
+        return S1, intra + inter
+
+    state, out = lax.scan(body, state0.astype(f32), (rc, kc, vc, wc))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+    return out, state
+
+
+def wkv6_decode(r, k, v, logw, u, state):
+    """Single-token recurrent step. r/k/v/logw: [B,H,hd]; state: [B,H,hd,hd]."""
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, logw))
+    rk_u = jnp.einsum("bhd,bhd->bh", r * u[None], k)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state) + rk_u[..., None] * v
+    new_state = jnp.exp(w)[..., None] * state + jnp.einsum("bhk,bhv->bhkv", k, v)
+    return out, new_state
+
+
+def _group_norm(x, scale, eps):
+    """Per-head RMS norm of the wkv output. x: [B,S,H,hd]; scale: [D]."""
+    B, S, H, hd = x.shape
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps)
+    return (y.reshape(B, S, H * hd) * scale.astype(jnp.float32))
+
+
+def time_mix(cfg, p, x, tm_state, wkv_state):
+    """RWKV6 time-mix block.
+
+    x: [B,S,D]; tm_state: [B,D] last-token carry; wkv_state: [B,H,hd,hd].
+    Returns (out [B,S,D], new_tm_state, new_wkv_state).
+    """
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    sx = _token_shift(x, tm_state)
+    xr = _lerp(x, sx, p["mu_r"])
+    xk = _lerp(x, sx, p["mu_k"])
+    xv = _lerp(x, sx, p["mu_v"])
+    xg = _lerp(x, sx, p["mu_g"])
+    xw = _lerp(x, sx, p["mu_w"])
+    r = shard((xr @ p["w_r"]).reshape(B, S, H, hd), "batch", None, "state_heads", None)
+    k = shard((xk @ p["w_k"]).reshape(B, S, H, hd), "batch", None, "state_heads", None)
+    v = shard((xv @ p["w_v"]).reshape(B, S, H, hd), "batch", None, "state_heads", None)
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = _log_decay(p, xw).reshape(B, S, H, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if S == 1:
+        out, new_wkv = wkv6_decode(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, wkv_state)
+        out = out[:, None]  # [B,1,H,hd]
+    else:
+        chunk = CHUNK if S % CHUNK == 0 else (8 if S % 8 == 0 else 1)
+        out, new_wkv = wkv6_chunked(r, k, v, logw, u, wkv_state, chunk=chunk)
+    out = _group_norm(out, p["ln_x"], cfg.norm_eps).astype(x.dtype)
+    out = (out * g) @ p["w_o"]
+    return shard(out, "batch", "seq", None), x[:, -1, :], new_wkv
+
+
+def channel_mix(cfg, p, x, cm_state):
+    """RWKV squared-relu channel mix. cm_state: [B,D] last-token carry."""
+    sx = _token_shift(x, cm_state)
+    xk = _lerp(x, sx, p["cm_mu_k"])
+    xr = _lerp(x, sx, p["cm_mu_r"])
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    h = shard(h, "batch", None, "ffn")
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (h @ p["cm_v"])
+    return shard(out, "batch", "seq", None), x[:, -1, :]
+
+
+def rwkv6_state_init(cfg, batch: int):
+    """Recurrent state pytree (replaces the KV cache for this family)."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "wkv": jnp.zeros((cfg.num_layers, batch, H, hd, hd), jnp.float32),
+        "tm": jnp.zeros((cfg.num_layers, batch, cfg.d_model), jnp.float32),
+        "cm": jnp.zeros((cfg.num_layers, batch, cfg.d_model), jnp.float32),
+    }
+
+
+def rwkv6_block(cfg, p, x, state_slice):
+    """One RWKV6 layer (pre-norm time-mix + channel-mix)."""
+    tm_s, cm_s, wkv_s = state_slice["tm"], state_slice["cm"], state_slice["wkv"]
+    h, new_tm, new_wkv = time_mix(cfg, p, rmsnorm({"scale": p["ln1"]}, x, cfg.norm_eps),
+                                  tm_s, wkv_s)
+    x = x + h
+    h, new_cm = channel_mix(cfg, p, rmsnorm({"scale": p["ln2"]}, x, cfg.norm_eps), cm_s)
+    x = x + h
+    return x, {"tm": new_tm.astype(jnp.float32), "cm": new_cm.astype(jnp.float32),
+               "wkv": new_wkv}

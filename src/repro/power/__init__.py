@@ -1,0 +1,3 @@
+from repro.power.model import HardwareModel, H100_DGX, TPU_V5E, accelerator_power
+
+__all__ = ["HardwareModel", "H100_DGX", "TPU_V5E", "accelerator_power"]

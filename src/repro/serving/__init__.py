@@ -1,0 +1,5 @@
+"""JAX serving engine: KV-cache slots, continuous batching, sampling."""
+from repro.serving.engine import EngineMetrics, Request, ServingEngine
+from repro.serving.sampling import sample
+
+__all__ = ["EngineMetrics", "Request", "ServingEngine", "sample"]

@@ -1,0 +1,200 @@
+"""Site-local serving engine: KV-cache slots + continuous batching.
+
+This is the per-site engine the paper assumes (vLLM in their testbed) —
+built here in JAX because Heron needs a real serving substrate to route
+into. Design:
+
+  * a fixed pool of ``max_batch`` cache *slots*; each slot owns one
+    sequence's decode cache (KV / recurrent state, family-specific pytree);
+  * **continuous batching**: new requests are admitted into free slots via
+    single-request prefill + cache insertion; every engine step runs ONE
+    batched decode over all slots (fixed shapes → one compiled program);
+  * finished sequences retire their slot immediately — no batch barriers;
+  * per-request TTFT / TBT / E2E metrics against the class SLOs, which is
+    what Heron's goodput accounting consumes.
+
+Cache insertion is family-agnostic: every cache leaf is [B]-batched at
+axis 0 (1-D leaves like ``pos``) or axis 1 (stacked [L, B, ...] leaves),
+so one ``dynamic_update_slice`` rule covers GQA/MLA/SSM/hybrid/enc-dec.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model
+from repro.serving.sampling import sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32 token ids
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    temperature: float = 0.0
+    # filled by the engine
+    tokens: list = field(default_factory=list)
+    prefill_done_s: Optional[float] = None
+    finish_s: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.prefill_done_s is None:
+            return None
+        return self.prefill_done_s - self.arrival_s
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrival_s
+
+    @property
+    def tbt(self) -> Optional[float]:
+        if self.finish_s is None or len(self.tokens) < 2:
+            return None
+        return (self.finish_s - self.prefill_done_s) / max(len(self.tokens) - 1, 1)
+
+
+def _insert_leaf(engine_leaf, req_leaf, slot: int):
+    """Write a single-sequence cache leaf into slot ``slot``."""
+    req_leaf = req_leaf.astype(engine_leaf.dtype)
+    if engine_leaf.ndim == 1:                       # e.g. pos: [B]
+        return jax.lax.dynamic_update_slice(engine_leaf, req_leaf, (slot,))
+    # stacked leaves: [L, B, ...] — batch at axis 1, write at origin elsewhere
+    start = (0, slot) + (0,) * (engine_leaf.ndim - 2)
+    return jax.lax.dynamic_update_slice(engine_leaf, req_leaf, start)
+
+
+@jax.jit
+def insert_cache(engine_cache, req_cache, slot):
+    """Insert a B=1 request cache into the engine's slot ``slot``."""
+    return jax.tree.map(lambda e, r: _insert_leaf(e, r, slot),
+                        engine_cache, req_cache)
+
+
+@dataclass
+class EngineMetrics:
+    completed: list
+    steps: int = 0
+    prefills: int = 0
+
+    def summary(self) -> dict:
+        ttfts = [r.ttft for r in self.completed if r.ttft is not None]
+        e2es = [r.e2e for r in self.completed if r.e2e is not None]
+        tbts = [r.tbt for r in self.completed if r.tbt is not None]
+        f = lambda xs: float(np.mean(xs)) if xs else 0.0
+        return {"num_completed": len(self.completed), "steps": self.steps,
+                "prefills": self.prefills, "mean_ttft": f(ttfts),
+                "mean_tbt": f(tbts), "mean_e2e": f(e2es)}
+
+
+class ServingEngine:
+    """Continuous-batching engine over one model replica."""
+
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_seq: int = 512, eos_token: int = -1, seed: int = 0,
+                 clock=None):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos = eos_token
+        self._key = jax.random.key(seed)
+        self._clock = clock or time.perf_counter
+
+        from repro.models import transformer as T
+        self.cache = T.make_decode_cache(self.cfg, max_batch, max_seq)
+        self.active: list[Optional[Request]] = [None] * max_batch
+        self.last_token = jnp.zeros((max_batch,), jnp.int32)
+        self.new_counts = [0] * max_batch
+        self.waiting: list[Request] = []
+        self.metrics = EngineMetrics(completed=[])
+        self._decode = jax.jit(model.decode_fn)
+        self._prefill = jax.jit(model.prefill_fn)
+
+    # --------------------------------------------------------------- admit
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.waiting:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.waiting.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]     # [1, S]
+            inputs = {"tokens": prompt}
+            if self.cfg.family == "encdec":
+                inputs["frames"] = jnp.zeros(
+                    (1, self.cfg.num_prefix_embeddings, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype))
+            if self.cfg.family == "vlm":
+                inputs["patches"] = jnp.zeros(
+                    (1, self.cfg.num_prefix_embeddings, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype))
+            logits, req_cache = self._prefill(self.params, inputs)
+            self._key, k = jax.random.split(self._key)
+            tok = sample(logits, k, req.temperature)
+            req.tokens.append(int(tok[0]))
+            req.prefill_done_s = self._clock()
+            self.cache = insert_cache(self.cache, req_cache, slot)
+            self.last_token = self.last_token.at[slot].set(tok[0])
+            self.active[slot] = req
+            self.new_counts[slot] = 1
+            self.metrics.prefills += 1
+
+    # --------------------------------------------------------------- step
+    def step(self) -> int:
+        """Admit waiting requests, run one batched decode. Returns #active."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, {"token": self.last_token}, self.cache)
+        self._key, k = jax.random.split(self._key)
+        temps = np.zeros(self.max_batch, np.float32)
+        for i in live:
+            temps[i] = self.active[i].temperature
+        toks = sample(logits, k, 0.0) if not temps.any() else sample(
+            logits, k, float(temps.max()))
+        toks_np = np.asarray(toks)
+        self.last_token = toks
+        self.metrics.steps += 1
+        now = self._clock()
+        for i in live:
+            req = self.active[i]
+            req.tokens.append(int(toks_np[i]))
+            self.new_counts[i] += 1
+            done = (self.new_counts[i] >= req.max_new_tokens
+                    or int(toks_np[i]) == self.eos)
+            if done:
+                req.finish_s = now
+                self.metrics.completed.append(req)
+                self.active[i] = None
+                # zero the slot's position so its cache reads are masked
+                self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        return len([r for r in self.active if r is not None])
+
+    def run(self, max_steps: int = 10_000) -> EngineMetrics:
+        """Drain all waiting + active requests."""
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.waiting:
+                break
+        return self.metrics

@@ -1,0 +1,23 @@
+"""Token sampling for the serving engine (greedy / temperature / top-k)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def sample(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """logits: [B, V] -> tokens [B] int32.
+
+    temperature == 0 is greedy. top_k > 0 restricts to the k most likely.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperature, 1e-6)
+    scaled = logits.astype(jnp.float32) / t
+    if top_k:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

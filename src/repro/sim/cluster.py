@@ -1,0 +1,228 @@
+"""Week-long cross-site serving simulation (paper §5.2/§5.3).
+
+Two granularities, matching the paper's evaluation methodology:
+
+  * ``simulate_week``      — 15-min slots over 672 slots: Planner-L (or a
+    baseline) plans each slot; goodput / drops / latency / power are
+    accounted per slot. Baselines are power-variability agnostic, so their
+    plans are confronted with reality via ``apply_power_reality`` (whole-
+    instance brownout shedding) — reproducing Fig. 8/14/15.
+
+  * ``simulate_slot_fine`` — 1-s steps inside one slot: per-second power
+    and Poisson arrivals fluctuate around the slot values; Planner-S re-
+    solves (f, l) every few seconds inside Planner-L's GPU budget, and the
+    Request Scheduler's packing heuristic absorbs transient per-class
+    overloads — reproducing Fig. 17 and the §5.3 elasticity test.
+
+Fluid-flow semantics: requests are rps flows per class; queueing beyond
+rated capacity accrues in a per-class fluid backlog whose Little's-law
+wait adds to the table E2E. 'Goodput' is served rps (the paper's "requests
+being actually served").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Literal, Optional
+
+import numpy as np
+
+from repro.core.baselines import (apply_power_reality,
+                                  baseline_greedy_min_latency,
+                                  baseline_wrr_dynamollm)
+from repro.core.lookup import LookupTable
+from repro.core.planner_l import Plan, SiteSpec, plan_l
+from repro.core.planner_s import plan_s
+from repro.core.predictor import SeriesPredictor
+from repro.core.scheduler import Configurator, RequestScheduler
+
+SchedulerName = Literal["heron", "heron_min_power", "wrr_dynamollm",
+                        "greedy_min_latency"]
+
+
+@dataclass
+class SlotMetrics:
+    served: np.ndarray
+    dropped: np.ndarray
+    mean_e2e: float
+    power_w: float
+    solve_s: float
+    reconfigs: int
+
+    @property
+    def total_served(self) -> float:
+        return float(self.served.sum())
+
+    @property
+    def total_dropped(self) -> float:
+        return float(self.dropped.sum())
+
+
+@dataclass
+class WeekResult:
+    name: str
+    slots: list[SlotMetrics]
+
+    def goodput(self) -> np.ndarray:
+        return np.array([s.total_served for s in self.slots])
+
+    def drops(self) -> np.ndarray:
+        return np.array([s.total_dropped for s in self.slots])
+
+    def slots_with_drops(self, eps: float = 1e-6) -> int:
+        return int((self.drops() > eps).sum())
+
+    def mean_e2e(self) -> np.ndarray:
+        return np.array([s.mean_e2e for s in self.slots])
+
+    def power(self) -> np.ndarray:
+        return np.array([s.power_w for s in self.slots])
+
+
+def goodput_improvement(heron: WeekResult, baseline: WeekResult) -> np.ndarray:
+    """Per-slot goodput ratio (Fig. 14 middle / Fig. 15): Heron / baseline."""
+    g_h, g_b = heron.goodput(), baseline.goodput()
+    return g_h / np.maximum(g_b, 1e-9)
+
+
+def simulate_week(scheduler: SchedulerName, table: LookupTable,
+                  sites: list[SiteSpec], power_mw: np.ndarray,
+                  arrivals_rps: np.ndarray, *,
+                  predictor_kind: str = "oracle", r_frac: float = 0.03,
+                  time_limit: float = 20.0,
+                  slots: Optional[int] = None) -> WeekResult:
+    """Slot-level week simulation.
+
+    power_mw: [S, T] available generation per site; arrivals_rps: [9, T].
+    The site's usable power is min(generation, provisioned demand) — the
+    provisioned hardware cap is already expressed by the GPU constraint.
+    """
+    S, T = power_mw.shape
+    T = min(T, arrivals_rps.shape[1]) if slots is None else min(slots, T)
+    dispatcher = RequestScheduler(S, packing=False)
+    predictors = [SeriesPredictor(power_mw[s], kind=predictor_kind)
+                  for s in range(S)]
+    old: Optional[Plan] = None
+    cfgtor = Configurator()
+    out: list[SlotMetrics] = []
+    for t in range(T):
+        actual_w = power_mw[:, t] * 1e6
+        pred_w = np.array([p.predict(t) for p in predictors]) * 1e6
+        loads = arrivals_rps[:, t]
+        if scheduler == "heron":
+            p = plan_l(table, sites, pred_w, loads, objective="latency",
+                       old=old, r_frac=r_frac, time_limit=time_limit)
+        elif scheduler == "heron_min_power":
+            p = plan_l(table, sites, pred_w, loads, objective="power",
+                       old=old, r_frac=r_frac, time_limit=time_limit)
+        elif scheduler == "wrr_dynamollm":
+            p = baseline_wrr_dynamollm(table, sites, loads,
+                                       time_limit=time_limit)
+        elif scheduler == "greedy_min_latency":
+            p = baseline_greedy_min_latency(table, sites, loads)
+        else:
+            raise ValueError(scheduler)
+        reconfigs = cfgtor.reconfig_count(old, p)
+        old = p
+        # reality: any plan drawing beyond actual generation browns out
+        real = apply_power_reality(p, actual_w)
+        groups = dispatcher.groups_from_plan(real)
+        res = dispatcher.dispatch(groups, loads)
+        dropped = res.dropped
+        out.append(SlotMetrics(served=res.served, dropped=dropped,
+                               mean_e2e=res.aggregate_e2e(),
+                               power_w=float(sum(g.count * g.row.power
+                                                 for g in groups)),
+                               solve_s=p.solve_seconds, reconfigs=reconfigs))
+    return WeekResult(name=scheduler, slots=out)
+
+
+# ------------------------------------------------------------------
+# fine-grained (1 s) slot simulation — Planner-S + packing (Fig. 17)
+# ------------------------------------------------------------------
+@dataclass
+class FineResult:
+    e2e_per_second: dict[str, np.ndarray]       # variant -> [seconds]
+    dropped: dict[str, float]                   # variant -> total dropped rps
+    class_e2e: dict[str, np.ndarray]            # variant -> [9] mean e2e
+    planner_s_solves: list[float] = field(default_factory=list)
+
+
+def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
+                       base_plan: Plan, power_w_slot: np.ndarray,
+                       arrivals_rps: np.ndarray, *, seconds: int = 900,
+                       planner_s_period: float = 5.0,
+                       power_noise: float = 0.04,
+                       power_scale: float = 1.0,
+                       variants=("L", "L+S", "L+S+pack"),
+                       seed: int = 0) -> FineResult:
+    """Second-level simulation of one 15-min slot.
+
+    Power per second follows an AR(1) wiggle (±power_noise) around
+    ``power_scale`` × the slot value; arrivals are Poisson per second.
+    Variants: 'L' follows Planner-L blindly; 'L+S' re-solves (f, l) every
+    ``planner_s_period`` s at observed load/power; '+pack' adds the
+    Request Scheduler packing heuristic.
+    """
+    rng = np.random.default_rng(seed)
+    S = len(sites)
+    gpu_budget = base_plan.gpu_budget()
+    # per-second power: AR(1) multiplicative wiggle
+    wig = np.zeros((S, seconds))
+    for s in range(S):
+        phi = 0.995
+        sig = power_noise * np.sqrt(1 - phi * phi)
+        for t in range(1, seconds):
+            wig[s, t] = phi * wig[s, t - 1] + sig * rng.standard_normal()
+    pw = power_w_slot[:, None] * power_scale * np.exp(wig)
+    arr = rng.poisson(np.maximum(arrivals_rps, 0)[:, None],
+                      size=(9, seconds)).astype(float)
+
+    results_e2e = {}
+    results_drop = {}
+    results_cls = {}
+    solves = []
+    for variant in variants:
+        packing = variant.endswith("pack")
+        use_s = variant != "L"
+        dispatcher = RequestScheduler(S, packing=packing)
+        backlog = np.zeros(9)
+        e2e_series = np.zeros(seconds)
+        cls_num = np.zeros(9)
+        cls_den = np.zeros(9)
+        dropped_total = 0.0
+        plan = base_plan
+        for t in range(seconds):
+            if use_s and t % int(planner_s_period) == 0:
+                obs_load = arr[:, max(0, t - 5): t + 1].mean(axis=1)
+                # plan for a small headroom over observed load
+                p = plan_s(table, sites, pw[:, t], obs_load * 1.1,
+                           gpu_budget, objective=base_plan.objective)
+                if p.status != "empty":
+                    plan = p
+                    solves.append(p.solve_seconds)
+            real = apply_power_reality(plan, pw[:, t])
+            groups = dispatcher.groups_from_plan(real)
+            demand = arr[:, t] + backlog
+            res = dispatcher.dispatch(groups, demand)
+            cap = np.zeros(9)
+            for g in groups:
+                cap[g.row.cls] += g.capacity
+            # fluid backlog: what was neither served nor dropped waits
+            backlog = np.maximum(demand - res.served - res.dropped, 0.0)
+            # cap the queue at 2x/s of capacity; beyond that it drops
+            overflow = np.maximum(backlog - 2.0 * cap, 0.0)
+            backlog -= overflow
+            drop = res.dropped + overflow
+            dropped_total += float(drop.sum())
+            wait = np.where(cap > 0, backlog / np.maximum(cap, 1e-9), 0.0)
+            e2e_c = res.mean_e2e + wait
+            m = res.served > 0
+            e2e_series[t] = (float((e2e_c[m] * res.served[m]).sum()
+                                   / res.served[m].sum()) if m.any() else 0.0)
+            cls_num += e2e_c * res.served
+            cls_den += res.served
+        results_e2e[variant] = e2e_series
+        results_drop[variant] = dropped_total
+        results_cls[variant] = cls_num / np.maximum(cls_den, 1e-9)
+    return FineResult(e2e_per_second=results_e2e, dropped=results_drop,
+                      class_e2e=results_cls, planner_s_solves=solves)

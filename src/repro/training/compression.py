@@ -1,0 +1,30 @@
+"""Gradient compression: int8 stochastic-rounding quantisation.
+
+At DP=32 (16 data x 2 pods) the gradient all-reduce moves 2 bytes/param
+per step; int8 halves it. Quantisation is per-tensor absmax-scaled with
+*deterministic* rounding by default (bitwise reproducible across replicas;
+stochastic rounding is available for unbiasedness where the caller wants
+it). Used by ``train_step`` behind the ``compress_grads`` flag; the
+round-trip error bound is property-tested in tests/test_training.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x, *, stochastic_key=None):
+    """x -> (q int8, scale fp32). Per-tensor absmax scaling."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-30) / 127.0
+    y = x32 / scale
+    if stochastic_key is not None:
+        noise = jax.random.uniform(stochastic_key, y.shape) - 0.5
+        q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale

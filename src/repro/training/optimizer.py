@@ -1,0 +1,79 @@
+"""AdamW optimizer (dependency-free, pytree-native).
+
+Matches the standard decoupled-weight-decay AdamW with bf16-safe fp32
+optimizer state. ``scale_by_schedule`` implements linear warmup + cosine
+decay — the schedule used by the train driver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params, lr_scale=1.0):
+        """Returns (new_params, new_state). Grad-norm clip + AdamW + decay."""
+        gnorm = global_norm(grads)
+        clip = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12))
+        step = state.step + 1
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr * lr_scale
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * clip
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) + \
+                self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def lr_schedule(step, *, warmup: int = 100, total: int = 10_000,
+                min_frac: float = 0.1):
+    """Linear warmup → cosine decay, as a multiplicative scale in [0, 1]."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

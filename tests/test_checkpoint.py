@@ -1,0 +1,146 @@
+"""Checkpoint + elastic fault-tolerance tests."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.distributed.elastic import (StragglerTracker, shrink_mesh)
+from repro.distributed.sharding import ParallelConfig
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    ks = jax.random.split(k, 3)
+    return {"layers": {"w": jax.random.normal(ks[0], (4, 8)),
+                       "b": jnp.zeros((8,), jnp.bfloat16)},
+            "step_count": jnp.array(7, jnp.int32),
+            "nested": [jax.random.normal(ks[1], (2, 2)),
+                       jax.random.normal(ks[2], (3,))]}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(3, t, extra={"loss": 1.5})
+    got, extra = store.restore(jax.tree.map(jnp.zeros_like, t))
+    assert extra == {"loss": 1.5}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_retention(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        store.save(s, t)
+    assert store.latest_step() == 4
+    assert store.list_steps() == [3, 4]          # gc kept the newest 2
+
+
+def test_async_save_then_restore(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree(1)
+    store.save_async(10, t)
+    store.wait()
+    got, _ = store.restore(jax.tree.map(jnp.zeros_like, t), step=10)
+    np.testing.assert_array_equal(np.asarray(t["layers"]["w"]),
+                                  np.asarray(got["layers"]["w"]))
+
+
+def test_torn_checkpoint_invisible(tmp_path):
+    """A .tmp staging dir is never listed as a valid checkpoint."""
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(1, t)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert store.list_steps() == [1]
+    assert store.latest_step() == 1
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(1, t)
+    bad = dict(t)
+    bad["layers"] = {"w": jnp.zeros((5, 8)), "b": t["layers"]["b"]}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        store.restore(bad)
+
+
+def test_train_restart_continues(tmp_path):
+    """Kill-and-restart: restored run reproduces the uninterrupted run."""
+    from repro.configs import smoke_config
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.api import build
+    from repro.training import AdamW, make_train_step
+
+    cfg = smoke_config("llama3.2-1b")
+    model = build(cfg)
+    opt = AdamW(lr=1e-3)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=8, global_batch=2)
+    step = jax.jit(make_train_step(model.loss_fn, opt))
+
+    params = model.init_params(jax.random.key(0))
+    state = opt.init(params)
+    store = CheckpointStore(str(tmp_path))
+    # run 4 steps, checkpoint at 2
+    for i in range(4):
+        params, state, m = step(params, state, data.batch(i))
+        if i == 1:
+            store.save(i + 1, {"params": params, "opt": state},
+                       extra={"data_step": i + 1})
+    loss_direct = float(m["loss"])
+    # restart from the checkpoint and replay steps 2..3
+    like = {"params": model.init_params(jax.random.key(9)),
+            "opt": opt.init(model.init_params(jax.random.key(9)))}
+    restored, extra = store.restore(like)
+    p2, s2 = restored["params"], restored["opt"]
+    for i in range(extra["data_step"], 4):
+        p2, s2, m2 = step(p2, s2, data.batch(i))
+    assert abs(float(m2["loss"]) - loss_direct) < 1e-5
+
+
+# ------------------------------------------------------------- elastic
+def test_shrink_mesh_drops_data_slice():
+    devs = np.array(jax.devices() * 4).reshape(4, 1)  # fake (4,1) mesh
+    from jax.sharding import Mesh
+    mesh = Mesh(devs, ("data", "model"))
+    pc = ParallelConfig(mesh=mesh)
+    pc2 = shrink_mesh(pc, lost_axis="data", lost_index=2)
+    assert pc2.mesh.devices.shape == (3, 1)
+
+
+def test_shrink_mesh_rejects_model_axis():
+    devs = np.array(jax.devices() * 4).reshape(2, 2)
+    from jax.sharding import Mesh
+    mesh = Mesh(devs, ("data", "model"))
+    pc = ParallelConfig(mesh=mesh)
+    with pytest.raises(ValueError, match="not a pure-DP axis"):
+        shrink_mesh(pc, lost_axis="model", lost_index=0)
+
+
+def test_straggler_tracker_deweights_slow_site():
+    t = StragglerTracker(num_sites=4, threshold=2.0)
+    for _ in range(20):
+        for s in range(3):
+            t.observe(s, 0.1)
+        t.observe(3, 1.0)       # 10x slower than the fleet
+    w = t.weights()
+    assert all(w[:3] == 1.0)
+    assert w[3] < 0.5
+
+
+def test_straggler_tracker_recovers():
+    t = StragglerTracker(num_sites=2)
+    t.observe(0, 0.1)
+    t.observe(1, 1.0)
+    for _ in range(50):
+        t.observe(1, 0.1)       # site recovers
+    assert t.weights()[1] == 1.0

@@ -1,0 +1,174 @@
+"""Distribution-layer tests: param/cache specs, rules, HLO analyzer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis.hlo import analyze, parse_computations
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.distributed.param_sharding import (cache_specs_tree, param_specs)
+from repro.distributed.sharding import (ParallelConfig, axis_rules,
+                                        logical_to_pspec, make_rules)
+from repro.models.api import build
+
+
+class _FakeParallel(ParallelConfig):
+    """ParallelConfig with axis sizes faked (no real 256-device mesh)."""
+
+
+class _MeshSentinel:
+    """Stands in for a real 256-device mesh (only truthiness is used)."""
+
+
+def fake_parallel(sizes={"data": 16, "model": 16}, **kw):
+    pc = ParallelConfig(mesh=_MeshSentinel(), **kw)
+    object.__setattr__(pc, "_sizes", dict(sizes))
+    ParallelConfig.axis_sizes = property(
+        lambda self: getattr(self, "_sizes", None)
+        or (dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            if self.mesh is not None else {}))
+    return pc
+
+
+@pytest.fixture(scope="module")
+def parallel():
+    return fake_parallel()
+
+
+def _assert_no_duplicate_axes(spec_tree):
+    for leaf in jax.tree.leaves(spec_tree,
+                                is_leaf=lambda x: isinstance(x, P)):
+        seen = []
+        for entry in leaf:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                assert a not in seen, f"duplicate axis {a} in {leaf}"
+                seen.append(a)
+
+
+def _assert_divisible(spec_tree, shape_tree, sizes):
+    flat_s = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_x = jax.tree.leaves(shape_tree)
+    for spec, leaf in zip(flat_s, flat_x):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            n = 1
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                n *= sizes.get(a, 1)
+            assert leaf.shape[dim] % n == 0, (spec, leaf.shape, dim)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_valid_all_archs(arch, fsdp, parallel):
+    """Every arch x fsdp: no duplicate mesh axes, all dims divisible."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    shapes = model.param_specs()
+    specs = param_specs(cfg, parallel, shapes, fsdp=fsdp)
+    _assert_no_duplicate_axes(specs)
+    _assert_divisible(specs, shapes, {"data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v2-236b",
+                                  "zamba2-7b", "rwkv6-1.6b"])
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_valid(arch, shape, parallel):
+    from repro.configs import LONG_CONTEXT_ARCHS
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        pytest.skip("long_500k runs only for sub-quadratic archs")
+    cfg = get_config(arch)
+    model = build(cfg)
+    sh = SHAPES[shape]
+    cache = model.cache_specs(sh)
+    specs = cache_specs_tree(cfg, parallel, cache, sh)
+    _assert_no_duplicate_axes(specs)
+    _assert_divisible(specs, cache, {"data": 16, "model": 16})
+
+
+def test_tp_sharding_big_dims_covered(parallel):
+    """The big dense weights actually get a model-axis shard."""
+    cfg = get_config("llama3-8b")
+    model = build(cfg)
+    shapes = model.param_specs()
+    specs = param_specs(cfg, parallel, shapes, fsdp=False)
+    flat = dict(
+        (tuple(str(getattr(p, "key", p)) for p in path), s)
+        for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0])
+    wq = flat[("layers", "attn", "wq")]
+    assert "model" in jax.tree.leaves(wq, is_leaf=lambda x: x is not None) \
+        or any("model" in str(e) for e in wq)
+    mlp_gate = flat[("layers", "mlp", "w_gate")]
+    assert any("model" in str(e) for e in mlp_gate if e)
+
+
+def test_logical_rules_no_mesh_is_identity():
+    with axis_rules({}):
+        assert logical_to_pspec(["batch", "seq", None]) == P()
+
+
+def test_make_rules_decode_flash_layout(parallel):
+    cfg = get_config("llama3-8b")
+    rules = make_rules(cfg, parallel, "decode")
+    # flash-decoding default: cache seq over model, kv heads replicated
+    assert rules["cache_seq"] == ("model",)
+    assert rules["cache_kv_heads"] is None
+
+
+def test_make_rules_train_seq_parallel(parallel):
+    cfg = get_config("llama3-8b")
+    rules = make_rules(cfg, parallel, "train")
+    assert rules["seq"] == ("model",)
+    assert rules["fsdp"] == ("data",)
+
+
+# ---------------------------------------------------------- HLO analyzer
+def test_hlo_analyzer_counts_scan_trips():
+    from jax import lax
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = lax.scan(body, x, None, length=7)
+        return y
+
+    x = jnp.zeros((128, 128))
+    cost = analyze(jax.jit(f).lower(x, x).compile().as_text())
+    assert cost.flops == pytest.approx(7 * 2 * 128 ** 3)
+    assert 7 in cost.while_trips.values()
+
+
+def test_hlo_analyzer_parses_computations():
+    def f(x):
+        return jnp.sin(x) @ x
+
+    x = jnp.zeros((64, 64))
+    text = jax.jit(f).lower(x).compile().as_text()
+    comps = parse_computations(text)
+    assert any(c.is_entry for c in comps.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4))
+def test_hlo_analyzer_flops_property(n_pow, trips):
+    """Property: scanned-matmul FLOPs == trips x 2 x n^3 for any n, trips."""
+    from jax import lax
+    n = 2 ** n_pow * 8
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = lax.scan(body, x, None, length=trips)
+        return y
+
+    x = jnp.zeros((n, n))
+    cost = analyze(jax.jit(f).lower(x, x).compile().as_text())
+    assert cost.flops == pytest.approx(trips * 2 * n ** 3)

@@ -1,0 +1,33 @@
+"""Examples stay runnable: import/compile checks + one tiny end-to-end."""
+from __future__ import annotations
+
+import os
+import py_compile
+
+import pytest
+
+EX = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                  "examples")
+
+
+@pytest.mark.parametrize("name", ["quickstart.py", "greenferencing_week.py",
+                                  "train_100m.py", "serve_multisite.py"])
+def test_example_compiles(name):
+    py_compile.compile(os.path.join(EX, name), doraise=True)
+
+
+@pytest.mark.slow
+def test_serve_demo_end_to_end():
+    from repro.launch.serve import serve_demo
+    out = serve_demo(num_requests=4, num_sites=2, max_batch=2,
+                     verbose=False)
+    assert out["completed"] == 4
+
+
+@pytest.mark.slow
+def test_train_loop_smoke():
+    from repro.launch.train import train_loop
+    out = train_loop(arch="llama3.2-1b", steps=3, global_batch=2, seq_len=16,
+                     reduce_cfg=True, log_every=0)
+    assert out["steps_run"] == 3
+    assert all(l == l for l in out["losses"])        # finite

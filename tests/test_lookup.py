@@ -1,0 +1,137 @@
+"""Profiling lookup-table properties (paper K2 / §5.1 / Fig 13).
+
+The paper's measured trends must hold in the derived tables:
+  * higher TP or frequency → lower latency, higher power;
+  * higher load → latency and power inflate;
+  * the smallest TP cannot sustain high loads for mid/large classes;
+  * coding sustains lower loads than conversation (longer inputs);
+  * SLO-violating rows are excluded; full grid ≈ paper's ~2,000 rows.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, TPU_V5E
+
+
+@pytest.fixture(scope="module")
+def tables():
+    out = {}
+    for name in ("coding", "conversation"):
+        tr = make_trace(name, base_rps=1.0, seed=11)
+        out[name] = build_table(PAPER_MODEL, tr, H100_DGX)
+    return out
+
+
+def test_row_count_paper_scale(tables):
+    """Full 9x3x7x12 grid minus SLO cuts → paper-scale (~2,000 rows over
+    the two traces; the grid itself is 2,268 per trace before cuts)."""
+    n = len(tables["conversation"]) + len(tables["coding"])
+    assert 1000 < n < 4536, n
+
+
+def test_tp_monotonicity(tables):
+    """At fixed (c, f, l): larger TP → lower e2e, higher power."""
+    t = tables["conversation"]
+    checked = 0
+    for c in range(9):
+        rows = t.valid_rows(c)
+        by_fl = {}
+        for r in rows:
+            by_fl.setdefault((r.freq, r.load), []).append(r)
+        for (f, l), rs in by_fl.items():
+            rs.sort(key=lambda r: r.tp)
+            for a, b in zip(rs, rs[1:]):
+                assert b.e2e <= a.e2e * 1.001, (c, f, l, a.tp, b.tp)
+                assert b.power >= a.power * 0.999
+                checked += 1
+    assert checked > 50
+
+
+def test_freq_monotonicity(tables):
+    """At fixed (c, t, l): higher frequency → lower e2e, higher power."""
+    t = tables["conversation"]
+    checked = 0
+    for c in range(9):
+        by_tl = {}
+        for r in t.valid_rows(c):
+            by_tl.setdefault((r.tp, r.load), []).append(r)
+        for key, rs in by_tl.items():
+            rs.sort(key=lambda r: r.freq)
+            for a, b in zip(rs, rs[1:]):
+                assert b.e2e <= a.e2e * 1.001
+                assert b.power >= a.power * 0.999
+                checked += 1
+    assert checked > 50
+
+
+def test_load_monotonicity(tables):
+    """At fixed (c, t, f): higher load → e2e and power inflate."""
+    t = tables["conversation"]
+    checked = 0
+    for c in range(9):
+        by_tf = {}
+        for r in t.valid_rows(c):
+            by_tf.setdefault((r.tp, r.freq), []).append(r)
+        for key, rs in by_tf.items():
+            rs.sort(key=lambda r: r.load)
+            for a, b in zip(rs, rs[1:]):
+                assert b.e2e >= a.e2e * 0.999
+                assert b.power >= a.power * 0.999
+                checked += 1
+    assert checked > 50
+
+
+def test_small_tp_cannot_sustain_high_load(tables):
+    """Fig 13 grey cells: TP_min tops out below TP_max for large classes."""
+    t = tables["conversation"]
+    tp_min = min(H100_DGX.tp_degrees)
+    tp_max = max(H100_DGX.tp_degrees)
+    for c in (8,):                       # LL class
+        loads_min = [r.load for r in t.valid_rows(c) if r.tp == tp_min]
+        loads_max = [r.load for r in t.valid_rows(c) if r.tp == tp_max]
+        if loads_max:
+            assert (max(loads_min) if loads_min else 0.0) < max(loads_max)
+
+
+def test_coding_sustains_less_load(tables):
+    """Coding (longer inputs) saturates earlier than conversation."""
+    def max_load(t):
+        return max((r.load for r in t.rows), default=0.0)
+    assert max_load(tables["coding"]) <= max_load(tables["conversation"])
+
+
+def test_slo_filtering(tables):
+    """No surviving row violates the 5x-isolated TTFT/TBT SLOs."""
+    from repro.core.lookup import SLO_MULTIPLier, _prefill_time, _tbt_coeffs
+    t = tables["conversation"]
+    tp_max, f_max = max(H100_DGX.tp_degrees), H100_DGX.f_max
+    for c, cp in enumerate(t.classes):
+        ttft_slo = SLO_MULTIPLier * _prefill_time(
+            PAPER_MODEL, H100_DGX, cp.mean_in, tp_max, 1.0)
+        W, K = _tbt_coeffs(PAPER_MODEL, H100_DGX,
+                           cp.mean_in + cp.mean_out / 2, tp_max, 1.0)
+        tbt_slo = SLO_MULTIPLier * (W + K)
+        for r in t.valid_rows(c):
+            assert r.ttft <= ttft_slo * 1.0001
+            assert r.tbt <= tbt_slo * 1.0001
+
+
+def test_node_power_multiplier():
+    """Paper §5.1: whole-node power = 1.82x accelerator aggregate."""
+    from repro.power.model import NODE_MULTIPLIER, instance_peak_power
+    assert NODE_MULTIPLIER == pytest.approx(1.82)
+    p8 = instance_peak_power(H100_DGX, 8, 1.0, H100_DGX.f_max)
+    assert p8 == pytest.approx(8 * 700 * 1.82)   # 10.2 kW DGX box
+
+
+def test_tpu_profile_tables():
+    """The TPU v5e profile also yields a well-formed table (our target HW)."""
+    tr = make_trace("conversation", base_rps=1.0, seed=11)
+    t = build_table(PAPER_MODEL, tr, TPU_V5E)
+    assert len(t) > 200
+    assert all(r.tp in TPU_V5E.tp_degrees for r in t.rows)

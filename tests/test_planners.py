@@ -1,0 +1,165 @@
+"""Planner-L / Planner-S ILP tests (paper Figs 10/11) + hypothesis props.
+
+Every solved plan must satisfy the paper's constraints exactly:
+ (1) per-site GPU cap  (2) per-site power cap  (3) capacity ≥ load−slack
+ (4) one (f,l) per (s,c,t)  (6,7) bounded reconfigurations.
+Planner-S must stay inside Planner-L's GPU budget and absorb power drops
+(§5.3 elasticity).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import Plan, SiteSpec, plan_l
+from repro.core.planner_s import plan_s
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX
+
+GRID_L = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.0, 1.6, 2.0))
+
+
+@pytest.fixture(scope="module")
+def table():
+    tr = make_trace("conversation", base_rps=1.0, seed=11)
+    return build_table(PAPER_MODEL, tr, H100_DGX, **GRID_L)
+
+
+@pytest.fixture(scope="module")
+def sites():
+    return [SiteSpec("a", 512), SiteSpec("b", 256), SiteSpec("c", 128)]
+
+
+def _check_plan(plan: Plan, table, sites, power_w, load):
+    gpu = plan.gpu_used()
+    for s, site in enumerate(sites):
+        assert gpu[s] <= site.num_gpus + 1e-9
+    pw = plan.power_used()
+    for s in range(len(sites)):
+        assert pw[s] <= power_w[s] * (1 + 1e-9)
+    cap = plan.capacity()
+    for c in range(9):
+        assert cap[c] + plan.unserved[c] >= load[c] - 1e-6
+    # constraint (4): at most one (f, l) per (s, c, t)
+    seen = {}
+    for (s, r), x in zip(plan.columns, plan.counts):
+        if x > 0:
+            key = (s, r.cls, r.tp)
+            fl = (r.freq, r.load)
+            assert seen.setdefault(key, fl) == fl, key
+
+
+def test_plan_l_constraints(table, sites):
+    # per-class demand sized well inside the fleet's GPU supply (the SL
+    # class only sustains ~0.03 rps/GPU at this grid)
+    load = np.full(9, 5.0)
+    power = np.array([2e6, 1e6, 5e5])
+    p = plan_l(table, sites, power, load, objective="latency")
+    assert p.status in ("optimal", "fallback")
+    _check_plan(p, table, sites, power, load)
+    assert p.unserved.sum() < 1e-6          # ample power: everything served
+
+
+def test_plan_l_power_objective_uses_less_power(table, sites):
+    load = np.full(9, 10.0)
+    power = np.array([2e6, 1e6, 5e5])
+    p_lat = plan_l(table, sites, power, load, objective="latency")
+    p_pow = plan_l(table, sites, power, load, objective="power")
+    assert p_pow.total_power() <= p_lat.total_power() * 1.001
+    # latency objective buys latency with that extra power (Fig 16 trade)
+    assert p_lat.mean_e2e(load) <= p_pow.mean_e2e(load) * 1.001
+
+
+def test_plan_l_drought_creates_slack(table, sites):
+    """Extreme power drought: the ILP stays feasible and reports drops."""
+    load = np.full(9, 50.0)
+    power = np.array([2e4, 1e4, 1e4])       # ~nothing
+    p = plan_l(table, sites, power, load, objective="latency")
+    assert p.unserved.sum() > 0
+    _check_plan(p, table, sites, power, load)
+
+
+def test_plan_l_reconfig_bound(table, sites):
+    """R_L bounds (s,c,t) drains of live capacity between plans."""
+    load = np.full(9, 20.0)
+    power = np.array([2e6, 1e6, 5e5])
+    p0 = plan_l(table, sites, power, load, objective="latency")
+    # shift the load mix sharply; bound reconfigs to ~3%
+    load2 = np.roll(load, 4) * 1.5
+    p1 = plan_l(table, sites, power, load2, objective="latency",
+                old=p0, r_frac=0.03)
+    old_agg = p0.agg_by_sct()
+    new_agg = p1.agg_by_sct()
+    drains = sum(max(0, old_agg.get(k, 0) - new_agg.get(k, 0))
+                 for k in old_agg)
+    total_old = sum(old_agg.values())
+    assert drains <= max(1, 0.03 * total_old) + 1e-6
+
+
+def test_plan_s_respects_gpu_budget(table, sites):
+    load = np.full(9, 20.0)
+    power = np.array([2e6, 1e6, 5e5])
+    pl = plan_l(table, sites, power, load, objective="latency")
+    budget = pl.gpu_budget()
+    ps = plan_s(table, sites, power, load, budget, objective="latency")
+    used: dict = {}
+    for (s, r), x in zip(ps.columns, ps.counts):
+        if x > 0:
+            used[(s, r.cls, r.tp)] = used.get((s, r.cls, r.tp), 0) + x * r.tp
+    for k, v in used.items():
+        assert v <= budget[k] + 1e-9, k
+
+
+def test_plan_s_elasticity(table, sites):
+    """§5.3: 20% power drop absorbed by downclock/load-shed, no drops."""
+    load = np.full(9, 3.0)
+    power = np.array([2e6, 1e6, 5e5])
+    pl = plan_l(table, sites, power, load, objective="latency")
+    assert pl.unserved.sum() < 1e-6
+    ps = plan_s(table, sites, power * 0.8, load, pl.gpu_budget(),
+                objective="latency")
+    assert ps.unserved.sum() < load.sum() * 0.1
+    assert (ps.power_used() <= power * 0.8 + 1e-6).all()
+
+
+def test_plan_s_upclocks_on_power_surplus(table, sites):
+    """Extra power → Planner-S can only improve (or match) latency."""
+    load = np.full(9, 15.0)
+    power = np.array([1e6, 6e5, 3e5])
+    pl = plan_l(table, sites, power, load, objective="latency")
+    ps_lo = plan_s(table, sites, power, load, pl.gpu_budget())
+    ps_hi = plan_s(table, sites, power * 1.5, load, pl.gpu_budget())
+    if ps_lo.status != "empty" and ps_hi.status != "empty":
+        assert ps_hi.mean_e2e(load) <= ps_lo.mean_e2e(load) * 1.001
+
+
+def test_plan_s_frozen_groups_excluded(table, sites):
+    load = np.full(9, 15.0)
+    power = np.array([2e6, 1e6, 5e5])
+    pl = plan_l(table, sites, power, load, objective="latency")
+    budget = pl.gpu_budget()
+    frozen = {next(iter(budget))}
+    ps = plan_s(table, sites, power, load, budget, frozen_sct=frozen)
+    for (s, r), x in zip(ps.columns, ps.counts):
+        if x > 0:
+            assert (s, r.cls, r.tp) not in frozen
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_plan_l_feasible_for_random_demand(seed):
+    """Property: any (load, power) instance yields a constraint-true plan."""
+    tr = make_trace("conversation", base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, tr, H100_DGX,
+                        load_grid=(1.0, 8.0), freq_grid=(1.2, 2.0))
+    sites = [SiteSpec("a", 256), SiteSpec("b", 128)]
+    rng = np.random.default_rng(seed)
+    load = rng.uniform(0, 30, 9)
+    power = rng.uniform(1e4, 2e6, 2)
+    p = plan_l(table, sites, power, load, objective="latency",
+               time_limit=20.0)
+    _check_plan(p, table, sites, power, load)

@@ -1,0 +1,82 @@
+"""Right-sizing tests (paper §2.2, Figs 3/4/5)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.rightsizing import (PRICE_CALIFORNIA, PRICE_GERMANY,
+                                    PRICE_GERMANY_CRISIS, PRICE_US_ENTERPRISE,
+                                    PRICE_WIND_PPA, availability_at_percentile,
+                                    capability_per_price, fleet_provisioning,
+                                    opex_fraction, parity_year, provision_site)
+from repro.data.wind import make_default_fleet, make_site_population
+from repro.power.model import SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+
+
+def test_fig3_us_opex_fraction():
+    """Paper: 5-year US OPEX = 12.4% of a 30K GPU (18.6% of 20K)."""
+    assert opex_fraction(5, PRICE_US_ENTERPRISE, 30_000) == \
+        pytest.approx(0.124, abs=0.02)
+    assert opex_fraction(5, PRICE_US_ENTERPRISE, 20_000) == \
+        pytest.approx(0.186, abs=0.03)
+
+
+def test_fig3_germany_and_extremes():
+    """Paper: DE 27%/40.5%; California 35.6%; DE-crisis 61% (30K CAPEX)."""
+    assert opex_fraction(5, PRICE_GERMANY, 30_000) == pytest.approx(0.27, abs=0.04)
+    assert opex_fraction(5, PRICE_GERMANY, 20_000) == pytest.approx(0.405, abs=0.06)
+    assert opex_fraction(5, PRICE_CALIFORNIA, 30_000) == pytest.approx(0.356, abs=0.05)
+    assert opex_fraction(5, PRICE_GERMANY_CRISIS, 30_000) == pytest.approx(0.61, abs=0.08)
+
+
+def test_fig4_parity_years():
+    """C/P parity in ~2y at the 5th pctile and ~5y at the 20th (US avg)."""
+    fleet = make_default_fleet(seed=7)
+    lt = fleet.sites[0].long_term_mw
+    a5 = availability_at_percentile(lt, 5.0)
+    a20 = availability_at_percentile(lt, 20.0)
+    assert a5 > a20 > 0.85          # low percentile ⇒ near-full availability
+    y5 = parity_year(PRICE_US_ENTERPRISE, PRICE_WIND_PPA, a5)
+    y20 = parity_year(PRICE_US_ENTERPRISE, PRICE_WIND_PPA, a20)
+    assert y5 <= y20
+    assert y5 < 4.0 and y20 < 8.0
+
+
+def test_fig4_wind_cp_eventually_wins():
+    years = np.array([10.0])
+    cp_dc = capability_per_price(years, price_kwh=PRICE_US_ENTERPRISE)
+    cp_wind = capability_per_price(years, price_kwh=PRICE_WIND_PPA,
+                                   availability=0.93)
+    assert cp_wind[0] > cp_dc[0]
+
+
+def test_provision_site_pods():
+    fleet = make_default_fleet(seed=7)
+    s = fleet.sites[0]                       # iceland: 29 MW threshold
+    prov = provision_site(s.name, s.peak_mw, s.long_term_mw, pct=20.0)
+    assert prov.superpods == int(29.0 // SUPERPOD_PEAK_MW) \
+        or abs(prov.threshold_mw - 29.0) / 29.0 < 0.06
+    assert prov.gpus == prov.superpods * SUPERPOD_GPUS
+    assert prov.demand_mw <= prov.threshold_mw + 1e-9
+
+
+def test_fig5_fragmentation_tradeoff():
+    """Lower percentile ⇒ more aggregate GPUs but smaller min deployment."""
+    sites = make_site_population(60, seed=13)
+    provs_20 = fleet_provisioning(sites, pct=20.0, largest_fraction=0.2)
+    provs_5 = fleet_provisioning(sites, pct=5.0, largest_fraction=0.2)
+    tot20 = sum(p.gpus for p in provs_20)
+    tot5 = sum(p.gpus for p in provs_5)
+    assert tot20 >= tot5                    # higher pctile ⇒ more compute
+    min20 = min((p.superpods for p in provs_20 if p.superpods), default=0)
+    min5 = min((p.superpods for p in provs_5 if p.superpods), default=0)
+    assert min20 >= min5                    # ...and less fragmentation
+
+
+def test_fleet_provisioning_largest_only():
+    sites = make_site_population(40, seed=13)
+    provs = fleet_provisioning(sites, pct=20.0, largest_fraction=0.25)
+    assert len(provs) == 10
+    picked = {p.site_name for p in provs}
+    ranked = sorted(sites, key=lambda s: s.peak_mw, reverse=True)
+    assert picked == {s.name for s in ranked[:10]}

@@ -1,0 +1,139 @@
+"""Request Scheduler / packing / Configurator tests (paper §4)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import SiteSpec, plan_l
+from repro.core.scheduler import (Configurator, InstanceGroup,
+                                  RequestScheduler, smaller_classes)
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX
+
+
+@pytest.fixture(scope="module")
+def table():
+    tr = make_trace("conversation", base_rps=1.0, seed=11)
+    return build_table(PAPER_MODEL, tr, H100_DGX,
+                       load_grid=(0.25, 1.0, 4.0, 16.0),
+                       freq_grid=(1.2, 2.0))
+
+
+def _groups(table, cls_counts):
+    """InstanceGroups at site 0/1 alternating, given {cls: count}."""
+    out = []
+    for i, (c, n) in enumerate(cls_counts.items()):
+        rows = table.valid_rows(c)
+        r = max(rows, key=lambda r: r.load)
+        out.append(InstanceGroup(site=i % 2, row=r, count=n))
+    return out
+
+
+def test_smaller_classes_dominance():
+    """LS(6)/LM(7): packing may host strictly dominated classes only."""
+    assert smaller_classes(0) == []                    # SS hosts nothing
+    assert set(smaller_classes(4)) == {0, 1, 3}        # MM hosts SS,SM,MS
+    assert 6 not in smaller_classes(5)                 # ML cannot host LS
+    for c in range(9):
+        for d in smaller_classes(c):
+            assert d // 3 <= c // 3 and d % 3 <= c % 3 and d != c
+
+
+def test_wrr_split_proportional(table):
+    sched = RequestScheduler(2, packing=False)
+    groups = [InstanceGroup(0, max(table.valid_rows(0), key=lambda r: r.load), 3),
+              InstanceGroup(1, max(table.valid_rows(0), key=lambda r: r.load), 1)]
+    arr = np.zeros(9)
+    cap = sum(g.capacity for g in groups)
+    arr[0] = cap                                        # exactly at capacity
+    res = sched.dispatch(groups, arr)
+    assert res.dropped.sum() < 1e-9
+    np.testing.assert_allclose(res.per_site_load[0] / res.per_site_load[1],
+                               3.0, rtol=1e-6)
+
+
+def test_overflow_drops_without_packing(table):
+    sched = RequestScheduler(1, packing=False)
+    groups = _groups(table, {0: 1})
+    cap = groups[0].capacity
+    arr = np.zeros(9)
+    arr[0] = cap * 2
+    res = sched.dispatch(groups, arr)
+    assert res.served[0] == pytest.approx(cap)
+    assert res.dropped[0] == pytest.approx(cap)
+
+
+def test_packing_moves_smaller_into_larger(table):
+    """SS overflow lands on an under-loaded MM instance (LS→LM pattern)."""
+    sched = RequestScheduler(1, packing=True)
+    g_ss = _groups(table, {0: 1})[0]
+    g_mm = InstanceGroup(0, max(table.valid_rows(4), key=lambda r: r.load), 2)
+    arr = np.zeros(9)
+    overflow = g_ss.capacity * 0.5
+    arr[0] = g_ss.capacity + overflow       # SS overloaded
+    arr[4] = g_mm.capacity * 0.2            # MM nearly idle
+    res = sched.dispatch([g_ss, g_mm], arr)
+    free_mm = g_mm.capacity * 0.8
+    expect_packed = min(overflow, free_mm)
+    assert res.packed[0] == pytest.approx(expect_packed)
+    assert res.dropped[0] == pytest.approx(overflow - expect_packed)
+
+
+def test_packing_never_hosts_larger(table):
+    """A bigger class never lands on a smaller-class instance."""
+    sched = RequestScheduler(1, packing=True)
+    g_ss = _groups(table, {0: 2})[0]        # SS instances only
+    arr = np.zeros(9)
+    arr[8] = 5.0                            # LL demand, no LL instances
+    res = sched.dispatch([g_ss], arr)
+    assert res.served[8] == 0.0
+    assert res.dropped[8] == pytest.approx(5.0)
+
+
+def test_ll_has_no_packing_host(table):
+    """Fig 17: LL sees no packing improvement — nothing dominates LL."""
+    assert all(8 not in smaller_classes(c) for c in range(9))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dispatch_conservation(seed):
+    """Property: served + dropped == arrivals; no negative flows."""
+    tr = make_trace("conversation", base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, tr, H100_DGX,
+                        load_grid=(1.0, 8.0), freq_grid=(2.0,))
+    rng = np.random.default_rng(seed)
+    groups = []
+    for c in rng.choice(9, size=4, replace=False):
+        rows = table.valid_rows(int(c))
+        if rows:
+            groups.append(InstanceGroup(int(rng.integers(0, 3)),
+                                        rows[int(rng.integers(0, len(rows)))],
+                                        int(rng.integers(1, 4))))
+    arr = rng.uniform(0, 30, 9)
+    for packing in (False, True):
+        res = RequestScheduler(3, packing=packing).dispatch(groups, arr)
+        np.testing.assert_allclose(res.served + res.dropped, arr, rtol=1e-9)
+        assert (res.served >= -1e-12).all() and (res.dropped >= -1e-12).all()
+        # site loads account for everything served
+        np.testing.assert_allclose(res.per_site_load.sum(),
+                                   res.served.sum(), rtol=1e-9)
+
+
+def test_configurator_freezes_changed_groups(table):
+    sites = [SiteSpec("a", 256), SiteSpec("b", 128)]
+    load = np.full(9, 10.0)
+    power = np.array([2e6, 1e6])
+    p0 = plan_l(table, sites, power, load)
+    p1 = plan_l(table, sites, power * 0.4, load, old=p0, r_frac=1.0)
+    cfg = Configurator(tp_reshard_seconds=30.0)
+    cfg.apply(p0, p1, now=0.0)
+    frozen = cfg.frozen(now=1.0)
+    n_changes = cfg.reconfig_count(p0, p1)
+    if n_changes:
+        assert frozen                       # pending re-shards are frozen
+    assert cfg.frozen(now=31.0) == set()    # and thaw after the window

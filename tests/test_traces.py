@@ -1,0 +1,147 @@
+"""Wind + workload trace properties (paper §2.3, Figs 6/7/12).
+
+These tests pin the *measured properties the paper exploits*, not just
+shapes: predictability (lag-1 autocorrelation), complementarity (CoV
+reduction), right-sizing calibration (20th-pctile thresholds), and the
+trace length statistics of Fig 12.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.predictor import (SeriesPredictor, autocorr_by_granularity,
+                                  autocorrelation)
+from repro.data.wind import (PAPER_SITES, WEEK_SLOTS, lag1_autocorr,
+                             make_default_fleet, make_site_population)
+from repro.data.workload import make_trace
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return make_default_fleet(seed=7)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return {n: make_trace(n, base_rps=1.0, seed=11)
+            for n in ("coding", "conversation")}
+
+
+# --------------------------------------------------------------- wind
+def test_wind_lag1_autocorr(fleet):
+    """§2.3.1: autocorr ~0.99 at 15-min granularity."""
+    for s in fleet.sites:
+        ac = lag1_autocorr(s.series_mw)
+        assert ac > 0.97, (s.name, ac)
+
+
+def test_wind_percentile_calibration(fleet):
+    """Long-term 20th pctile == the paper's per-site MW thresholds."""
+    want = {name: thr for name, _, thr in PAPER_SITES}
+    for s in fleet.sites:
+        got = s.percentile_mw(20.0)
+        assert abs(got - want[s.name]) / want[s.name] < 0.05, (s.name, got)
+
+
+def test_wind_complementarity(fleet):
+    """Aggregate CoV well below the mean single-site CoV (paper: 0.475
+    aggregate vs high per-site variation)."""
+    agg_cov = fleet.aggregate_cov()
+    site_covs = [fleet.site_cov(i) for i in range(len(fleet.sites))]
+    assert agg_cov < 0.7
+    assert agg_cov < 0.8 * float(np.mean(site_covs))
+
+
+def test_wind_sites_not_simultaneously_dry(fleet):
+    """Very rarely do all sites drop below their threshold together."""
+    week = fleet.week()
+    thr = np.array([s.percentile_mw(20.0) for s in fleet.sites])
+    all_dry = (week < thr[:, None]).all(axis=0)
+    assert all_dry.mean() < 0.05
+
+
+def test_site_population_heavy_tailed():
+    sites = make_site_population(50, seed=13)
+    peaks = np.array([s.peak_mw for s in sites])
+    assert peaks.max() / np.median(peaks) > 2.0
+    assert len(sites) == 50
+    assert all(s.series_mw.shape[0] == WEEK_SLOTS for s in sites)
+
+
+# --------------------------------------------------------------- workload
+def test_workload_lag1_autocorr(traces):
+    """Fig 7: arrival autocorr > 0.99 at 15-min granularity."""
+    for name, tr in traces.items():
+        ac = autocorrelation(tr.arrivals.astype(float), 1)
+        assert ac > 0.98, (name, ac)
+
+
+def test_workload_autocorr_across_granularities(traces):
+    """Fig 7's x-axis (5-60 min windows): autocorr stays near 1."""
+    tr = traces["coding"]
+    out = autocorr_by_granularity(tr.arrivals.astype(float), [1, 2, 4])
+    for w, ac in out.items():
+        assert ac > 0.95, (w, ac)
+
+
+def test_fig12_input_lengths(traces):
+    """coding inputs ≈ 2x conversation at the median; both within ~8K."""
+    med_code = np.median(traces["coding"].input_lens)
+    med_conv = np.median(traces["conversation"].input_lens)
+    assert 1.5 < med_code / med_conv < 2.6
+    assert traces["coding"].input_lens.max() <= 8192
+
+
+def test_fig12_output_lengths(traces):
+    """conversation outputs ≈ 6x coding at the 95th pctile; within ~1K."""
+    p95_conv = np.percentile(traces["conversation"].output_lens, 95)
+    p95_code = np.percentile(traces["coding"].output_lens, 95)
+    assert 3.0 < p95_conv / p95_code < 10.0
+    assert traces["conversation"].output_lens.max() <= 1024
+
+
+def test_diurnal_pattern(traces):
+    """Fig 12 right: strong day/night contrast."""
+    for name, tr in traces.items():
+        day = tr.arrivals.reshape(7, -1)
+        # peak hour vs trough hour within a day
+        prof = day.mean(axis=0)
+        assert prof.max() / max(prof.min(), 1) > 1.5, name
+
+
+def test_classification_buckets(traces):
+    """9 classes, boundaries at the 33rd/66th pctiles of the week."""
+    tr = traces["coding"]
+    mix = tr.class_mix()
+    assert mix.shape == (9,)
+    assert abs(mix.sum() - 1.0) < 1e-9
+    # every input/output bucket carries roughly a third of the mass
+    in_mass = mix.reshape(3, 3).sum(1)
+    out_mass = mix.reshape(3, 3).sum(0)
+    for m in (*in_mass, *out_mass):
+        assert 0.2 < m < 0.5
+
+
+# --------------------------------------------------------------- predictors
+def test_persistence_predictor_near_oracle(fleet):
+    """Autocorr 0.99 ⇒ persistence error is small (the paper's argument)."""
+    s = fleet.sites[0]
+    p = SeriesPredictor(s.series_mw, kind="persistence")
+    err = p.errors()
+    assert np.median(err) < 0.2
+
+
+def test_predictor_margin_is_safe_sided(fleet):
+    s = fleet.sites[0]
+    p = SeriesPredictor(s.series_mw, kind="persistence", margin=0.1)
+    preds = np.array([p.predict(t) for t in range(1, 100)])
+    truth = s.series_mw[0:99]
+    # with a 10% haircut, predictions rarely exceed the previous value
+    assert (preds <= truth + 1e-9).mean() > 0.95
+
+
+def test_oracle_predictor_exact(fleet):
+    s = fleet.sites[0]
+    p = SeriesPredictor(s.series_mw, kind="oracle")
+    assert p.predict(5) == pytest.approx(s.series_mw[5])
