@@ -1,0 +1,108 @@
+"""Dispatch fast-path benchmark: columnar engine vs loop reference.
+
+Times ``RequestScheduler.dispatch`` (vectorized ``GroupTable`` path)
+against ``dispatch_reference`` (the per-``InstanceGroup`` Python loop)
+on randomized fleet-scale plans, verifies 1e-9 agreement on every run,
+and writes ``BENCH_dispatch.json`` at the repo root so future PRs can
+track the dispatch perf trajectory. Acceptance: >= 10x at 64 sites.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import Plan
+from repro.core.scheduler import GroupTable, RequestScheduler
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def synthetic_plan(table, rng, num_sites: int, cols_per_site: int = 6) -> Plan:
+    """Fleet-scale plan without an ILP solve: random rows per site with
+    random counts — the dispatch workload, not the planning workload."""
+    all_rows = table.rows
+    columns, counts = [], []
+    for s in range(num_sites):
+        for _ in range(cols_per_site):
+            columns.append((s, all_rows[int(rng.integers(0, len(all_rows)))]))
+            counts.append(int(rng.integers(1, 6)))
+    return Plan(columns=columns, counts=np.array(counts, int),
+                unserved=np.zeros(9), objective="latency", status="synthetic",
+                solve_seconds=0.0, num_sites=num_sites)
+
+
+def _check_match(got, want, context: str) -> float:
+    worst = 0.0
+    for f in ("served", "dropped", "mean_e2e", "packed", "per_site_load"):
+        a, b = getattr(got, f), getattr(want, f)
+        err = float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1.0)))
+        if err > 1e-9:
+            raise AssertionError(f"{context}: field {f} mismatch ({err:.2e})")
+        worst = max(worst, err)
+    return worst
+
+
+def bench_sites(table, num_sites: int, reps: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    plan = synthetic_plan(table, rng, num_sites)
+    sched = RequestScheduler(num_sites, packing=True)
+    groups = sched.groups_from_plan(plan)
+    gtable = plan.group_table()
+    # hot arrivals: ~40% above fleet capacity to exercise packing + drops
+    cap = plan.capacity()
+    arrivals = [cap * rng.uniform(0.2, 1.4, size=9) for _ in range(reps)]
+
+    worst = 0.0
+    t0 = time.perf_counter()
+    ref = [sched.dispatch_reference(groups, a) for a in arrivals]
+    t_ref = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    vec = [sched.dispatch(gtable, a) for a in arrivals]
+    t_vec = (time.perf_counter() - t0) / reps
+    for i, (g, w) in enumerate(zip(vec, ref)):
+        worst = max(worst, _check_match(g, w, f"{num_sites} sites rep {i}"))
+    return {"sites": num_sites, "groups": len(gtable), "reps": reps,
+            "ref_us": t_ref * 1e6, "vec_us": t_vec * 1e6,
+            "speedup": t_ref / max(t_vec, 1e-12), "max_rel_err": worst}
+
+
+def run(fast: bool = True):
+    trace = make_trace("coding", base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+    counts = (16, 64, 256) if fast else (16, 64, 256, 1024)
+    reps = 30 if fast else 50
+    results = {str(n): bench_sites(table, n, reps) for n in counts}
+
+    save("dispatch", results)
+    with open(os.path.join(REPO_ROOT, "BENCH_dispatch.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+    rows = []
+    for n, r in results.items():
+        rows.append(row(f"dispatch_vec_{n}sites", r["vec_us"],
+                        f"{r['groups']} groups: ref {r['ref_us']:.0f}us -> "
+                        f"vec {r['vec_us']:.0f}us ({r['speedup']:.1f}x, "
+                        f"err {r['max_rel_err']:.1e})"))
+    s64 = results["64"]["speedup"]
+    rows.append(row("dispatch_speedup_64sites", 0.0,
+                    f"{s64:.1f}x vectorized over loop reference "
+                    f"(target >= 10x)"))
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

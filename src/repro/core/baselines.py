@@ -113,14 +113,71 @@ def baseline_greedy_min_latency(table: LookupTable, sites: list[SiteSpec],
                 solve_seconds=0.0, num_sites=len(sites))
 
 
+def shed_counts_batch(plan: Plan, actual_power_w: np.ndarray) -> np.ndarray:
+    """Vectorized brownout shedding over a batch of power realizations.
+
+    ``actual_power_w``: [S, B] available watts per site for B scenarios
+    (e.g. the seconds between two Planner-S re-solves, where the plan —
+    and hence the shed geometry — is constant). Returns the surviving
+    instance counts, shape [n_columns, B].
+
+    Semantics match ``apply_power_reality_reference`` exactly: per site,
+    groups are shed whole-instance, worst power-per-served-rps first
+    (stable ties), until the site's draw fits its budget. The greedy
+    instance-by-instance loop closes to a cumsum: with groups in shed
+    order, group j sheds ``clip(ceil((need - cum_before_j)/power_j),
+    0, count_j)`` instances, where ``need = draw - budget``.
+    """
+    site, cls_, _, load, power, _ = plan.column_arrays()
+    counts = plan.counts.astype(float)
+    B = actual_power_w.shape[1]
+    out = np.repeat(counts[:, None], B, axis=1)
+    ratio = power / np.maximum(load, 1e-9)
+    for s in range(plan.num_sites):
+        cols = np.nonzero(site == s)[0]
+        if cols.size == 0:
+            continue
+        order = cols[np.argsort(-ratio[cols], kind="stable")]
+        grp_pow = counts[order] * power[order]
+        cum = np.cumsum(grp_pow)
+        need = cum[-1] - actual_power_w[s]                   # [B]
+        over = need > 0
+        if not over.any():
+            continue
+        before = cum - grp_pow                               # draw shed by prior groups
+        shed = np.ceil((need[None, over] - before[:, None])
+                       / np.maximum(power[order], 1e-12)[:, None])
+        shed = np.clip(shed, 0.0, counts[order, None])
+        out[order[:, None], np.nonzero(over)[0][None, :]] = (
+            counts[order, None] - shed)
+    return out
+
+
 def apply_power_reality(plan: Plan, actual_power_w: np.ndarray) -> Plan:
     """Brown out instances where the plan draws more than reality provides.
 
     Variability-agnostic baselines routinely overshoot during droughts; we
     shed whole instance groups (highest power-per-rps first — the site
     keeps its most power-efficient capacity alive, which is the DynamoLLM-
-    friendly assumption) until the site fits its actual power.
+    friendly assumption) until the site fits its actual power. Vectorized
+    via ``shed_counts_batch``; the original loop survives as
+    ``apply_power_reality_reference`` for equivalence testing.
     """
+    counts = shed_counts_batch(plan, actual_power_w[:, None])[:, 0]
+    _, cls_, _, load, _, _ = plan.column_arrays()
+    extra_unserved = np.bincount(cls_, weights=(plan.counts - counts) * load,
+                                 minlength=9)
+    real = Plan(columns=plan.columns, counts=counts.astype(int),
+                unserved=plan.unserved + extra_unserved,
+                objective=plan.objective, status=plan.status + "+reality",
+                solve_seconds=plan.solve_seconds, num_sites=plan.num_sites)
+    real._cols = plan.column_arrays()      # same columns -> share the cache
+    return real
+
+
+def apply_power_reality_reference(plan: Plan,
+                                  actual_power_w: np.ndarray) -> Plan:
+    """Original per-instance shedding loop (equivalence oracle)."""
     S = plan.num_sites
     counts = plan.counts.copy()
     extra_unserved = np.zeros(9)

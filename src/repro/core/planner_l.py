@@ -45,7 +45,15 @@ class SiteSpec:
 
 @dataclass
 class Plan:
-    """Solved assignment for one slot."""
+    """Solved assignment for one slot.
+
+    Derived views (``gpu_used``/``power_used``/``capacity``/``mean_e2e``)
+    are vectorized over cached per-column arrays (``column_arrays``) —
+    built lazily once per plan — so they stay O(columns) numpy bincounts
+    even when called every simulated second. ``group_table`` returns the
+    cached columnar dispatch table consumed by the Request Scheduler's
+    fast path.
+    """
     columns: list[tuple[int, Row]]          # (site, row) per column
     counts: np.ndarray                      # instances per column (int)
     unserved: np.ndarray                    # [9] rps that cannot be served
@@ -53,35 +61,63 @@ class Plan:
     status: str
     solve_seconds: float
     num_sites: int
+    _cols: Optional[tuple] = field(default=None, repr=False, compare=False)
+    _gtable: object = field(default=None, repr=False, compare=False)
 
-    # ---- derived views ----
+    def column_arrays(self) -> tuple:
+        """(site, cls, tp, load, power, e2e) parallel arrays, cached."""
+        if self._cols is None:
+            n = len(self.columns)
+            site = np.empty(n, dtype=np.intp)
+            cls_ = np.empty(n, dtype=np.intp)
+            tp = np.empty(n, dtype=float)
+            load = np.empty(n, dtype=float)
+            power = np.empty(n, dtype=float)
+            e2e = np.empty(n, dtype=float)
+            for i, (s, r) in enumerate(self.columns):
+                site[i] = s
+                cls_[i] = r.cls
+                tp[i] = r.tp
+                load[i] = r.load
+                power[i] = r.power
+                e2e[i] = r.e2e
+            self._cols = (site, cls_, tp, load, power, e2e)
+        return self._cols
+
+    def group_table(self):
+        """Cached columnar view of the active groups (fast dispatch)."""
+        if self._gtable is None:
+            from repro.core.scheduler import GroupTable
+            self._gtable = GroupTable.from_plan(self)
+        return self._gtable
+
+    # ---- derived views (vectorized) ----
     def gpu_used(self) -> np.ndarray:
-        out = np.zeros(self.num_sites)
-        for (s, r), x in zip(self.columns, self.counts):
-            out[s] += x * r.tp
-        return out
+        site, _, tp, _, _, _ = self.column_arrays()
+        return np.bincount(site, weights=self.counts * tp,
+                           minlength=self.num_sites)
 
     def power_used(self) -> np.ndarray:
-        out = np.zeros(self.num_sites)
-        for (s, r), x in zip(self.columns, self.counts):
-            out[s] += x * r.power
-        return out
+        site, _, _, _, power, _ = self.column_arrays()
+        return np.bincount(site, weights=self.counts * power,
+                           minlength=self.num_sites)
 
     def capacity(self) -> np.ndarray:
         """[9] provisioned serving capacity in rps per class."""
-        out = np.zeros(9)
-        for (s, r), x in zip(self.columns, self.counts):
-            out[r.cls] += x * r.load
-        return out
+        _, cls_, _, load, _, _ = self.column_arrays()
+        return np.bincount(cls_, weights=self.counts * load, minlength=9)
 
-    def mean_e2e(self, load_per_class: np.ndarray) -> float:
-        """Capacity-weighted mean E2E latency over served load."""
-        num = den = 0.0
-        for (s, r), x in zip(self.columns, self.counts):
-            if x > 0:
-                num += x * r.load * r.e2e
-                den += x * r.load
-        return num / max(den, 1e-9)
+    def mean_e2e(self, load_per_class: Optional[np.ndarray] = None) -> float:
+        """Provisioned-capacity-weighted mean E2E latency.
+
+        ``load_per_class`` is accepted for API compatibility but unused:
+        the weighting is by provisioned rps (counts x row load), which is
+        what the planner objective optimizes and what the comparisons in
+        tests/benchmarks have always measured.
+        """
+        _, _, _, load, _, e2e = self.column_arrays()
+        w = self.counts * load
+        return float((w * e2e).sum()) / max(float(w.sum()), 1e-9)
 
     def total_power(self) -> float:
         return float(self.power_used().sum())

@@ -66,6 +66,12 @@ class HeronRouter:
         a = self.straggler_alpha
         self._site_latency_ewma[s] = (1 - a) * self._site_latency_ewma[s] + a * latency
 
+    def observe_latencies(self, mask: np.ndarray, latency: np.ndarray) -> None:
+        """Vectorized EWMA update for all sites selected by ``mask``."""
+        a = self.straggler_alpha
+        ew = self._site_latency_ewma
+        ew[mask] = (1 - a) * ew[mask] + a * latency[mask]
+
     def _effective_power(self, power_w: np.ndarray) -> np.ndarray:
         p = power_w.copy()
         p[~self._site_alive] = 0.0
@@ -109,11 +115,11 @@ class HeronRouter:
     def dispatch(self, arrivals_rps: np.ndarray) -> DispatchResult:
         plan = self._plan_s or self._plan_l
         assert plan is not None
-        groups = self._dispatcher.groups_from_plan(plan)
-        res = self._dispatcher.dispatch(groups, arrivals_rps)
-        for s in range(len(self.sites)):
-            if res.per_site_load[s] > 0:
-                m = [g.row.e2e for g in groups if g.site == s]
-                if m:
-                    self.observe_latency(s, float(np.mean(m)))
+        table = plan.group_table()            # cached columnar fast path
+        res = self._dispatcher.dispatch(table, arrivals_rps)
+        # feed the straggler EWMA: per-site mean group e2e (stats cached
+        # on the table — they only depend on the plan)
+        loaded = (res.per_site_load > 0) & (table.site_groups > 0)
+        mean_e2e = table.site_e2e_sum / np.maximum(table.site_groups, 1)
+        self.observe_latencies(loaded, mean_e2e)
         return res

@@ -12,6 +12,28 @@ instances configured for larger classes (LS→LM, …), starting from the
 larger requests — improving latency when a class transiently overloads
 its own instances while a bigger class has headroom.
 
+Fast path
+---------
+Dispatch is the hot inner loop of the week/fine simulators (672 slots,
+900 s × 3 variants) and of fleet-scale benchmarks, so it has two
+implementations:
+
+  * ``dispatch`` — columnar/vectorized over a ``GroupTable``
+    (struct-of-arrays), used everywhere. Both the WRR pass and the
+    packing waterfall are numpy matrix ops: WRR shares come from a
+    per-class capacity bincount, packing uses the precomputed [9, 9]
+    class-dominance mask plus a stable argsort-by-e2e host order and a
+    cumsum waterfall per class (9 iterations total, never per-group).
+  * ``dispatch_reference`` — the original per-``InstanceGroup`` Python
+    loop, kept verbatim as the semantic reference. Equivalence to 1e-9
+    on randomized plans is enforced by tests/test_scheduler.py and by
+    benchmarks/bench_dispatch.py.
+
+Invariants both paths maintain: served + dropped == arrivals exactly
+per class; per-site loads sum to total served; packing only moves a
+class onto hosts whose class strictly dominates it (both buckets >=,
+not equal); hosts are filled in ascending-e2e order with stable ties.
+
 The Configurator applies TP/frequency changes between plans; groups with
 pending TP re-shards are frozen (excluded from Planner-S placement) for
 ``tp_reshard_seconds`` — the paper's C3 overhead, hidden DynamoLLM-style
@@ -43,6 +65,13 @@ def smaller_classes(c: int) -> list[int]:
             if (i, o) != (ic, oc)]
 
 
+# DOMINANCE[host_cls, req_cls]: a host of class ``host_cls`` may serve
+# overflow of class ``req_cls`` (strict dominance, both buckets).
+DOMINANCE = np.zeros((9, 9), dtype=bool)
+for _c in range(9):
+    DOMINANCE[_c, smaller_classes(_c)] = True
+
+
 @dataclass
 class InstanceGroup:
     """All instances at one (site, row) operating point."""
@@ -53,6 +82,79 @@ class InstanceGroup:
     @property
     def capacity(self) -> float:
         return self.count * self.row.load
+
+
+class GroupTable:
+    """Columnar (struct-of-arrays) view of a plan's instance groups.
+
+    One row per (site, lookup-row) group; all fields are parallel numpy
+    arrays so dispatch is pure vector math. Built once per plan (see
+    ``Plan.group_table``) and reused across every dispatch against that
+    plan; per-second brownouts only swap the ``counts`` column (see
+    ``with_counts``) while the static geometry (dominance-filtered host
+    masks, stable e2e host order) is shared.
+    """
+
+    __slots__ = ("site", "cls", "count", "load", "e2e", "power",
+                 "capacity", "num_sites", "order", "host_ok",
+                 "site_groups", "site_e2e_sum")
+
+    def __init__(self, site: np.ndarray, cls: np.ndarray, count: np.ndarray,
+                 load: np.ndarray, e2e: np.ndarray, power: np.ndarray,
+                 num_sites: int):
+        self.site = np.asarray(site, dtype=np.intp)
+        self.cls = np.asarray(cls, dtype=np.intp)
+        self.count = np.asarray(count, dtype=float)
+        self.load = np.asarray(load, dtype=float)
+        self.e2e = np.asarray(e2e, dtype=float)
+        self.power = np.asarray(power, dtype=float)
+        self.capacity = self.count * self.load
+        self.num_sites = int(num_sites)
+        # stable ascending-e2e order == the reference's stable host sort
+        self.order = np.argsort(self.e2e, kind="stable")
+        # host_ok[g, c]: group g's class strictly dominates class c
+        self.host_ok = DOMINANCE[self.cls]
+        # per-site group stats for the router's straggler EWMA (static)
+        self.site_groups = np.bincount(self.site, minlength=self.num_sites)
+        self.site_e2e_sum = np.bincount(self.site, weights=self.e2e,
+                                        minlength=self.num_sites)
+
+    def __len__(self) -> int:
+        return self.site.shape[0]
+
+    @classmethod
+    def from_groups(cls, groups: list[InstanceGroup],
+                    num_sites: int) -> "GroupTable":
+        return cls(site=np.array([g.site for g in groups], dtype=np.intp),
+                   cls=np.array([g.row.cls for g in groups], dtype=np.intp),
+                   count=np.array([g.count for g in groups], dtype=float),
+                   load=np.array([g.row.load for g in groups], dtype=float),
+                   e2e=np.array([g.row.e2e for g in groups], dtype=float),
+                   power=np.array([g.row.power for g in groups], dtype=float),
+                   num_sites=num_sites)
+
+    @classmethod
+    def from_plan(cls, plan: Plan, active_only: bool = True) -> "GroupTable":
+        site, cl, tp, load, power, e2e = plan.column_arrays()
+        counts = plan.counts.astype(float)
+        if active_only:
+            m = counts > 0
+            site, cl, load, power, e2e, counts = (
+                site[m], cl[m], load[m], power[m], e2e[m], counts[m])
+        return cls(site=site, cls=cl, count=counts, load=load, e2e=e2e,
+                   power=power, num_sites=plan.num_sites)
+
+    def with_counts(self, counts: np.ndarray) -> "GroupTable":
+        """Cheap shallow copy with a different ``count`` column (brownouts)."""
+        t = GroupTable.__new__(GroupTable)
+        for name in GroupTable.__slots__:       # share all static geometry
+            setattr(t, name, getattr(self, name))
+        t.count = np.asarray(counts, dtype=float)
+        t.capacity = t.count * t.load
+        return t
+
+    def total_power(self) -> float:
+        return float((self.count * self.power).sum())
 
 
 @dataclass
@@ -82,13 +184,72 @@ class RequestScheduler:
         return [InstanceGroup(site=s, row=r, count=int(x))
                 for s, r, x in plan.active()]
 
-    def dispatch(self, groups: list[InstanceGroup], arrivals: np.ndarray,
-                 backlog: np.ndarray | None = None) -> DispatchResult:
+    # ---------------- vectorized fast path ----------------
+    def dispatch(self, groups, arrivals: np.ndarray) -> DispatchResult:
         """Route ``arrivals`` [9] rps across ``groups`` by WRR weights.
 
-        Queueing beyond rated capacity inflates latency via a fluid
-        backlog (Little's law); arrivals beyond 2x capacity are dropped.
+        ``groups`` may be a ``GroupTable`` (fast path, preferred) or a
+        ``list[InstanceGroup]`` (converted on the fly). Overflow beyond
+        rated capacity that packing cannot place is reported as dropped;
+        the fluid backlog / 2x queueing model lives in the caller
+        (``simulate_slot_fine``), which re-offers queued load as demand.
         """
+        if not isinstance(groups, GroupTable):
+            groups = GroupTable.from_groups(groups, self.num_sites)
+        t = groups
+        S = self.num_sites
+        load = arrivals.astype(float)
+        cap9 = np.bincount(t.cls, weights=t.capacity, minlength=9)
+
+        # ---- first pass: own-class WRR (∝ group capacity) ----
+        take = np.minimum(load, cap9)
+        take[cap9 <= 0] = 0.0
+        frac = np.divide(take, cap9, out=np.zeros(9), where=cap9 > 0)
+        share = t.capacity * frac[t.cls]                       # [n]
+        free = t.capacity - share
+        served = take.copy()
+        overflow = load - take
+        e2e_num = np.bincount(t.cls, weights=share * t.e2e, minlength=9)
+        per_site = np.bincount(t.site, weights=share, minlength=S)
+        packed = np.zeros(9)
+
+        # ---- packing: overflow of smaller classes into larger hosts ----
+        if self.packing and (overflow > 1e-12).any():
+            order = t.order
+            site_o = t.site[order]
+            e2e_o = t.e2e[order]
+            host_ok_o = t.host_ok[order]
+            free_o = free[order]
+            for c in range(8, -1, -1):        # larger requests first (paper)
+                ov = overflow[c]
+                if ov <= 1e-12:
+                    continue
+                hosts = np.nonzero(host_ok_o[:, c] & (free_o > 1e-12))[0]
+                if hosts.size == 0:
+                    continue
+                # waterfall: fill hosts in ascending-e2e order via cumsum
+                cum = np.cumsum(free_o[hosts])
+                taken = np.diff(np.minimum(cum, ov), prepend=0.0)
+                moved = min(ov, cum[-1])
+                free_o[hosts] -= taken
+                overflow[c] -= moved
+                served[c] += moved
+                packed[c] += moved
+                # a smaller request on a larger-class instance finishes
+                # no slower than the host class's e2e
+                e2e_num[c] += float((taken * e2e_o[hosts]).sum())
+                per_site += np.bincount(site_o[hosts], weights=taken,
+                                        minlength=S)
+        dropped = overflow
+        mean_e2e = np.where(served > 0, e2e_num / np.maximum(served, 1e-12), 0.0)
+        return DispatchResult(served=served, dropped=dropped, mean_e2e=mean_e2e,
+                              packed=packed, per_site_load=per_site)
+
+    # ---------------- loop reference (equivalence oracle) ----------------
+    def dispatch_reference(self, groups: list[InstanceGroup],
+                           arrivals: np.ndarray) -> DispatchResult:
+        """Original per-object dispatch loop, kept as the semantic oracle
+        for the vectorized path (tests assert 1e-9 agreement)."""
         S = self.num_sites
         served = np.zeros(9)
         dropped = np.zeros(9)
@@ -134,8 +295,6 @@ class RequestScheduler:
                     overflow[c] -= take
                     served[c] += take
                     packed[c] += take
-                    # a smaller request on a larger-class instance finishes
-                    # no slower than the host class's e2e
                     e2e_num[c] += take * g.row.e2e
                     per_site[g.site] += take
         dropped = overflow

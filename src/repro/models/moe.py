@@ -20,7 +20,18 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:                                   # jax >= 0.6: top-level, check_vma kwarg
+    from jax import shard_map as _shard_map
+    _REPLICATION_KW = "check_vma"
+except ImportError:                    # older jax: experimental, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _REPLICATION_KW = "check_rep"
+
+
+def shard_map(*args, check_vma=None, **kwargs):
+    if check_vma is not None:
+        kwargs[_REPLICATION_KW] = check_vma
+    return _shard_map(*args, **kwargs)
 
 from repro.distributed.sharding import ParallelConfig, shard
 from repro.models.layers import dense_init

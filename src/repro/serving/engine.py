@@ -16,6 +16,25 @@ into. Design:
 Cache insertion is family-agnostic: every cache leaf is [B]-batched at
 axis 0 (1-D leaves like ``pos``) or axis 1 (stacked [L, B, ...] leaves),
 so one ``dynamic_update_slice`` rule covers GQA/MLA/SSM/hybrid/enc-dec.
+
+Compile-cache discipline: prefill is jitted per input shape, so admitting
+raw prompts would compile one program per distinct prompt length. Instead
+``_admit`` chunks the prompt to its largest power-of-2 prefix (prefill)
+and feeds the remaining tokens through the already-compiled single-token
+decode — numerically identical to a full-length prefill for every cache
+family (attention and recurrent alike, since decode *is* the sequential
+continuation), while keeping the prefill compile cache at O(log max_seq)
+entries. Right-padding instead would corrupt recurrent/SSM states and
+shift the last-token logits, so it is deliberately not used. Trade-off:
+the tail is up to bucket-1 (~S/2) serial B=1 decode steps, so admission
+is O(S) in the worst case — cheap per step once compiled, but a future
+PR could chunk the tail through descending power-of-2 prefill chunks if
+prefill ever learns to continue from an existing cache.
+
+Sampling honours per-request temperatures within one batched decode:
+``sample`` takes a per-row temperature vector, so greedy (t == 0) and
+sampled (t > 0) requests coexist in the same step without collapsing the
+batch to a single temperature.
 """
 from __future__ import annotations
 
@@ -120,6 +139,8 @@ class ServingEngine:
         self.metrics = EngineMetrics(completed=[])
         self._decode = jax.jit(model.decode_fn)
         self._prefill = jax.jit(model.prefill_fn)
+        # zeros template for the B=1 prompt-tail continuation (immutable)
+        self._b1_cache = T.make_decode_cache(self.cfg, 1, max_seq)
 
     # --------------------------------------------------------------- admit
     def submit(self, req: Request) -> None:
@@ -137,7 +158,11 @@ class ServingEngine:
             if slot is None:
                 return
             req = self.waiting.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]     # [1, S]
+            S = len(req.prompt)
+            # largest power-of-2 prefix through prefill; the tail goes
+            # through the already-compiled decode (see module docstring)
+            bucket = 1 << (max(S, 1).bit_length() - 1)
+            prompt = jnp.asarray(req.prompt[:bucket], jnp.int32)[None]
             inputs = {"tokens": prompt}
             if self.cfg.family == "encdec":
                 inputs["frames"] = jnp.zeros(
@@ -148,6 +173,15 @@ class ServingEngine:
                     (1, self.cfg.num_prefix_embeddings, self.cfg.d_model),
                     jnp.dtype(self.cfg.dtype))
             logits, req_cache = self._prefill(self.params, inputs)
+            if bucket < S:
+                # continue the prompt token-by-token at B=1: decode(prefill
+                # of a prefix) is the exact sequential continuation, so the
+                # final logits/cache match a full-length prefill
+                req_cache = insert_cache(self._b1_cache, req_cache, 0)
+                for tok in req.prompt[bucket:]:
+                    logits, req_cache = self._decode(
+                        self.params, {"token": jnp.asarray([tok], jnp.int32)},
+                        req_cache)
             self._key, k = jax.random.split(self._key)
             tok = sample(logits, k, req.temperature)
             req.tokens.append(int(tok[0]))
@@ -171,8 +205,8 @@ class ServingEngine:
         temps = np.zeros(self.max_batch, np.float32)
         for i in live:
             temps[i] = self.active[i].temperature
-        toks = sample(logits, k, 0.0) if not temps.any() else sample(
-            logits, k, float(temps.max()))
+        # per-row temperatures: greedy and sampled requests coexist
+        toks = sample(logits, k, jnp.asarray(temps))
         toks_np = np.asarray(toks)
         self.last_token = toks
         self.metrics.steps += 1

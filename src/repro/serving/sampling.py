@@ -8,16 +8,21 @@ import jax.numpy as jnp
 
 
 @functools.partial(jax.jit, static_argnames=("top_k",))
-def sample(logits, key, temperature: float = 0.0, top_k: int = 0):
+def sample(logits, key, temperature=0.0, top_k: int = 0):
     """logits: [B, V] -> tokens [B] int32.
 
-    temperature == 0 is greedy. top_k > 0 restricts to the k most likely.
+    ``temperature`` is a scalar or a per-row [B] vector — rows with
+    temperature == 0 decode greedily while the rest sample, so greedy and
+    sampled requests coexist in one continuously-batched decode step.
+    top_k > 0 restricts sampling to the k most likely tokens.
     """
+    temp = jnp.asarray(temperature, jnp.float32)
+    tcol = temp[..., None] if temp.ndim == 1 else temp     # [B, 1] | scalar
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    t = jnp.maximum(temperature, 1e-6)
+    t = jnp.maximum(tcol, 1e-6)
     scaled = logits.astype(jnp.float32) / t
     if top_k:
         kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
     sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
-    return jnp.where(temperature <= 0.0, greedy, sampled)
+    return jnp.where(temp <= 0.0, greedy, sampled)

@@ -18,6 +18,25 @@ Fluid-flow semantics: requests are rps flows per class; queueing beyond
 rated capacity accrues in a per-class fluid backlog whose Little's-law
 wait adds to the table E2E. 'Goodput' is served rps (the paper's "requests
 being actually served").
+
+Fast path
+---------
+Both simulators run on the columnar dispatch engine (``GroupTable``):
+
+  * the AR(1) power wiggle is generated for all sites at once with a
+    first-order ``scipy.signal.lfilter`` (bit-identical to the scalar
+    recursion — same draws, same order, same arithmetic);
+  * ``simulate_slot_fine`` batches the seconds between two Planner-S
+    re-solves: the plan — and hence the shed geometry — is constant
+    inside a segment, so brownout shedding for the whole segment is one
+    vectorized ``shed_counts_batch`` call and each second's dispatch is
+    a cheap ``GroupTable.with_counts`` + vector dispatch (the per-second
+    Python loop only threads the fluid backlog, which is inherently
+    sequential);
+  * the Planner-S re-solve schedule is float-safe: re-solves fire at
+    multiples of ``planner_s_period`` (for integer periods this is
+    exactly the old ``t % period == 0`` schedule; non-integer periods
+    no longer crash or alias).
 """
 from __future__ import annotations
 
@@ -25,15 +44,16 @@ from dataclasses import dataclass, field
 from typing import Callable, Literal, Optional
 
 import numpy as np
+from scipy.signal import lfilter
 
 from repro.core.baselines import (apply_power_reality,
                                   baseline_greedy_min_latency,
-                                  baseline_wrr_dynamollm)
+                                  baseline_wrr_dynamollm, shed_counts_batch)
 from repro.core.lookup import LookupTable
 from repro.core.planner_l import Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
-from repro.core.scheduler import Configurator, RequestScheduler
+from repro.core.scheduler import Configurator, GroupTable, RequestScheduler
 
 SchedulerName = Literal["heron", "heron_min_power", "wrr_dynamollm",
                         "greedy_min_latency"]
@@ -125,15 +145,29 @@ def simulate_week(scheduler: SchedulerName, table: LookupTable,
         old = p
         # reality: any plan drawing beyond actual generation browns out
         real = apply_power_reality(p, actual_w)
-        groups = dispatcher.groups_from_plan(real)
-        res = dispatcher.dispatch(groups, loads)
-        dropped = res.dropped
-        out.append(SlotMetrics(served=res.served, dropped=dropped,
+        gtable = real.group_table()
+        res = dispatcher.dispatch(gtable, loads)
+        out.append(SlotMetrics(served=res.served, dropped=res.dropped,
                                mean_e2e=res.aggregate_e2e(),
-                               power_w=float(sum(g.count * g.row.power
-                                                 for g in groups)),
+                               power_w=gtable.total_power(),
                                solve_s=p.solve_seconds, reconfigs=reconfigs))
     return WeekResult(name=scheduler, slots=out)
+
+
+def ar1_wiggle(rng: np.random.Generator, num_sites: int, seconds: int,
+               noise: float, phi: float = 0.995) -> np.ndarray:
+    """[S, seconds] AR(1) log-wiggle, variance-matched to ``noise``.
+
+    Vectorized over sites and time with a first-order linear filter;
+    draws (and results) are identical to the scalar recursion
+    ``w[t] = phi*w[t-1] + sig*eps[t]`` with row-major eps draws.
+    """
+    wig = np.zeros((num_sites, seconds))
+    if seconds > 1:
+        sig = noise * np.sqrt(1 - phi * phi)
+        eps = rng.standard_normal((num_sites, seconds - 1))
+        wig[:, 1:] = lfilter([sig], [1.0, -phi], eps, axis=1)
+    return wig
 
 
 # ------------------------------------------------------------------
@@ -166,13 +200,9 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     rng = np.random.default_rng(seed)
     S = len(sites)
     gpu_budget = base_plan.gpu_budget()
-    # per-second power: AR(1) multiplicative wiggle
-    wig = np.zeros((S, seconds))
-    for s in range(S):
-        phi = 0.995
-        sig = power_noise * np.sqrt(1 - phi * phi)
-        for t in range(1, seconds):
-            wig[s, t] = phi * wig[s, t - 1] + sig * rng.standard_normal()
+    period = max(float(planner_s_period), 1.0)
+    # per-second power: AR(1) multiplicative wiggle (vectorized)
+    wig = ar1_wiggle(rng, S, seconds, power_noise)
     pw = power_w_slot[:, None] * power_scale * np.exp(wig)
     arr = rng.poisson(np.maximum(arrivals_rps, 0)[:, None],
                       size=(9, seconds)).astype(float)
@@ -191,8 +221,9 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
         cls_den = np.zeros(9)
         dropped_total = 0.0
         plan = base_plan
-        for t in range(seconds):
-            if use_s and t % int(planner_s_period) == 0:
+        t = 0
+        while t < seconds:
+            if use_s:
                 obs_load = arr[:, max(0, t - 5): t + 1].mean(axis=1)
                 # plan for a small headroom over observed load
                 p = plan_s(table, sites, pw[:, t], obs_load * 1.1,
@@ -200,27 +231,35 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
                 if p.status != "empty":
                     plan = p
                     solves.append(p.solve_seconds)
-            real = apply_power_reality(plan, pw[:, t])
-            groups = dispatcher.groups_from_plan(real)
-            demand = arr[:, t] + backlog
-            res = dispatcher.dispatch(groups, demand)
-            cap = np.zeros(9)
-            for g in groups:
-                cap[g.row.cls] += g.capacity
-            # fluid backlog: what was neither served nor dropped waits
-            backlog = np.maximum(demand - res.served - res.dropped, 0.0)
-            # cap the queue at 2x/s of capacity; beyond that it drops
-            overflow = np.maximum(backlog - 2.0 * cap, 0.0)
-            backlog -= overflow
-            drop = res.dropped + overflow
-            dropped_total += float(drop.sum())
-            wait = np.where(cap > 0, backlog / np.maximum(cap, 1e-9), 0.0)
-            e2e_c = res.mean_e2e + wait
-            m = res.served > 0
-            e2e_series[t] = (float((e2e_c[m] * res.served[m]).sum()
-                                   / res.served[m].sum()) if m.any() else 0.0)
-            cls_num += e2e_c * res.served
-            cls_den += res.served
+                # next re-solve at the next multiple of the period
+                next_solve = (np.floor(t / period) + 1) * period
+                t_end = min(seconds, int(np.ceil(next_solve)))
+            else:
+                t_end = seconds
+            # ---- segment [t, t_end): the plan (and shed geometry) is
+            # constant, so brown out the whole segment in one shot ----
+            seg_counts = shed_counts_batch(plan, pw[:, t:t_end])
+            gtable = GroupTable.from_plan(plan, active_only=False)
+            for tt in range(t, t_end):
+                tbl = gtable.with_counts(seg_counts[:, tt - t])
+                demand = arr[:, tt] + backlog
+                res = dispatcher.dispatch(tbl, demand)
+                cap = np.bincount(tbl.cls, weights=tbl.capacity, minlength=9)
+                # fluid backlog: what was neither served nor dropped waits
+                backlog = np.maximum(demand - res.served - res.dropped, 0.0)
+                # cap the queue at 2x/s of capacity; beyond that it drops
+                overflow = np.maximum(backlog - 2.0 * cap, 0.0)
+                backlog -= overflow
+                drop = res.dropped + overflow
+                dropped_total += float(drop.sum())
+                wait = np.where(cap > 0, backlog / np.maximum(cap, 1e-9), 0.0)
+                e2e_c = res.mean_e2e + wait
+                m = res.served > 0
+                e2e_series[tt] = (float((e2e_c[m] * res.served[m]).sum()
+                                        / res.served[m].sum()) if m.any() else 0.0)
+                cls_num += e2e_c * res.served
+                cls_den += res.served
+            t = t_end
         results_e2e[variant] = e2e_series
         results_drop[variant] = dropped_total
         results_cls[variant] = cls_num / np.maximum(cls_den, 1e-9)

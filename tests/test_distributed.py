@@ -5,8 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.analysis.hlo import analyze, parse_computations
@@ -156,10 +154,12 @@ def test_hlo_analyzer_parses_computations():
     assert any(c.is_entry for c in comps.values())
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(2, 6), st.integers(1, 4))
+@pytest.mark.parametrize("n_pow,trips",
+                         [(2, 1), (2, 4), (3, 2), (4, 3), (5, 4), (6, 1),
+                          (6, 4), (3, 1), (4, 2), (5, 1)])
 def test_hlo_analyzer_flops_property(n_pow, trips):
-    """Property: scanned-matmul FLOPs == trips x 2 x n^3 for any n, trips."""
+    """Property: scanned-matmul FLOPs == trips x 2 x n^3 for any n, trips.
+    Seeded parametrization stands in for hypothesis (unavailable here)."""
     from jax import lax
     n = 2 ** n_pow * 8
 

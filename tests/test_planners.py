@@ -1,4 +1,4 @@
-"""Planner-L / Planner-S ILP tests (paper Figs 10/11) + hypothesis props.
+"""Planner-L / Planner-S ILP tests (paper Figs 10/11) + seeded props.
 
 Every solved plan must satisfy the paper's constraints exactly:
  (1) per-site GPU cap  (2) per-site power cap  (3) capacity ≥ load−slack
@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
@@ -149,10 +147,10 @@ def test_plan_s_frozen_groups_excluded(table, sites):
             assert (s, r.cls, r.tp) not in frozen
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", range(10))
 def test_plan_l_feasible_for_random_demand(seed):
-    """Property: any (load, power) instance yields a constraint-true plan."""
+    """Property: any (load, power) instance yields a constraint-true plan.
+    Seeded parametrization stands in for hypothesis (unavailable here)."""
     tr = make_trace("conversation", base_rps=1.0, seed=11)
     table = build_table(PAPER_MODEL, tr, H100_DGX,
                         load_grid=(1.0, 8.0), freq_grid=(1.2, 2.0))

@@ -1,15 +1,24 @@
-"""Request Scheduler / packing / Configurator tests (paper §4)."""
+"""Request Scheduler / packing / Configurator tests (paper §4).
+
+Includes the property-style equivalence suite for the columnar fast
+path: on randomized plans/arrivals (packing on and off) the vectorized
+``dispatch`` and the vectorized ``Plan`` views must match their loop
+references to 1e-9. Seeded parametrization stands in for hypothesis
+(not available in this container) — each seed is an independent random
+instance of the property.
+"""
 from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import PAPER_MODEL
+from repro.core.baselines import (apply_power_reality,
+                                  apply_power_reality_reference,
+                                  shed_counts_batch)
 from repro.core.lookup import build_table
-from repro.core.planner_l import SiteSpec, plan_l
-from repro.core.scheduler import (Configurator, InstanceGroup,
+from repro.core.planner_l import Plan, SiteSpec, plan_l
+from repro.core.scheduler import (Configurator, GroupTable, InstanceGroup,
                                   RequestScheduler, smaller_classes)
 from repro.data.workload import make_trace
 from repro.power.model import H100_DGX
@@ -31,6 +40,30 @@ def _groups(table, cls_counts):
         r = max(rows, key=lambda r: r.load)
         out.append(InstanceGroup(site=i % 2, row=r, count=n))
     return out
+
+
+def _random_groups(table, rng, num_sites=3, n_groups=6):
+    groups = []
+    for c in rng.choice(9, size=n_groups, replace=True):
+        rows = table.valid_rows(int(c))
+        if rows:
+            groups.append(InstanceGroup(int(rng.integers(0, num_sites)),
+                                        rows[int(rng.integers(0, len(rows)))],
+                                        int(rng.integers(1, 5))))
+    return groups
+
+
+def _random_plan(table, rng, num_sites=3, n_cols=12) -> Plan:
+    """Synthetic plan: random (site, row) columns with random counts
+    (including zeros — inactive columns must be inert everywhere)."""
+    all_rows = table.rows
+    columns = [(int(rng.integers(0, num_sites)),
+                all_rows[int(rng.integers(0, len(all_rows)))])
+               for _ in range(n_cols)]
+    counts = rng.integers(0, 5, size=n_cols)
+    return Plan(columns=columns, counts=np.asarray(counts, int),
+                unserved=np.zeros(9), objective="latency", status="synthetic",
+                solve_seconds=0.0, num_sites=num_sites)
 
 
 def test_smaller_classes_dominance():
@@ -99,21 +132,11 @@ def test_ll_has_no_packing_host(table):
     assert all(8 not in smaller_classes(c) for c in range(9))
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_dispatch_conservation(seed):
+@pytest.mark.parametrize("seed", range(20))
+def test_dispatch_conservation(table, seed):
     """Property: served + dropped == arrivals; no negative flows."""
-    tr = make_trace("conversation", base_rps=1.0, seed=11)
-    table = build_table(PAPER_MODEL, tr, H100_DGX,
-                        load_grid=(1.0, 8.0), freq_grid=(2.0,))
     rng = np.random.default_rng(seed)
-    groups = []
-    for c in rng.choice(9, size=4, replace=False):
-        rows = table.valid_rows(int(c))
-        if rows:
-            groups.append(InstanceGroup(int(rng.integers(0, 3)),
-                                        rows[int(rng.integers(0, len(rows)))],
-                                        int(rng.integers(1, 4))))
+    groups = _random_groups(table, rng)
     arr = rng.uniform(0, 30, 9)
     for packing in (False, True):
         res = RequestScheduler(3, packing=packing).dispatch(groups, arr)
@@ -122,6 +145,114 @@ def test_dispatch_conservation(seed):
         # site loads account for everything served
         np.testing.assert_allclose(res.per_site_load.sum(),
                                    res.served.sum(), rtol=1e-9)
+
+
+# ------------------------------------------------------------------
+# vectorized fast path == loop reference (the tentpole's contract)
+# ------------------------------------------------------------------
+def _assert_results_match(got, want):
+    for f in ("served", "dropped", "mean_e2e", "packed", "per_site_load"):
+        np.testing.assert_allclose(getattr(got, f), getattr(want, f),
+                                   rtol=1e-9, atol=1e-9, err_msg=f)
+
+
+@pytest.mark.parametrize("seed", range(30))
+@pytest.mark.parametrize("packing", [False, True])
+def test_vectorized_dispatch_matches_reference(table, seed, packing):
+    """Columnar dispatch == per-object loop on randomized instances.
+
+    Arrivals are drawn hot (up to ~3x fleet capacity) so both the WRR
+    overflow and the packing waterfall are exercised."""
+    rng = np.random.default_rng(1000 + seed)
+    groups = _random_groups(table, rng, num_sites=4,
+                            n_groups=int(rng.integers(1, 12)))
+    if not groups:
+        pytest.skip("degenerate draw")
+    total_cap = sum(g.capacity for g in groups)
+    arr = rng.uniform(0, max(total_cap, 1.0) / 3.0, 9)
+    sched = RequestScheduler(4, packing=packing)
+    _assert_results_match(sched.dispatch(groups, arr),
+                          sched.dispatch_reference(groups, arr))
+    # GroupTable input is the same fast path
+    tbl = GroupTable.from_groups(groups, 4)
+    _assert_results_match(sched.dispatch(tbl, arr),
+                          sched.dispatch_reference(groups, arr))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_dispatch_from_plan_table_matches_reference(table, seed):
+    """plan.group_table() dispatch == groups_from_plan loop dispatch."""
+    rng = np.random.default_rng(2000 + seed)
+    plan = _random_plan(table, rng)
+    arr = rng.uniform(0, 50, 9)
+    sched = RequestScheduler(plan.num_sites, packing=True)
+    got = sched.dispatch(plan.group_table(), arr)
+    want = sched.dispatch_reference(sched.groups_from_plan(plan), arr)
+    _assert_results_match(got, want)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_plan_views_match_loop_reference(table, seed):
+    """Vectorized gpu_used/power_used/capacity/mean_e2e == naive loops."""
+    rng = np.random.default_rng(3000 + seed)
+    plan = _random_plan(table, rng)
+    gpu = np.zeros(plan.num_sites)
+    pw = np.zeros(plan.num_sites)
+    cap = np.zeros(9)
+    num = den = 0.0
+    for (s, r), x in zip(plan.columns, plan.counts):
+        gpu[s] += x * r.tp
+        pw[s] += x * r.power
+        cap[r.cls] += x * r.load
+        num += x * r.load * r.e2e
+        den += x * r.load
+    np.testing.assert_allclose(plan.gpu_used(), gpu, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(plan.power_used(), pw, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(plan.capacity(), cap, rtol=1e-9, atol=1e-9)
+    assert plan.mean_e2e(np.ones(9)) == pytest.approx(
+        num / max(den, 1e-9), rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_apply_power_reality_matches_reference(table, seed):
+    """Vectorized brownout shedding == per-instance loop, incl. budgets
+    that force partial sheds inside a group."""
+    rng = np.random.default_rng(4000 + seed)
+    plan = _random_plan(table, rng, n_cols=16)
+    full = plan.power_used()
+    budget = full * rng.uniform(0.0, 1.2, size=plan.num_sites)
+    got = apply_power_reality(plan, budget)
+    want = apply_power_reality_reference(plan, budget)
+    np.testing.assert_array_equal(got.counts, want.counts)
+    np.testing.assert_allclose(got.unserved, want.unserved,
+                               rtol=1e-9, atol=1e-9)
+    assert (got.power_used() <= budget + 1e-6).all()
+
+
+def test_shed_counts_batch_columns_independent(table):
+    """Batched shedding == per-scenario shedding, column by column."""
+    rng = np.random.default_rng(7)
+    plan = _random_plan(table, rng, n_cols=16)
+    full = plan.power_used()
+    budgets = full[:, None] * rng.uniform(0.0, 1.2, size=(plan.num_sites, 5))
+    batch = shed_counts_batch(plan, budgets)
+    for b in range(budgets.shape[1]):
+        single = shed_counts_batch(plan, budgets[:, b:b + 1])[:, 0]
+        np.testing.assert_array_equal(batch[:, b], single)
+        ref = apply_power_reality_reference(plan, budgets[:, b])
+        np.testing.assert_allclose(batch[:, b], ref.counts, atol=1e-12)
+
+
+def test_group_table_with_counts_shares_geometry(table):
+    rng = np.random.default_rng(8)
+    plan = _random_plan(table, rng)
+    tbl = GroupTable.from_plan(plan, active_only=False)
+    new = tbl.with_counts(np.zeros(len(tbl)))
+    assert new.capacity.sum() == 0.0
+    assert new.order is tbl.order and new.host_ok is tbl.host_ok
+    # zeroed counts serve nothing
+    res = RequestScheduler(plan.num_sites).dispatch(new, np.full(9, 5.0))
+    assert res.served.sum() == 0.0
 
 
 def test_configurator_freezes_changed_groups(table):

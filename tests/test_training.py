@@ -5,8 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import smoke_config
 from repro.data.pipeline import SyntheticLM
@@ -77,10 +75,12 @@ def test_loss_decreases_over_steps():
     assert np.isfinite(losses).all()
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.floats(1e-6, 1e3))
+@pytest.mark.parametrize("seed,scale",
+                         [(s, 10.0 ** e) for s in range(5)
+                          for e in (-6, -2, 0, 2, 3)])
 def test_int8_roundtrip_error_bound(seed, scale):
-    """Property: |x - deq(q(x))| <= scale_step/2 elementwise."""
+    """Property: |x - deq(q(x))| <= scale_step/2 elementwise.
+    Seeded parametrization stands in for hypothesis (unavailable here)."""
     x = jax.random.normal(jax.random.key(seed), (64,)) * scale
     q, s = compress_int8(x)
     err = jnp.abs(decompress_int8(q, s) - x)
