@@ -1,0 +1,188 @@
+"""Planning-stack benchmark: monolithic vs decomposed vs warm-started.
+
+Measures, on the heterogeneous wind-farm population (the regime where
+the monolithic Fig. 10 ILP walls out):
+
+  * ``plan_l`` solve time vs site count for the monolithic HiGHS path
+    and the Lagrangian-decomposed path (4 -> 256 sites), with the
+    objective ratio wherever the monolith finishes inside its limit;
+  * ``plan_s`` cold vs warm-started re-solve time (the per-second
+    Planner-S loop) with warm acceptance rates;
+  * ``simulate_slot_fine`` end-to-end slot wall time with warm starts
+    on and off.
+
+Writes ``BENCH_planning.json`` at the repo root so future PRs can track
+the planning perf trajectory. Acceptance: decomposed 256-site plan in
+< 5 s with objective within 1% of the monolith wherever it completes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row, save
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import DROP_PENALTY, SiteSpec, plan_l
+from repro.core.planner_s import plan_s
+from repro.core.planning import plan_objective
+from repro.data.wind import make_site_population
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_fleet(pop, n: int):
+    sites, power = [], []
+    for s in pop[:n]:
+        pods = max(1, int(np.percentile(s.long_term_mw, 20.0)
+                          // SUPERPOD_PEAK_MW))
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        power.append(min(s.series_mw[100],
+                         np.percentile(s.long_term_mw, 20.0)) * 1e6)
+    power = np.array(power)
+    total = sum(s.num_gpus for s in sites)
+    load = np.full(9, total * 0.1 * 0.3 / 9)
+    return sites, power, load
+
+
+def bench_plan_l(table, pop, counts, mono_counts, mono_limit):
+    out = {}
+    for n in counts:
+        sites, power, load = make_fleet(pop, n)
+        rec = {"sites": n, "gpus": int(sum(s.num_gpus for s in sites))}
+        t0 = time.perf_counter()
+        deco = plan_l(table, sites, power, load, method="decomposed",
+                      time_limit=30.0)
+        rec["decomposed_s"] = time.perf_counter() - t0
+        rec["decomposed_unserved"] = float(deco.unserved.sum())
+        od = plan_objective(deco, DROP_PENALTY)
+        rec["decomposed_obj"] = od
+        if n in mono_counts:
+            t0 = time.perf_counter()
+            mono = plan_l(table, sites, power, load, method="monolithic",
+                          time_limit=mono_limit)
+            rec["monolithic_s"] = time.perf_counter() - t0
+            rec["monolithic_status"] = mono.status
+            if mono.status == "optimal":
+                om = plan_objective(mono, DROP_PENALTY)
+                rec["monolithic_obj"] = om
+                rec["obj_ratio"] = od / max(om, 1e-12)
+                rec["speedup"] = rec["monolithic_s"] / max(
+                    rec["decomposed_s"], 1e-12)
+        out[str(n)] = rec
+    return out
+
+
+def bench_plan_s_warm(table, pop, counts, reps: int):
+    out = {}
+    for n in counts:
+        sites, power, load = make_fleet(pop, n)
+        pl = plan_l(table, sites, power, load, method="decomposed",
+                    time_limit=30.0)
+        budget = pl.gpu_budget_pool()
+        rng = np.random.default_rng(5)
+        prev = None
+        t_cold = t_warm = 0.0
+        hits = 0
+        for _ in range(reps):
+            pw = power * np.exp(rng.normal(0, 0.03, n))
+            ld = load * 0.6 * rng.uniform(0.95, 1.05, 9)
+            t0 = time.perf_counter()
+            plan_s(table, sites, pw, ld, budget)
+            t_cold += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            p = plan_s(table, sites, pw, ld, budget, warm=prev)
+            t_warm += time.perf_counter() - t0
+            hits += p.status == "warm"
+            prev = p
+        out[str(n)] = {"sites": n, "reps": reps,
+                       "cold_ms": t_cold / reps * 1e3,
+                       "warm_ms": t_warm / reps * 1e3,
+                       "warm_hits": hits,
+                       "speedup": t_cold / max(t_warm, 1e-12)}
+    return out
+
+
+def bench_fine_sim_warm(table, pop, n: int, seconds: int):
+    from repro.sim.cluster import simulate_slot_fine
+    sites, power, load = make_fleet(pop, n)
+    pl = plan_l(table, sites, power, load, method="decomposed",
+                time_limit=30.0)
+    out = {"sites": n, "seconds": seconds}
+    for warm in (False, True):
+        t0 = time.perf_counter()
+        res = simulate_slot_fine(table, sites, pl, power, load * 0.6,
+                                 seconds=seconds, planner_s_period=5.0,
+                                 variants=("L+S+pack",), seed=3,
+                                 warm_start=warm)
+        key = "warm" if warm else "cold"
+        out[f"{key}_wall_s"] = time.perf_counter() - t0
+        out[f"{key}_solve_s"] = float(sum(res.planner_s_solves))
+        out[f"{key}_hits"] = res.warm_hits
+        out[f"{key}_solves"] = len(res.planner_s_status)
+    out["wall_speedup"] = out["cold_wall_s"] / max(out["warm_wall_s"], 1e-12)
+    return out
+
+
+def run(fast: bool = True):
+    trace = make_trace("coding", base_rps=1.0, seed=11)
+    table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+    if fast:
+        counts, mono_counts, mono_limit = (4, 16, 64, 256), (4, 16), 60.0
+        warm_counts, reps, fine_sites, fine_seconds = (16, 64), 8, 16, 30
+    else:
+        counts, mono_counts, mono_limit = (4, 16, 64, 256), (4, 16, 64), 300.0
+        warm_counts, reps, fine_sites, fine_seconds = (16, 64, 256), 10, 64, 60
+    pop = make_site_population(max(counts), seed=13)
+
+    results = {
+        "plan_l": bench_plan_l(table, pop, counts, mono_counts, mono_limit),
+        "plan_s_warm": bench_plan_s_warm(table, pop, warm_counts, reps),
+        "fine_sim_warm": bench_fine_sim_warm(table, pop, fine_sites,
+                                             fine_seconds),
+    }
+    save("planning", results)
+    with open(os.path.join(REPO_ROOT, "BENCH_planning.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+    rows = []
+    for n, r in results["plan_l"].items():
+        extra = ""
+        if "monolithic_s" in r:
+            extra = (f" vs mono {r['monolithic_s']:.1f}s"
+                     + (f" ({r['speedup']:.0f}x, obj x{r['obj_ratio']:.4f})"
+                        if "obj_ratio" in r else f" [{r['monolithic_status']}]"))
+        rows.append(row(f"plan_l_decomposed_{n}sites",
+                        r["decomposed_s"] * 1e6,
+                        f"{r['gpus']} GPUs: {r['decomposed_s']:.2f}s{extra}"))
+    for n, r in results["plan_s_warm"].items():
+        rows.append(row(f"plan_s_warm_{n}sites", r["warm_ms"] * 1e3,
+                        f"cold {r['cold_ms']:.0f}ms -> warm "
+                        f"{r['warm_ms']:.0f}ms ({r['speedup']:.1f}x, "
+                        f"{r['warm_hits']}/{r['reps']} warm)"))
+    f = results["fine_sim_warm"]
+    rows.append(row("fine_sim_warm_start", f["warm_wall_s"] * 1e6,
+                    f"{f['sites']} sites x {f['seconds']}s slot: "
+                    f"{f['cold_wall_s']:.2f}s -> {f['warm_wall_s']:.2f}s "
+                    f"({f['wall_speedup']:.1f}x, {f['warm_hits']}/"
+                    f"{f['warm_solves']} warm)"))
+    r256 = results["plan_l"]["256"]
+    rows.append(row("plan_l_256site_budget", 0.0,
+                    f"{r256['decomposed_s']:.2f}s per slot "
+                    f"(target < 5s, unserved {r256['decomposed_unserved']:.1f})"))
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(fast=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_tradeoff         Fig 16       (latency ↔ power)
     bench_components       Fig 17/§5.3  (Planner-S, packing, elasticity)
     bench_scalability      Fig 14 right (planner runtimes vs #sites)
+    bench_planning         decomposed Planner-L + warm-started Planner-S
     bench_dispatch         fast path    (columnar vs loop dispatch)
     bench_stickiness       §5.2         (R_L sweep)
     bench_kernels          kernels      (Pallas vs oracle)
@@ -33,6 +34,7 @@ MODULES = [
     "bench_tradeoff",
     "bench_components",
     "bench_scalability",
+    "bench_planning",
     "bench_dispatch",
     "bench_stickiness",
     "bench_kernels",

@@ -2,8 +2,11 @@
 from repro.core.lookup import LookupTable, build_table
 from repro.core.planner_l import Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
+from repro.core.planning import (ColumnPool, ConstraintBuilder, GpuBudget,
+                                 plan_objective)
 from repro.core.router import HeronRouter
 from repro.core.scheduler import Configurator, RequestScheduler
 
 __all__ = ["LookupTable", "build_table", "Plan", "SiteSpec", "plan_l",
-           "plan_s", "HeronRouter", "Configurator", "RequestScheduler"]
+           "plan_s", "HeronRouter", "Configurator", "RequestScheduler",
+           "ColumnPool", "ConstraintBuilder", "GpuBudget", "plan_objective"]

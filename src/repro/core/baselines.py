@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.lookup import LookupTable, Row
 from repro.core.planner_l import Plan, SiteSpec, plan_l
+from repro.core.planning import ColumnPool
 
 
 def wrr_split(sites: list[SiteSpec], load_per_class: np.ndarray) -> list[np.ndarray]:
@@ -43,20 +44,27 @@ def dynamollm_site_plan(table: LookupTable, site: SiteSpec,
 def baseline_wrr_dynamollm(table: LookupTable, sites: list[SiteSpec],
                            load_per_class: np.ndarray,
                            time_limit: float = 30.0) -> Plan:
-    """Baseline (c): per-site DynamoLLM under a compute-proportional WRR."""
+    """Baseline (c): per-site DynamoLLM under a compute-proportional WRR.
+
+    Each site's ILP runs over the same dense single-site column pool (the
+    full lookup table), so the fleet plan is just the dense S-site pool
+    with each site's solved counts scattered into its slice — no
+    per-object merge loop.
+    """
     splits = wrr_split(sites, load_per_class)
-    columns, counts = [], []
+    S = len(sites)
+    R = len(table.rows)
+    pool = ColumnPool.dense(table, S)
+    counts = np.zeros(S * R, dtype=int)
     unserved = np.zeros(9)
     for s, (site, sl) in enumerate(zip(sites, splits)):
         p = dynamollm_site_plan(table, site, sl, time_limit)
-        for (_, r), x in zip(p.columns, p.counts):
-            if x > 0:
-                columns.append((s, r))
-                counts.append(int(x))
+        counts[s * R:(s + 1) * R] = p.counts
         unserved += p.unserved
-    return Plan(columns=columns, counts=np.array(counts, int),
+    return Plan(columns=pool.columns(), counts=counts,
                 unserved=unserved, objective="power", status="baseline",
-                solve_seconds=0.0, num_sites=len(sites))
+                solve_seconds=0.0, num_sites=S,
+                _cols=pool.column_arrays(), _pool=pool)
 
 
 def knee_points(table: LookupTable) -> dict[int, Row]:
@@ -88,29 +96,38 @@ def knee_points(table: LookupTable) -> dict[int, Row]:
 
 def baseline_greedy_min_latency(table: LookupTable, sites: list[SiteSpec],
                                 load_per_class: np.ndarray) -> Plan:
-    """Baseline (d): TP_max + f_max instances at knee-point loads, WRR."""
+    """Baseline (d): TP_max + f_max instances at knee-point loads, WRR.
+
+    Vectorized over sites: each class round is one array pass (ceil,
+    min-with-headroom, headroom update), and the plan is built as a
+    (site x knee-class) column pool — the historical per-site/per-class
+    construction loop closed into 9 vector steps.
+    """
     knees = knee_points(table)
-    splits = wrr_split(sites, load_per_class)
-    columns, counts = [], []
+    S = len(sites)
+    splits = np.stack(wrr_split(sites, load_per_class))       # [S, 9]
+    gpus_left = np.array([s.num_gpus for s in sites], dtype=int)
+    kcls = sorted(knees)
+    fit = np.zeros((S, len(kcls)), dtype=int)
     unserved = np.zeros(9)
-    for s, (site, sl) in enumerate(zip(sites, splits)):
-        gpus_left = site.num_gpus
-        for c in range(9):
-            if c not in knees or sl[c] <= 0:
-                unserved[c] += max(sl[c], 0.0) if c not in knees else 0.0
-                continue
-            r = knees[c]
-            need = int(np.ceil(sl[c] / r.load))
-            fit = min(need, gpus_left // r.tp)
-            if fit > 0:
-                columns.append((s, r))
-                counts.append(fit)
-                gpus_left -= fit * r.tp
-            if fit < need:
-                unserved[c] += (need - fit) * r.load
-    return Plan(columns=columns, counts=np.array(counts, int),
+    for k, c in enumerate(kcls):
+        r = knees[c]
+        sl = splits[:, c]
+        need = np.where(sl > 0, np.ceil(sl / r.load), 0).astype(int)
+        fit[:, k] = np.minimum(need, gpus_left // r.tp)
+        gpus_left -= fit[:, k] * r.tp
+        unserved[c] += float(((need - fit[:, k]) * r.load).sum())
+    for c in range(9):
+        if c not in knees:
+            unserved[c] += float(np.maximum(splits[:, c], 0.0).sum())
+    row_of = {id(r): i for i, r in enumerate(table.rows)}
+    knee_idx = np.array([row_of[id(knees[c])] for c in kcls], dtype=np.intp)
+    pool = ColumnPool(table, np.repeat(np.arange(S, dtype=np.intp), len(kcls)),
+                      np.tile(knee_idx, S), S)
+    return Plan(columns=pool.columns(), counts=fit.ravel(),
                 unserved=unserved, objective="latency", status="baseline",
-                solve_seconds=0.0, num_sites=len(sites))
+                solve_seconds=0.0, num_sites=S,
+                _cols=pool.column_arrays(), _pool=pool)
 
 
 def shed_counts_batch(plan: Plan, actual_power_w: np.ndarray) -> np.ndarray:

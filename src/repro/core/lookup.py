@@ -35,7 +35,8 @@ from repro.power.model import (HardwareModel, H100_DGX, NODE_MULTIPLIER,
                                accelerator_power)
 
 BYTES = 2                      # bf16 weights/activations
-SLO_MULTIPLier = 5.0           # paper: 5x isolated TTFT/TBT at TP_max, f_max
+SLO_MULTIPLIER = 5.0           # paper: 5x isolated TTFT/TBT at TP_max, f_max
+SLO_MULTIPLier = SLO_MULTIPLIER  # deprecated alias (pre-PR-2 typo), kept for imports
 LOAD_GRID = (0.015625, 0.03125, 0.0625, 0.125, 0.25, 0.5, 1.0, 2.0, 4.0,
              8.0, 16.0, 32.0)
 MAX_UTIL = 0.95                # queueing stability bound
@@ -173,8 +174,8 @@ def build_table(cfg: ModelConfig, trace: WorkloadTrace,
         # isolated reference at TP_max / f_max defines the class SLOs
         t_ref = _prefill_time(cfg, hw, cp.mean_in, tp_max, 1.0)
         W, K = _tbt_coeffs(cfg, hw, cp.mean_in + cp.mean_out / 2, tp_max, 1.0)
-        slo_ttft = SLO_MULTIPLier * t_ref
-        slo_tbt = SLO_MULTIPLier * (W + K)
+        slo_ttft = SLO_MULTIPLIER * t_ref
+        slo_tbt = SLO_MULTIPLIER * (W + K)
         for tp in hw.tp_degrees:
             for freq in freqs:
                 for load in load_grid:

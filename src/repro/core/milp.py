@@ -5,11 +5,26 @@ the offline stand-in for the paper's COIN-OR CBC). Very large instances or
 solver timeouts fall back to LP relaxation + floor-rounding + greedy
 repair, which preserves feasibility of the ≤-constraints by construction
 and repairs ≥-constraints (serving capacity) greedily by cheapest column.
+
+Warm starts
+-----------
+``scipy.optimize.milp`` cannot seed an incumbent, so warm starting is
+implemented *around* the solver: ``solve_milp(..., warm=x0)`` clips and
+rounds the previous solution onto the new bounds, repairs it against the
+new constraints (shed over-draw, add cheapest capacity), and accepts it —
+skipping branch-and-cut entirely — iff its objective is within
+``warm_accept_gap`` of the LP-relaxation lower bound of the *new*
+problem. The LP bound makes the shortcut sound: a stale or badly
+repaired solution fails the gap test and falls through to the cold
+solve. Planner-S re-solves inside a slot move power/load by a few
+percent per second, so the previous second's plan almost always passes
+(status ``"warm"``), turning the per-second MILP into one LP plus a few
+vector repairs.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -20,7 +35,7 @@ from scipy.optimize import Bounds, LinearConstraint, linprog, milp
 @dataclass
 class MilpResult:
     x: np.ndarray
-    status: str                 # 'optimal' | 'fallback' | 'infeasible'
+    status: str          # 'optimal' | 'warm' | 'fallback' | 'infeasible'
     objective: float
     solve_seconds: float
     used_fallback: bool = False
@@ -28,18 +43,40 @@ class MilpResult:
 
 def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
                integrality=None, upper=None, time_limit: float = 60.0,
-               mip_rel_gap: float = 1e-3) -> MilpResult:
-    """min c.x  s.t.  A_ub x <= b_ub,  A_lb x >= b_lb,  0 <= x <= upper."""
+               mip_rel_gap: float = 1e-3,
+               warm: Optional[np.ndarray] = None,
+               warm_accept_gap: float = 0.01) -> MilpResult:
+    """min c.x  s.t.  A_ub x <= b_ub,  A_lb x >= b_lb,  0 <= x <= upper.
+
+    ``warm``: a previous solution over the same variable layout; accepted
+    without a branch-and-cut solve when, after repair, it is feasible and
+    within ``warm_accept_gap`` (relative) of the LP bound.
+    """
     t0 = time.perf_counter()
     n = len(c)
+    ub = np.full(n, np.inf) if upper is None else np.asarray(upper, float)
+    integ = np.zeros(n) if integrality is None else np.asarray(integrality)
+
+    if warm is not None:
+        if len(warm) != n:
+            raise ValueError(f"warm vector has {len(warm)} entries for "
+                             f"{n} variables — stale layout?")
+        x = _warm_repair(np.asarray(warm, float), c, A_ub, b_ub, A_lb, b_lb,
+                         integ, ub)
+        if x is not None:
+            bound = _lp_bound(c, A_ub, b_ub, A_lb, b_lb, ub)
+            if bound is not None:
+                obj = float(c @ x)
+                if obj <= bound + warm_accept_gap * max(1.0, abs(bound)):
+                    return MilpResult(x=x, status="warm", objective=obj,
+                                      solve_seconds=time.perf_counter() - t0)
+
     cons = []
     if A_ub is not None and A_ub.shape[0]:
         cons.append(LinearConstraint(A_ub, -np.inf, b_ub))
     if A_lb is not None and A_lb.shape[0]:
         cons.append(LinearConstraint(A_lb, b_lb, np.inf))
-    ub = np.full(n, np.inf) if upper is None else np.asarray(upper, float)
     bounds = Bounds(np.zeros(n), ub)
-    integ = np.zeros(n) if integrality is None else np.asarray(integrality)
     res = milp(c=c, constraints=cons, bounds=bounds, integrality=integ,
                options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap})
     dt = time.perf_counter() - t0
@@ -58,54 +95,102 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
                       solve_seconds=dt, used_fallback=True)
 
 
+def _stack_leq(A_ub, b_ub, A_lb, b_lb):
+    """Fold A_lb x >= b_lb into the <= system: one (A, b) pair."""
+    if A_lb is not None and A_lb.shape[0]:
+        if A_ub is not None:
+            return sparse.vstack([A_ub, -A_lb]), np.concatenate([b_ub, -b_lb])
+        return -A_lb, -b_lb
+    return A_ub, b_ub
+
+
+def _lp_bound(c, A_ub, b_ub, A_lb, b_lb, ub) -> Optional[float]:
+    """LP-relaxation lower bound (one HiGHS simplex, no integrality)."""
+    n = len(c)
+    A, b = _stack_leq(A_ub, b_ub, A_lb, b_lb)
+    res = linprog(c, A_ub=A, b_ub=b, bounds=list(zip(np.zeros(n), ub)),
+                  method="highs")
+    return float(res.fun) if res.success else None
+
+
+def _repair_geq(x, c, A_lb, b_lb, integ, ub) -> None:
+    """Repair A_lb x >= b_lb in place: bump the cheapest helpful column."""
+    if A_lb is None or not A_lb.shape[0]:
+        return
+    A = sparse.csr_matrix(A_lb)
+    for _ in range(10_000):
+        lhs = A @ x
+        short = lhs < b_lb - 1e-9
+        if not short.any():
+            break
+        i = int(np.argmax(b_lb - lhs))
+        col_gain = A[i].toarray().ravel()
+        cand = np.where((col_gain > 1e-12) & (x < ub - 1e-9))[0]
+        if len(cand) == 0:
+            break  # cannot repair; return best effort
+        j = cand[np.argmin(c[cand] / col_gain[cand])]
+        x[j] += 1.0 if integ[j] > 0 else (b_lb[i] - lhs[i]) / col_gain[j]
+
+
+def _repair_leq(x, A_ub, b_ub, integ) -> None:
+    """Repair A_ub x <= b_ub in place: shed the heaviest contributor."""
+    if A_ub is None or not A_ub.shape[0]:
+        return
+    A = sparse.csr_matrix(A_ub)
+    for _ in range(10_000):
+        lhs = A @ x
+        over = lhs > b_ub + 1e-6
+        if not over.any():
+            break
+        i = int(np.argmax(lhs - b_ub))
+        row = A[i].toarray().ravel()
+        cand = np.where((row > 1e-12) & (x > 1e-9))[0]
+        if len(cand) == 0:
+            break
+        j = cand[np.argmax(row[cand] * np.maximum(x[cand], 1))]
+        x[j] = max(0.0, x[j] - (1.0 if integ[j] > 0 else
+                                (lhs[i] - b_ub[i]) / row[j]))
+
+
+def _feasible(x, A_ub, b_ub, A_lb, b_lb) -> bool:
+    if A_ub is not None and A_ub.shape[0]:
+        if (A_ub @ x > b_ub + 1e-6).any():
+            return False
+    if A_lb is not None and A_lb.shape[0]:
+        if (A_lb @ x < b_lb - 1e-6).any():
+            return False
+    return True
+
+
+def _warm_repair(x0, c, A_ub, b_ub, A_lb, b_lb, integ,
+                 ub) -> Optional[np.ndarray]:
+    """Project a previous solution onto the new feasible region.
+
+    Shed ≤-violations first (power dropped since the last solve), then
+    add capacity for ≥-violations (load rose), then re-shed in case the
+    additions overdrew a cap. Returns None if still infeasible — the
+    caller then cold-solves.
+    """
+    x = np.clip(x0, 0.0, np.where(np.isfinite(ub), ub, np.inf))
+    x[integ > 0] = np.round(x[integ > 0])
+    x = np.minimum(x, np.where(np.isfinite(ub), ub, np.inf))
+    _repair_leq(x, A_ub, b_ub, integ)
+    _repair_geq(x, c, A_lb, b_lb, integ, ub)
+    _repair_leq(x, A_ub, b_ub, integ)
+    return x if _feasible(x, A_ub, b_ub, A_lb, b_lb) else None
+
+
 def _lp_round_repair(c, A_ub, b_ub, A_lb, b_lb, integ, ub):
     n = len(c)
-    A_parts, bl_parts, bu_parts = [], [], []
-    if A_ub is not None and A_ub.shape[0]:
-        A_parts.append(A_ub)
-        bl_parts.append(np.full(A_ub.shape[0], -np.inf))
-        bu_parts.append(b_ub)
-    if A_lb is not None and A_lb.shape[0]:
-        A_parts.append(A_lb)
-        bl_parts.append(b_lb)
-        bu_parts.append(np.full(A_lb.shape[0], np.inf))
-    A = sparse.vstack(A_parts) if A_parts else None
-    res = linprog(c, A_ub=sparse.vstack([A_ub, -A_lb]) if A_lb is not None else A_ub,
-                  b_ub=np.concatenate([b_ub, -b_lb]) if A_lb is not None else b_ub,
+    A, b = _stack_leq(A_ub, b_ub, A_lb, b_lb)
+    res = linprog(c, A_ub=A, b_ub=b,
                   bounds=list(zip(np.zeros(n), ub)), method="highs")
     if not res.success:
         return None
     x = res.x.copy()
     x[integ > 0] = np.floor(x[integ > 0] + 1e-9)
     # repair >= constraints (capacity) by bumping the cheapest helpful column
-    if A_lb is not None and A_lb.shape[0]:
-        A_lb_d = sparse.csr_matrix(A_lb)
-        for _ in range(10_000):
-            lhs = A_lb_d @ x
-            short = lhs < b_lb - 1e-9
-            if not short.any():
-                break
-            i = int(np.argmax(b_lb - lhs))
-            col_gain = A_lb_d[i].toarray().ravel()
-            cand = np.where((col_gain > 1e-12) & (x < ub - 1e-9))[0]
-            if len(cand) == 0:
-                break  # cannot repair; return best effort
-            j = cand[np.argmin(c[cand] / col_gain[cand])]
-            x[j] += 1.0 if integ[j] > 0 else (b_lb[i] - lhs[i]) / col_gain[j]
-        # re-check <= feasibility; if violated, undo proportionally
-    if A_ub is not None and A_ub.shape[0]:
-        A_ub_d = sparse.csr_matrix(A_ub)
-        for _ in range(10_000):
-            lhs = A_ub_d @ x
-            over = lhs > b_ub + 1e-6
-            if not over.any():
-                break
-            i = int(np.argmax(lhs - b_ub))
-            row = A_ub_d[i].toarray().ravel()
-            cand = np.where((row > 1e-12) & (x > 1e-9))[0]
-            if len(cand) == 0:
-                break
-            j = cand[np.argmax(row[cand] * np.maximum(x[cand], 1))]
-            x[j] = max(0.0, x[j] - (1.0 if integ[j] > 0 else
-                                    (lhs[i] - b_ub[i]) / row[j]))
+    _repair_geq(x, c, A_lb, b_lb, integ, ub)
+    # re-check <= feasibility; if violated, undo proportionally
+    _repair_leq(x, A_ub, b_ub, integ)
     return x

@@ -12,115 +12,138 @@ granted. Two effects (paper §5.3):
 The Fig. 11 ILP has no single-(f,l) constraint (no Y variables) — Planner-S
 may split a config across frequencies; it is therefore much smaller and
 runs in milliseconds-to-seconds even at 64 sites.
+
+The problem is assembled over a ``ColumnPool`` restricted to the granted
+(s, c, t) groups (see ``repro.core.planning``), and the budget itself
+travels as a columnar ``GpuBudget`` (legacy dicts are coerced). Repeated
+re-solves inside a slot pass ``warm=<previous plan>``: the previous
+counts are mapped onto the current columns and handed to
+``solve_milp``'s warm path, which accepts them after repair when they
+sit within 1% of the fresh LP bound — the common case when power/load
+moved a few percent between seconds (status ``"warm"``).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
-from scipy import sparse
 
 from repro.core.lookup import LookupTable, Row
 from repro.core.milp import solve_milp
 from repro.core.planner_l import DROP_PENALTY, Objective, Plan, SiteSpec
+from repro.core.planning import (ColumnPool, ConstraintBuilder, FleetState,
+                                 GpuBudget, sct_key, trim_surplus)
+
+
+def _warm_vector(warm: Plan, cols: list[tuple[int, Row]], pool: ColumnPool,
+                 cost: np.ndarray, g_gpus: np.ndarray, codes: np.ndarray,
+                 power_w: np.ndarray,
+                 load_per_class: np.ndarray) -> np.ndarray:
+    """Project a previous plan onto the current problem's column layout.
+
+    Mapping the old counts alone is not enough: a feasible-but-stale
+    point parks every load increase in the (heavily penalised) slack
+    variables and keeps surplus instances on load decrease, so it would
+    always fail ``solve_milp``'s LP-bound acceptance gap. The projection
+    therefore also *optimizes at the margin* — trim surplus capacity
+    (most expensive per rps first), then cover per-class shortfall with
+    cheapest-completion columns inside the GPU-budget and power
+    headroom (Fig. 11 has no one-(f,l) rule, so groups may mix points).
+    Residual shortfall becomes slack.
+    """
+    n = len(pool)
+    x0 = np.zeros(n + 9)
+    wp = getattr(warm, "_pool", None)
+    if wp is not None and wp.table is pool.table and len(wp):
+        # vectorized join on (site, table-row) keys — the hot path when
+        # chaining plan_s results (both plans carry their column pool)
+        R = len(pool.table.rows)
+        wkey = wp.site * R + wp.row_idx
+        order = np.argsort(wkey, kind="stable")
+        ckey = pool.site * R + pool.row_idx
+        pos = np.clip(np.searchsorted(wkey[order], ckey), 0, len(order) - 1)
+        hit = wkey[order][pos] == ckey
+        x0[:n][hit] = np.asarray(warm.counts, float)[order][pos[hit]]
+    else:
+        prev = {(s, r): int(x)
+                for (s, r), x in zip(warm.columns, warm.counts) if x > 0}
+        if prev:
+            x0[:n] = [prev.get(col, 0) for col in cols]
+    load = np.maximum(np.asarray(load_per_class, float), 0.0)
+    xc = x0[:n]
+    trim_surplus(xc, pool, cost, load)
+    st = FleetState(xc, pool, cost, g_gpus, codes, power_w,
+                    enforce_sct=False)
+    st.cover_all(load)
+    x0[n:] = np.maximum(load - st.cap, 0.0)
+    return x0
 
 
 def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
-           load_per_class: np.ndarray, gpu_budget: dict[tuple[int, int, int], int],
+           load_per_class: np.ndarray,
+           gpu_budget: Union[GpuBudget, dict],
            *, objective: Objective = "latency",
            frozen_sct: Optional[set] = None,
-           time_limit: float = 10.0) -> Plan:
+           time_limit: float = 10.0,
+           warm: Optional[Plan] = None) -> Plan:
     """Solve the Fig. 11 ILP.
 
-    ``gpu_budget``: {(site, class, tp): gpus} from Planner-L's last plan.
+    ``gpu_budget``: GPU_{s,c,t} from Planner-L's last plan — a columnar
+    ``GpuBudget`` (``Plan.gpu_budget_pool()``) or a legacy dict.
     ``frozen_sct``: (s,c,t) groups with pending TP reconfigurations — the
     Configurator excludes them from placement (paper §4, Configurator).
+    ``warm``: a previous Planner-S plan over the same budget; its counts
+    seed the solve (see module docstring).
     """
     S = len(sites)
-    frozen = frozen_sct or set()
-    # columns: only (s, row) whose (s, cls, tp) has a budget and is not frozen
-    cols: list[tuple[int, Row]] = []
-    for (s, cls, tp), gpus in gpu_budget.items():
-        if gpus <= 0 or (s, cls, tp) in frozen:
-            continue
-        for r in table.valid_rows(cls):
-            if r.tp == tp:
-                cols.append((s, r))
-    n = len(cols)
+    budget = GpuBudget.coerce(gpu_budget)
+    pool = ColumnPool.for_budget(table, budget, S, frozen_sct)
+    n = len(pool)
     if n == 0:
         return Plan(columns=[], counts=np.zeros(0, int),
                     unserved=np.maximum(load_per_class, 0.0),
                     objective=objective, status="empty", solve_seconds=0.0,
                     num_sites=S)
 
-    col_cost = np.array([r.e2e if objective == "latency" else r.power
-                         for _, r in cols])
-    col_power = np.array([r.power for _, r in cols])
-    col_load = np.array([r.load for _, r in cols])
-    col_cls = np.array([r.cls for _, r in cols])
-    col_site = np.array([s for s, _ in cols])
-    col_tp = np.array([r.tp for _, r in cols])
-
     nv = n + 9
     iZ = np.arange(n)
     iSl = n + np.arange(9)
     c_vec = np.zeros(nv)
-    c_vec[iZ] = col_cost
+    c_vec[iZ] = pool.cost(objective)
     c_vec[iSl] = DROP_PENALTY
 
-    rows_ub, cols_ub, data_ub, b_ub = [], [], [], []
-
-    def add_ub(terms, rhs):
-        i = len(b_ub)
-        for j, v in terms:
-            rows_ub.append(i)
-            cols_ub.append(j)
-            data_ub.append(v)
-        b_ub.append(rhs)
-
+    b = ConstraintBuilder(nv)
     # (1) per-site power cap at near-real-time power
-    for s in range(S):
-        mask = np.where(col_site == s)[0]
-        add_ub([(iZ[j], float(col_power[j])) for j in mask], float(power_w[s]))
-    # (3) per-(s,c,t) GPU budget from Planner-L
-    keys = sorted(gpu_budget)
-    for (s, cls, tp) in keys:
-        mask = np.where((col_site == s) & (col_cls == cls) & (col_tp == tp))[0]
-        if len(mask):
-            add_ub([(iZ[j], float(col_tp[j])) for j in mask],
-                   float(gpu_budget[(s, cls, tp)]))
-    A_ub = sparse.csr_matrix((data_ub, (rows_ub, cols_ub)),
-                             shape=(len(b_ub), nv))
-    b_ub = np.array(b_ub)
-
+    b.ub(pool.site, iZ, pool.power, np.asarray(power_w, float))
+    # (3) per-(s,c,t) GPU budget from Planner-L — one row per granted
+    # group that actually has columns, in sorted (s,c,t) order
+    codes, g_site, g_cls, g_tp = pool.sct()
+    g_key = sct_key(g_site, g_cls, g_tp)
+    bud_key = sct_key(budget.site, budget.cls, budget.tp)
+    g_gpus = budget.gpus[np.searchsorted(bud_key, g_key)].astype(float)
+    b.ub(codes, iZ, pool.tp.astype(float), g_gpus)
     # (2) capacity with slack
-    rows_lb, cols_lb, data_lb, b_lb = [], [], [], []
-    for cidx in range(9):
-        mask = np.where(col_cls == cidx)[0]
-        i = len(b_lb)
-        for j in mask:
-            rows_lb.append(i)
-            cols_lb.append(iZ[j])
-            data_lb.append(float(col_load[j]))
-        rows_lb.append(i)
-        cols_lb.append(iSl[cidx])
-        data_lb.append(1.0)
-        b_lb.append(float(load_per_class[cidx]))
-    A_lb = sparse.csr_matrix((data_lb, (rows_lb, cols_lb)),
-                             shape=(len(b_lb), nv))
-    b_lb = np.array(b_lb)
+    b.lb(np.concatenate([pool.cls, np.arange(9)]),
+         np.concatenate([iZ, iSl]),
+         np.concatenate([pool.load, np.ones(9)]),
+         np.asarray(load_per_class, float))
+    A_ub, b_ub, A_lb, b_lb = b.build()
 
     integrality = np.zeros(nv)
     integrality[iZ] = 1
     upper = np.full(nv, np.inf)
-    upper[iZ] = np.array([gpu_budget[(s, r.cls, r.tp)] // r.tp
-                          for s, r in cols], float)
+    upper[iZ] = (g_gpus[codes].astype(int)
+                 // np.maximum(pool.tp, 1)).astype(float)
     upper[iSl] = np.maximum(load_per_class, 0.0)
 
+    cols = pool.columns()
+    x0 = (_warm_vector(warm, cols, pool, pool.cost(objective), g_gpus,
+                       codes, np.asarray(power_w, float), load_per_class)
+          if warm is not None else None)
     res = solve_milp(c_vec, A_ub=A_ub, b_ub=b_ub, A_lb=A_lb, b_lb=b_lb,
                      integrality=integrality, upper=upper,
-                     time_limit=time_limit)
+                     time_limit=time_limit, warm=x0)
     return Plan(columns=cols, counts=np.round(res.x[iZ]).astype(int),
                 unserved=np.maximum(res.x[iSl], 0.0), objective=objective,
                 status=res.status, solve_seconds=res.solve_seconds,
-                num_sites=S)
+                num_sites=S, _cols=pool.column_arrays(), _pool=pool)

@@ -39,6 +39,7 @@ class HeronRouter:
     time_limit_s: float = 10.0
     straggler_alpha: float = 0.2          # EWMA coefficient
     straggler_threshold: float = 2.0      # deweight sites slower than 2x fleet
+    straggler_min_haircut: float = 0.25   # floor of the graded power haircut
 
     _plan_l: Optional[Plan] = None
     _plan_s: Optional[Plan] = None
@@ -75,13 +76,25 @@ class HeronRouter:
     def _effective_power(self, power_w: np.ndarray) -> np.ndarray:
         p = power_w.copy()
         p[~self._site_alive] = 0.0
-        # stragglers: fleet-relative EWMA deweighting inside the WRR is
-        # expressed to the planner as a power haircut (fewer requests land)
+        # Stragglers: fleet-relative EWMA deweighting inside the WRR is
+        # expressed to the planner as a power haircut (fewer requests
+        # land). Calibration follows the paper's K1 story — the router is
+        # the straggler absorber, deweighting a slow site *in proportion
+        # to its observed slowdown* rather than by a fixed step: a site
+        # at the 2x-fleet threshold keeps its full power (continuous at
+        # the boundary, so jitter near the threshold cannot flap routing
+        # weights), a site 2x past it keeps half, and the haircut floors
+        # at ``straggler_min_haircut`` so a pathological site still
+        # absorbs some load instead of being silently evicted. As the
+        # EWMA recovers the severity falls and the haircut relaxes back
+        # to 1 (tests/test_sim.py::test_router_straggler_haircut_recovers).
         ew = self._site_latency_ewma
         if ew.max() > 0:
             fleet = max(np.median(ew[ew > 0]) if (ew > 0).any() else 0.0, 1e-9)
-            slow = ew > self.straggler_threshold * fleet
-            p[slow] *= 0.5
+            severity = ew / (self.straggler_threshold * fleet)
+            slow = severity > 1.0
+            p[slow] *= np.clip(1.0 / severity[slow],
+                               self.straggler_min_haircut, 1.0)
         return p
 
     # ---------------- planning ----------------
@@ -104,9 +117,9 @@ class HeronRouter:
         self._now = now
         frozen = self._cfgtor.frozen(now)
         p = plan_s(self.table, self.sites, self._effective_power(power_w),
-                   observed_load, self._plan_l.gpu_budget(),
+                   observed_load, self._plan_l.gpu_budget_pool(),
                    objective=self.objective, frozen_sct=frozen,
-                   time_limit=self.time_limit_s)
+                   time_limit=self.time_limit_s, warm=self._plan_s)
         if p.status != "empty":
             self._plan_s = p
         return self._plan_s or self._plan_l

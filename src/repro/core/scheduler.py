@@ -37,7 +37,11 @@ not equal); hosts are filled in ascending-e2e order with stable ties.
 The Configurator applies TP/frequency changes between plans; groups with
 pending TP re-shards are frozen (excluded from Planner-S placement) for
 ``tp_reshard_seconds`` — the paper's C3 overhead, hidden DynamoLLM-style
-by background weight transfer.
+by background weight transfer. Its (s, c, t) diffs come from
+``Plan.agg_by_sct()``, which aggregates straight off the plan's columnar
+pool (one np.unique + bincount — no per-object loop), the same pool
+``GroupTable.from_plan`` reads for dispatch and ``Plan.gpu_budget_pool``
+reads for the Planner-S hand-off.
 """
 from __future__ import annotations
 

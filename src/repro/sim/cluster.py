@@ -36,7 +36,14 @@ Both simulators run on the columnar dispatch engine (``GroupTable``):
   * the Planner-S re-solve schedule is float-safe: re-solves fire at
     multiples of ``planner_s_period`` (for integer periods this is
     exactly the old ``t % period == 0`` schedule; non-integer periods
-    no longer crash or alias).
+    no longer crash or alias);
+  * each Planner-S re-solve is warm-started from the previous one (the
+    GPU grant is pulled once as a columnar ``GpuBudget``): the prior
+    second's counts are projected onto the new power/load and accepted
+    when they pass ``solve_milp``'s LP-bound gap, replacing most
+    branch-and-cut solves with one LP plus vector repairs (status
+    ``"warm"``; ``FineResult.warm_hits`` counts them, and
+    ``warm_start=False`` restores cold solves for A/B benchmarks).
 """
 from __future__ import annotations
 
@@ -179,6 +186,12 @@ class FineResult:
     dropped: dict[str, float]                   # variant -> total dropped rps
     class_e2e: dict[str, np.ndarray]            # variant -> [9] mean e2e
     planner_s_solves: list[float] = field(default_factory=list)
+    planner_s_status: list[str] = field(default_factory=list)
+
+    @property
+    def warm_hits(self) -> int:
+        """How many Planner-S re-solves the warm path absorbed."""
+        return sum(1 for s in self.planner_s_status if s == "warm")
 
 
 def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
@@ -188,7 +201,7 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
                        power_noise: float = 0.04,
                        power_scale: float = 1.0,
                        variants=("L", "L+S", "L+S+pack"),
-                       seed: int = 0) -> FineResult:
+                       seed: int = 0, warm_start: bool = True) -> FineResult:
     """Second-level simulation of one 15-min slot.
 
     Power per second follows an AR(1) wiggle (±power_noise) around
@@ -196,10 +209,15 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     Variants: 'L' follows Planner-L blindly; 'L+S' re-solves (f, l) every
     ``planner_s_period`` s at observed load/power; '+pack' adds the
     Request Scheduler packing heuristic.
+
+    The Planner-L GPU grant is pulled once as a columnar ``GpuBudget``
+    and each Planner-S re-solve is warm-started from the previous one
+    (``warm_start=False`` restores cold solves — the knob
+    benchmarks/bench_planning.py measures).
     """
     rng = np.random.default_rng(seed)
     S = len(sites)
-    gpu_budget = base_plan.gpu_budget()
+    gpu_budget = base_plan.gpu_budget_pool()
     period = max(float(planner_s_period), 1.0)
     # per-second power: AR(1) multiplicative wiggle (vectorized)
     wig = ar1_wiggle(rng, S, seconds, power_noise)
@@ -211,6 +229,7 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     results_drop = {}
     results_cls = {}
     solves = []
+    statuses = []
     for variant in variants:
         packing = variant.endswith("pack")
         use_s = variant != "L"
@@ -221,16 +240,20 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
         cls_den = np.zeros(9)
         dropped_total = 0.0
         plan = base_plan
+        prev_s: Optional[Plan] = None
         t = 0
         while t < seconds:
             if use_s:
                 obs_load = arr[:, max(0, t - 5): t + 1].mean(axis=1)
                 # plan for a small headroom over observed load
                 p = plan_s(table, sites, pw[:, t], obs_load * 1.1,
-                           gpu_budget, objective=base_plan.objective)
+                           gpu_budget, objective=base_plan.objective,
+                           warm=prev_s if warm_start else None)
                 if p.status != "empty":
                     plan = p
+                    prev_s = p
                     solves.append(p.solve_seconds)
+                    statuses.append(p.status)
                 # next re-solve at the next multiple of the period
                 next_solve = (np.floor(t / period) + 1) * period
                 t_end = min(seconds, int(np.ceil(next_solve)))
@@ -264,4 +287,5 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
         results_drop[variant] = dropped_total
         results_cls[variant] = cls_num / np.maximum(cls_den, 1e-9)
     return FineResult(e2e_per_second=results_e2e, dropped=results_drop,
-                      class_e2e=results_cls, planner_s_solves=solves)
+                      class_e2e=results_cls, planner_s_solves=solves,
+                      planner_s_status=statuses)

@@ -107,15 +107,15 @@ def test_coding_sustains_less_load(tables):
 
 def test_slo_filtering(tables):
     """No surviving row violates the 5x-isolated TTFT/TBT SLOs."""
-    from repro.core.lookup import SLO_MULTIPLier, _prefill_time, _tbt_coeffs
+    from repro.core.lookup import SLO_MULTIPLIER, _prefill_time, _tbt_coeffs
     t = tables["conversation"]
     tp_max, f_max = max(H100_DGX.tp_degrees), H100_DGX.f_max
     for c, cp in enumerate(t.classes):
-        ttft_slo = SLO_MULTIPLier * _prefill_time(
+        ttft_slo = SLO_MULTIPLIER * _prefill_time(
             PAPER_MODEL, H100_DGX, cp.mean_in, tp_max, 1.0)
         W, K = _tbt_coeffs(PAPER_MODEL, H100_DGX,
                            cp.mean_in + cp.mean_out / 2, tp_max, 1.0)
-        tbt_slo = SLO_MULTIPLier * (W + K)
+        tbt_slo = SLO_MULTIPLIER * (W + K)
         for r in t.valid_rows(c):
             assert r.ttft <= ttft_slo * 1.0001
             assert r.tbt <= tbt_slo * 1.0001

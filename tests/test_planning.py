@@ -1,0 +1,304 @@
+"""Tests for the shared planning layer (ColumnPool / ConstraintBuilder /
+GpuBudget), the decomposed Planner-L solve path, and Planner-S warm starts.
+
+The load-bearing guarantees:
+  * decomposed-vs-monolithic parity — same sites/power/load must agree on
+    objective within 1% and on unserved within 1e-6 (seeded scenarios);
+  * the decomposed plan satisfies every Fig. 10 constraint exactly;
+  * warm-started ``plan_s`` is deterministic and lands within the warm
+    acceptance gap of the cold solve;
+  * the columnar pool reproduces the legacy per-object enumerations
+    bit-for-bit (column order, budget dicts, WRR weights).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from scipy import sparse
+
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import (DECOMPOSE_THRESHOLD, DROP_PENALTY, Plan,
+                                  SiteSpec, build_columns, plan_l)
+from repro.core.planner_s import plan_s
+from repro.core.planning import (ColumnPool, ConstraintBuilder, GpuBudget,
+                                 plan_objective)
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
+
+
+@pytest.fixture(scope="module")
+def table():
+    tr = make_trace("conversation", base_rps=1.0, seed=11)
+    return build_table(PAPER_MODEL, tr, H100_DGX, **GRID)
+
+
+@pytest.fixture(scope="module")
+def sites():
+    return [SiteSpec("a", 512), SiteSpec("b", 256), SiteSpec("c", 128)]
+
+
+def _check_constraints(plan: Plan, sites, power_w, load):
+    gpu = plan.gpu_used()
+    for s, site in enumerate(sites):
+        assert gpu[s] <= site.num_gpus + 1e-9
+    pw = plan.power_used()
+    for s in range(len(sites)):
+        assert pw[s] <= power_w[s] * (1 + 1e-9)
+    cap = plan.capacity()
+    for c in range(9):
+        assert cap[c] + plan.unserved[c] >= load[c] - 1e-6
+    seen = {}
+    for (s, r), x in zip(plan.columns, plan.counts):
+        if x > 0:
+            key = (s, r.cls, r.tp)
+            fl = (r.freq, r.load)
+            assert seen.setdefault(key, fl) == fl, key
+
+
+# ------------------------------------------------------------------
+# column pool / constraint builder / budget plumbing
+# ------------------------------------------------------------------
+def test_dense_pool_matches_legacy_enumeration(table):
+    pool = ColumnPool.dense(table, 3)
+    legacy = [(s, r) for s in range(3) for r in table.rows]
+    assert pool.columns() == legacy
+    assert len(pool) == 3 * len(table.rows)
+    # parallel arrays agree with the Row objects
+    for i in (0, len(pool) // 2, len(pool) - 1):
+        s, r = legacy[i]
+        assert pool.site[i] == s
+        assert pool.cls[i] == r.cls
+        assert pool.tp[i] == r.tp
+        assert pool.load[i] == r.load
+    assert build_columns(table, 3) == legacy
+
+
+def test_constraint_builder_matches_triplet_loops():
+    # two ub blocks + one lb block, assembled both ways
+    b = ConstraintBuilder(4)
+    b.ub([0, 0, 1], [0, 1, 2], [1.0, 2.0, 3.0], [5.0, 6.0])
+    b.ub([0, 0], [0, 3], [4.0, -1.0], [0.0])
+    b.lb([0, 0], [1, 3], [1.0, 1.0], [2.0])
+    A_ub, b_ub, A_lb, b_lb = b.build()
+    ref_ub = sparse.csr_matrix(([1.0, 2.0, 3.0, 4.0, -1.0],
+                                ([0, 0, 1, 2, 2], [0, 1, 2, 0, 3])),
+                               shape=(3, 4))
+    ref_lb = sparse.csr_matrix(([1.0, 1.0], ([0, 0], [1, 3])), shape=(1, 4))
+    assert (A_ub != ref_ub).nnz == 0
+    assert np.allclose(b_ub, [5.0, 6.0, 0.0])
+    assert (A_lb != ref_lb).nnz == 0
+    assert np.allclose(b_lb, [2.0])
+
+
+def test_gpu_budget_pool_matches_legacy_dict(table, sites):
+    load = np.full(9, 10.0)
+    power = np.array([2e6, 1e6, 5e5])
+    p = plan_l(table, sites, power, load)
+    # legacy reference: per-object accumulation loop
+    ref: dict = {}
+    for (s, r), x in zip(p.columns, p.counts):
+        if x > 0:
+            k = (s, r.cls, r.tp)
+            ref[k] = ref.get(k, 0) + int(x) * r.tp
+    assert p.gpu_budget() == ref
+    pool = p.gpu_budget_pool()
+    assert pool.as_dict() == ref
+    assert GpuBudget.coerce(ref).as_dict() == ref
+
+
+def test_plan_s_accepts_budget_pool_and_dict(table, sites):
+    load = np.full(9, 10.0)
+    power = np.array([2e6, 1e6, 5e5])
+    pl = plan_l(table, sites, power, load)
+    p_dict = plan_s(table, sites, power, load, pl.gpu_budget())
+    p_pool = plan_s(table, sites, power, load, pl.gpu_budget_pool())
+    assert (p_dict.counts == p_pool.counts).all()
+    assert p_dict.columns == p_pool.columns
+
+
+def test_wrr_weights_matches_legacy_loop(table, sites):
+    load = np.full(9, 10.0)
+    power = np.array([2e6, 1e6, 5e5])
+    p = plan_l(table, sites, power, load)
+    cap = p.capacity()
+    ref: dict = {c: [] for c in range(9)}
+    for (s, r), x in zip(p.columns, p.counts):
+        if x > 0 and cap[r.cls] > 0:
+            ref[r.cls].append((s, r, x * r.load / cap[r.cls]))
+    got = p.wrr_weights()
+    assert set(got) == set(ref)
+    for c in range(9):
+        assert len(got[c]) == len(ref[c])
+        for (gs, gr, gw), (rs, rr, rw) in zip(got[c], ref[c]):
+            assert (gs, gr) == (rs, rr)
+            assert gw == pytest.approx(rw, rel=1e-12)
+
+
+def test_greedy_baseline_matches_legacy_loop(table, sites):
+    from repro.core.baselines import (baseline_greedy_min_latency,
+                                      knee_points, wrr_split)
+    load = np.full(9, 8.0)
+    got = baseline_greedy_min_latency(table, sites, load)
+    # legacy reference: the original per-site/per-class loop
+    knees = knee_points(table)
+    splits = wrr_split(sites, load)
+    ref_cols, ref_counts = [], []
+    unserved = np.zeros(9)
+    for s, (site, sl) in enumerate(zip(sites, splits)):
+        gpus_left = site.num_gpus
+        for c in range(9):
+            if c not in knees or sl[c] <= 0:
+                unserved[c] += max(sl[c], 0.0) if c not in knees else 0.0
+                continue
+            r = knees[c]
+            need = int(np.ceil(sl[c] / r.load))
+            fit = min(need, gpus_left // r.tp)
+            if fit > 0:
+                ref_cols.append((s, r))
+                ref_counts.append(fit)
+                gpus_left -= fit * r.tp
+            if fit < need:
+                unserved[c] += (need - fit) * r.load
+    got_active = [(c, int(x)) for c, x in zip(got.columns, got.counts)
+                  if x > 0]
+    assert got_active == list(zip(ref_cols, ref_counts))
+    assert np.allclose(got.unserved, unserved)
+
+
+# ------------------------------------------------------------------
+# decomposed-vs-monolithic parity
+# ------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [1, 2, 3, 4])
+def test_decomposed_monolithic_parity(table, sites, seed):
+    """Same sites/power/load: objective within 1%, unserved within 1e-6."""
+    rng_l = np.random.default_rng(seed)
+    rng_p = np.random.default_rng(100 + seed)
+    load = rng_l.uniform(2, 12, 9)
+    power = rng_p.uniform(3e5, 2e6, 3)
+    mono = plan_l(table, sites, power, load, method="monolithic")
+    deco = plan_l(table, sites, power, load, method="decomposed")
+    _check_constraints(deco, sites, power, load)
+    om = plan_objective(mono, DROP_PENALTY)
+    od = plan_objective(deco, DROP_PENALTY)
+    assert od <= om * 1.01 + 1e-9
+    assert abs(deco.unserved.sum() - mono.unserved.sum()) < 1e-6
+    assert deco.status == "decomposed"
+
+
+def test_decomposed_uniform_demand_parity(table, sites):
+    load = np.full(9, 5.0)
+    power = np.array([2e6, 1e6, 5e5])
+    mono = plan_l(table, sites, power, load, method="monolithic")
+    deco = plan_l(table, sites, power, load, method="decomposed")
+    _check_constraints(deco, sites, power, load)
+    assert plan_objective(deco, DROP_PENALTY) <= \
+        plan_objective(mono, DROP_PENALTY) * 1.01
+    assert abs(deco.unserved.sum() - mono.unserved.sum()) < 1e-6
+
+
+def test_decomposed_drought_reports_drops(table, sites):
+    """Extreme drought: decomposed stays feasible and reports slack."""
+    load = np.full(9, 50.0)
+    power = np.array([2e4, 1e4, 1e4])
+    deco = plan_l(table, sites, power, load, method="decomposed")
+    _check_constraints(deco, sites, power, load)
+    assert deco.unserved.sum() > 0
+
+
+def test_auto_method_threshold(table):
+    """auto == monolithic at the paper grid, decomposed above threshold."""
+    small = [SiteSpec(f"s{i}", 128) for i in range(4)]
+    load = np.full(9, 3.0)
+    p = plan_l(table, small, np.full(4, 5e5), load)
+    assert p.status in ("optimal", "fallback")     # monolithic path
+    n = DECOMPOSE_THRESHOLD + 1
+    big = [SiteSpec(f"s{i}", 128) for i in range(n)]
+    p = plan_l(table, big, np.full(n, 5e5), load)
+    assert p.status == "decomposed"
+
+
+def test_decomposed_matches_monolithic_small_fleet_bitwise(table, sites):
+    """Below the threshold the default path is the same HiGHS solve as
+    before the refactor — identical counts for identical inputs."""
+    load = np.full(9, 5.0)
+    power = np.array([2e6, 1e6, 5e5])
+    a = plan_l(table, sites, power, load)
+    b = plan_l(table, sites, power, load, method="monolithic")
+    assert (a.counts == b.counts).all()
+    assert np.allclose(a.unserved, b.unserved)
+
+
+# ------------------------------------------------------------------
+# Planner-S warm starts
+# ------------------------------------------------------------------
+def _fleet_scenario(table, sites):
+    load = np.full(9, 12.0)
+    power = np.array([2e6, 1e6, 5e5])
+    pl = plan_l(table, sites, power, load)
+    return pl.gpu_budget_pool(), power, load
+
+
+def test_plan_s_warm_start_deterministic(table, sites):
+    budget, power, load = _fleet_scenario(table, sites)
+    base = plan_s(table, sites, power, load, budget)
+    pw, ld = power * 0.97, load * 0.98
+    a = plan_s(table, sites, pw, ld, budget, warm=base)
+    b = plan_s(table, sites, pw, ld, budget, warm=base)
+    assert a.status == b.status
+    assert (a.counts == b.counts).all()
+    assert np.allclose(a.unserved, b.unserved)
+
+
+def test_plan_s_warm_chain_deterministic(table, sites):
+    """A chain of warm-started re-solves replays identically."""
+    budget, power, load = _fleet_scenario(table, sites)
+
+    def chain():
+        prev = None
+        out = []
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            pw = power * np.exp(rng.normal(0, 0.03, 3))
+            ld = load * rng.uniform(0.95, 1.05, 9)
+            prev = plan_s(table, sites, pw, ld, budget, warm=prev)
+            out.append(prev.counts.copy())
+        return out
+
+    for xa, xb in zip(chain(), chain()):
+        assert (xa == xb).all()
+
+
+def test_plan_s_warm_start_quality_and_feasibility(table, sites):
+    """Warm result obeys all Fig. 11 constraints and sits within the
+    acceptance gap of the cold solve."""
+    budget, power, load = _fleet_scenario(table, sites)
+    base = plan_s(table, sites, power, load, budget)
+    pw, ld = power * 0.96, load * 1.03
+    warm = plan_s(table, sites, pw, ld, budget, warm=base)
+    cold = plan_s(table, sites, pw, ld, budget)
+    # budget + power constraints
+    used: dict = {}
+    for (s, r), x in zip(warm.columns, warm.counts):
+        if x > 0:
+            used[(s, r.cls, r.tp)] = used.get((s, r.cls, r.tp), 0) + x * r.tp
+    bd = budget.as_dict()
+    for k, v in used.items():
+        assert v <= bd[k] + 1e-9, k
+    assert (warm.power_used() <= pw * (1 + 1e-9)).all()
+    cap = warm.capacity()
+    for c in range(9):
+        assert cap[c] + warm.unserved[c] >= ld[c] - 1e-6
+    # within the warm acceptance gap of the cold objective
+    ow = plan_objective(warm, DROP_PENALTY)
+    oc = plan_objective(cold, DROP_PENALTY)
+    assert ow <= oc * 1.02 + 1e-6
+
+
+def test_plan_s_warm_none_is_cold(table, sites):
+    budget, power, load = _fleet_scenario(table, sites)
+    a = plan_s(table, sites, power, load, budget)
+    b = plan_s(table, sites, power, load, budget, warm=None)
+    assert (a.counts == b.counts).all()

@@ -138,3 +138,51 @@ def test_router_straggler_deweighted(setup):
     eff = router._effective_power(pw)
     assert eff[0] < pw[0]                      # haircut applied
     assert (eff[1:] == pw[1:]).all()
+
+
+def test_router_straggler_haircut_graded(setup):
+    """K1 calibration: the haircut scales with observed slowdown —
+    continuous at the threshold, proportional beyond it, floored."""
+    table, sites, power, arrivals = setup
+    pw = power[:, 0] * 1e6
+    router = HeronRouter(table=table, sites=sites, time_limit_l=20)
+    fleet_lat, thresh = 0.5, router.straggler_threshold
+    for _ in range(60):                        # converge the EWMAs
+        for s in range(1, len(sites)):
+            router.observe_latency(s, fleet_lat)
+        router.observe_latency(0, fleet_lat * thresh * 1.5)   # 1.5x past it
+    eff = router._effective_power(pw)
+    # severity ~1.5 -> keeps ~1/1.5 of its power (between floor and full)
+    frac = eff[0] / pw[0]
+    assert router.straggler_min_haircut < frac < 1.0
+    assert frac == pytest.approx(1 / 1.5, rel=0.05)
+    # pathological site pins at the floor
+    router2 = HeronRouter(table=table, sites=sites, time_limit_l=20)
+    for _ in range(60):
+        for s in range(1, len(sites)):
+            router2.observe_latency(s, fleet_lat)
+        router2.observe_latency(0, fleet_lat * 100)
+    assert router2._effective_power(pw)[0] == pytest.approx(
+        pw[0] * router2.straggler_min_haircut, rel=1e-6)
+
+
+def test_router_straggler_haircut_recovers(setup):
+    """The haircut relaxes as the straggler's EWMA recovers and clears
+    entirely once the site is back inside the threshold."""
+    table, sites, power, arrivals = setup
+    pw = power[:, 0] * 1e6
+    router = HeronRouter(table=table, sites=sites, time_limit_l=20)
+    for _ in range(30):
+        router.observe_latency(0, 25.0)
+        for s in range(1, len(sites)):
+            router.observe_latency(s, 0.5)
+    fracs = [router._effective_power(pw)[0] / pw[0]]
+    for _ in range(40):                        # site 0 heals
+        router.observe_latency(0, 0.5)
+        for s in range(1, len(sites)):
+            router.observe_latency(s, 0.5)
+        fracs.append(router._effective_power(pw)[0] / pw[0])
+    assert fracs[0] < 1.0                      # was deweighted
+    # monotone relaxation as the EWMA recovers
+    assert all(b >= a - 1e-12 for a, b in zip(fracs, fracs[1:]))
+    assert fracs[-1] == 1.0                    # fully recovered
