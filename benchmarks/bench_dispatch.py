@@ -3,18 +3,17 @@
 Times ``RequestScheduler.dispatch`` (vectorized ``GroupTable`` path)
 against ``dispatch_reference`` (the per-``InstanceGroup`` Python loop)
 on randomized fleet-scale plans, verifies 1e-9 agreement on every run,
-and writes ``BENCH_dispatch.json`` at the repo root so future PRs can
-track the dispatch perf trajectory. Acceptance: >= 10x at 64 sites.
+and refreshes the ``BENCH_dispatch.json`` perf tracker at the repo root
+when ``--update-tracker`` is passed (artifacts/bench/dispatch.json is
+written either way). Acceptance: >= 10x at 64 sites.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import numpy as np
 
-from benchmarks.common import row, save
+from benchmarks.common import row, save_tracker
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
 from repro.core.planner_l import Plan
@@ -23,7 +22,6 @@ from repro.data.workload import make_trace
 from repro.power.model import H100_DGX
 
 GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def synthetic_plan(table, rng, num_sites: int, cols_per_site: int = 6) -> Plan:
@@ -82,9 +80,7 @@ def run(fast: bool = True):
     reps = 30 if fast else 50
     results = {str(n): bench_sites(table, n, reps) for n in counts}
 
-    save("dispatch", results)
-    with open(os.path.join(REPO_ROOT, "BENCH_dispatch.json"), "w") as f:
-        json.dump(results, f, indent=1)
+    save_tracker("dispatch", results)
 
     rows = []
     for n, r in results.items():
@@ -100,8 +96,15 @@ def run(fast: bool = True):
 
 
 def main():
-    from benchmarks.common import emit
-    emit(run(fast=True))
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    common.emit(run(fast=not args.full))
 
 
 if __name__ == "__main__":

@@ -6,27 +6,34 @@ the monolithic Fig. 10 ILP walls out):
   * ``plan_l`` solve time vs site count for the monolithic HiGHS path
     and the Lagrangian-decomposed path (4 -> 256 sites), with the
     objective ratio wherever the monolith finishes inside its limit;
+  * drain-budget-active re-plans (``old`` + tight R_L, the paper's
+    stickiness regime) comparing the PR 2-style sequential
+    all-branch-and-cut site loop against the warm-started sequential
+    and process-pooled solves (64/256 sites; 1024 under ``--full``),
+    asserting the pooled plan is bit-identical to the sequential one;
   * ``plan_s`` cold vs warm-started re-solve time (the per-second
     Planner-S loop) with warm acceptance rates;
   * ``simulate_slot_fine`` end-to-end slot wall time with warm starts
     on and off.
 
-Writes ``BENCH_planning.json`` at the repo root so future PRs can track
-the planning perf trajectory. Acceptance: decomposed 256-site plan in
-< 5 s with objective within 1% of the monolith wherever it completes.
+Refreshes the ``BENCH_planning.json`` tracker at the repo root when
+``--update-tracker`` is passed (artifacts/bench/planning.json always).
+Acceptance: decomposed 256-site plan in < 5 s within 1% of the
+monolith wherever it completes, and the drain-active 256-site solve
+>= 2x faster than the PR 2-style sequential loop.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import row, save
+from benchmarks.common import row, save_tracker
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
-from repro.core.planner_l import DROP_PENALTY, SiteSpec, plan_l
+from repro.core.planner_l import (DROP_PENALTY, SiteSpec, drain_limit,
+                                  fleet_drains, plan_l)
 from repro.core.planner_s import plan_s
 from repro.core.planning import plan_objective
 from repro.data.wind import make_site_population
@@ -34,7 +41,6 @@ from repro.data.workload import make_trace
 from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
 
 GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def make_fleet(pop, n: int):
@@ -75,6 +81,52 @@ def bench_plan_l(table, pop, counts, mono_counts, mono_limit):
                 rec["obj_ratio"] = od / max(om, 1e-12)
                 rec["speedup"] = rec["monolithic_s"] / max(
                     rec["decomposed_s"], 1e-12)
+        out[str(n)] = rec
+    return out
+
+
+def bench_drain_parallel(table, pop, counts):
+    """Drain-budget-active re-plans: PR 2-style sequential vs parallel.
+
+    Slot A plans cold; slot B re-plans against perturbed power and a
+    shifted load mix with ``old`` and a tight R_L, three ways:
+    ``pr2_seq`` (workers=1, no site warm start — the PR 2 sequential
+    all-branch-and-cut loop, now drain-priced), ``seq`` (workers=1 with
+    the master-LP site warm start), and ``par`` (process pool, one
+    worker per core). Pool and sequential plans must be bit-identical.
+    """
+    out = {}
+    ncpu = os.cpu_count() or 1
+    for n in counts:
+        sites, power, load = make_fleet(pop, n)
+        rng = np.random.default_rng(n)
+        base = plan_l(table, sites, power, load, workers=1, time_limit=60.0)
+        pw = power * rng.uniform(0.8, 1.05, n)
+        ld = np.roll(load, 3) * rng.uniform(0.8, 1.3, 9)
+        rec = {"sites": n, "gpus": int(sum(s.num_gpus for s in sites)),
+               "workers_par": ncpu}
+        t0 = time.perf_counter()
+        p_pr2 = plan_l(table, sites, pw, ld, old=base, r_frac=0.03,
+                       workers=1, site_warm=False, time_limit=120.0)
+        rec["pr2_seq_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        p_seq = plan_l(table, sites, pw, ld, old=base, r_frac=0.03,
+                       workers=1, time_limit=120.0)
+        rec["seq_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        p_par = plan_l(table, sites, pw, ld, old=base, r_frac=0.03,
+                       workers=ncpu, time_limit=120.0)
+        rec["par_s"] = time.perf_counter() - t0
+        assert (p_par.counts == p_seq.counts).all(), "pool != sequential"
+        lim = drain_limit(base, pw, 0.03)
+        rec["r_limit"] = lim
+        rec["drains"] = fleet_drains(base, p_par, pw)
+        rec["drains_pr2"] = fleet_drains(base, p_pr2, pw)
+        rec["obj_ratio_vs_pr2"] = (plan_objective(p_par, DROP_PENALTY)
+                                   / max(plan_objective(p_pr2, DROP_PENALTY),
+                                         1e-12))
+        rec["speedup_vs_pr2"] = rec["pr2_seq_s"] / max(rec["par_s"], 1e-12)
+        rec["speedup_pool"] = rec["seq_s"] / max(rec["par_s"], 1e-12)
         out[str(n)] = rec
     return out
 
@@ -136,20 +188,21 @@ def run(fast: bool = True):
     if fast:
         counts, mono_counts, mono_limit = (4, 16, 64, 256), (4, 16), 60.0
         warm_counts, reps, fine_sites, fine_seconds = (16, 64), 8, 16, 30
+        drain_counts = (64, 256)
     else:
         counts, mono_counts, mono_limit = (4, 16, 64, 256), (4, 16, 64), 300.0
         warm_counts, reps, fine_sites, fine_seconds = (16, 64, 256), 10, 64, 60
-    pop = make_site_population(max(counts), seed=13)
+        drain_counts = (64, 256, 1024)
+    pop = make_site_population(max(counts + drain_counts), seed=13)
 
     results = {
         "plan_l": bench_plan_l(table, pop, counts, mono_counts, mono_limit),
+        "drain_parallel": bench_drain_parallel(table, pop, drain_counts),
         "plan_s_warm": bench_plan_s_warm(table, pop, warm_counts, reps),
         "fine_sim_warm": bench_fine_sim_warm(table, pop, fine_sites,
                                              fine_seconds),
     }
-    save("planning", results)
-    with open(os.path.join(REPO_ROOT, "BENCH_planning.json"), "w") as f:
-        json.dump(results, f, indent=1, default=float)
+    save_tracker("planning", results)
 
     rows = []
     for n, r in results["plan_l"].items():
@@ -172,16 +225,35 @@ def run(fast: bool = True):
                     f"{f['cold_wall_s']:.2f}s -> {f['warm_wall_s']:.2f}s "
                     f"({f['wall_speedup']:.1f}x, {f['warm_hits']}/"
                     f"{f['warm_solves']} warm)"))
+    for n, r in results["drain_parallel"].items():
+        rows.append(row(
+            f"plan_l_drains_parallel_{n}sites", r["par_s"] * 1e6,
+            f"drains {r['drains']:.0f}/{r['r_limit']:.0f}: PR2-seq "
+            f"{r['pr2_seq_s']:.2f}s -> warm-seq {r['seq_s']:.2f}s -> "
+            f"{r['workers_par']}w pool {r['par_s']:.2f}s "
+            f"({r['speedup_vs_pr2']:.1f}x vs PR2, obj "
+            f"x{r['obj_ratio_vs_pr2']:.4f}, bit-identical)"))
     r256 = results["plan_l"]["256"]
     rows.append(row("plan_l_256site_budget", 0.0,
                     f"{r256['decomposed_s']:.2f}s per slot "
                     f"(target < 5s, unserved {r256['decomposed_unserved']:.1f})"))
+    d256 = results["drain_parallel"]["256"]
+    rows.append(row("plan_l_drain_speedup_budget", 0.0,
+                    f"{d256['speedup_vs_pr2']:.1f}x over PR2 sequential at "
+                    f"256 sites with drains active (target >= 2x)"))
     return rows
 
 
 def main():
-    from benchmarks.common import emit
-    emit(run(fast=True))
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    common.emit(run(fast=not args.full))
 
 
 if __name__ == "__main__":

@@ -3,22 +3,46 @@
 Every bench module exposes ``run(fast: bool) -> list[Row]`` where a Row is
 ``(name, us_per_call, derived)`` — the CSV contract of benchmarks.run —
 and writes its raw numbers under artifacts/bench/<module>.json.
+
+Tracker hygiene: the repo-root ``BENCH_<name>.json`` files are committed
+perf trackers. Bench modules write them through ``save_tracker``, which
+only touches the root file when ``--update-tracker`` was passed (to
+``benchmarks.run`` or a module's own ``main``); a default run writes the
+artifacts copy only, so benching one module can never dirty another
+PR's tracker.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from contextlib import contextmanager
 
-ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "artifacts", "bench")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACTS = os.path.join(REPO_ROOT, "artifacts", "bench")
+
+UPDATE_TRACKER = False      # set by --update-tracker in run.py / module mains
 
 
 def save(name: str, payload: dict) -> None:
     os.makedirs(ARTIFACTS, exist_ok=True)
     with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
+
+
+def save_tracker(name: str, payload: dict) -> None:
+    """Write artifacts/bench/<name>.json always; the committed root
+    tracker ``BENCH_<name>.json`` only under ``--update-tracker``."""
+    save(name, payload)
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    if UPDATE_TRACKER:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+    else:
+        print(f"# {os.path.basename(path)} not updated "
+              "(pass --update-tracker to refresh the committed tracker)",
+              file=sys.stderr)
 
 
 class Timer:

@@ -16,7 +16,11 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_kernels          kernels      (Pallas vs oracle)
     bench_roofline         §Roofline    (dry-run artifact table)
 
-``python -m benchmarks.run [--full] [--only mod1,mod2]``
+``python -m benchmarks.run [--full] [--only mod1,mod2] [--update-tracker]``
+
+``--update-tracker`` lets modules refresh their committed repo-root
+``BENCH_*.json`` trackers; without it every run writes only the
+artifacts/bench/ copies (see benchmarks.common.save_tracker).
 """
 from __future__ import annotations
 
@@ -24,6 +28,8 @@ import argparse
 import sys
 import time
 import traceback
+
+from benchmarks import common
 
 MODULES = [
     "bench_rightsizing",
@@ -49,7 +55,10 @@ def main(argv=None) -> int:
                     help="full-week / full-grid runs (slow)")
     ap.add_argument("--only", default="",
                     help="comma-separated module subset")
+    ap.add_argument("--update-tracker", action="store_true",
+                    help="refresh committed repo-root BENCH_*.json trackers")
     args = ap.parse_args(argv)
+    common.UPDATE_TRACKER = args.update_tracker
     mods = [m.strip() for m in args.only.split(",") if m.strip()] or MODULES
 
     print("name,us_per_call,derived")

@@ -35,10 +35,15 @@ def wrr_split(sites: list[SiteSpec], load_per_class: np.ndarray) -> list[np.ndar
 
 def dynamollm_site_plan(table: LookupTable, site: SiteSpec,
                         site_load: np.ndarray, time_limit: float = 30.0) -> Plan:
-    """Site-local min-power assignment with *assumed-infinite* power."""
+    """Site-local min-power assignment with *assumed-infinite* power.
+
+    Pinned to the monolithic solve: the baseline is a fixed external
+    reference (single-site ILPs are cheap), so its plans must not move
+    when the Heron-side decomposition heuristics evolve.
+    """
     inf_power = np.array([1e15])
     return plan_l(table, [site], inf_power, site_load, objective="power",
-                  time_limit=time_limit)
+                  time_limit=time_limit, method="monolithic")
 
 
 def baseline_wrr_dynamollm(table: LookupTable, sites: list[SiteSpec],

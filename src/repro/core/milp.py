@@ -20,6 +20,24 @@ solve. Planner-S re-solves inside a slot move power/load by a few
 percent per second, so the previous second's plan almost always passes
 (status ``"warm"``), turning the per-second MILP into one LP plus a few
 vector repairs.
+
+Two-part acceptance (``warm_split``)
+------------------------------------
+Planner objectives mix two scales: completion cost (latency/power per
+instance, O(1..1e3)) and slack penalised at ``DROP_PENALTY`` (1e6 per
+unserved rps). A single relative gap on their sum collapses in
+slack-saturated droughts: 1% of a slack-dominated objective is under a
+rps of unserved, so the one-instance rounding gap between any integer
+point and the fractional LP rejects every warm candidate — even ones
+that match the true MILP optimum — and the planner cold-solves each
+second exactly when solves are hardest. ``warm_split`` (a boolean mask
+of the penalty columns) splits the test: the cost part must sit within
+``warm_accept_gap`` of the LP's cost part, and the penalty part within
+the same relative gap of the LP's penalty part *plus* an absolute
+allowance ``warm_slack_abs`` (one instance-granularity of drops, in
+objective units) that is granted only when the LP itself carries slack
+— outside droughts the penalty test stays exact, so a warm point that
+drops servable load is still rejected.
 """
 from __future__ import annotations
 
@@ -45,12 +63,18 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
                integrality=None, upper=None, time_limit: float = 60.0,
                mip_rel_gap: float = 1e-3,
                warm: Optional[np.ndarray] = None,
-               warm_accept_gap: float = 0.01) -> MilpResult:
+               warm_accept_gap: float = 0.01,
+               warm_split: Optional[np.ndarray] = None,
+               warm_slack_abs: float = 0.0) -> MilpResult:
     """min c.x  s.t.  A_ub x <= b_ub,  A_lb x >= b_lb,  0 <= x <= upper.
 
     ``warm``: a previous solution over the same variable layout; accepted
     without a branch-and-cut solve when, after repair, it is feasible and
     within ``warm_accept_gap`` (relative) of the LP bound.
+    ``warm_split``: boolean mask of penalty (slack) columns enabling the
+    two-part acceptance test (see module docstring); ``warm_slack_abs``
+    is the absolute penalty-part allowance granted when the LP itself
+    carries slack.
     """
     t0 = time.perf_counter()
     n = len(c)
@@ -64,12 +88,12 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
         x = _warm_repair(np.asarray(warm, float), c, A_ub, b_ub, A_lb, b_lb,
                          integ, ub)
         if x is not None:
-            bound = _lp_bound(c, A_ub, b_ub, A_lb, b_lb, ub)
-            if bound is not None:
-                obj = float(c @ x)
-                if obj <= bound + warm_accept_gap * max(1.0, abs(bound)):
-                    return MilpResult(x=x, status="warm", objective=obj,
-                                      solve_seconds=time.perf_counter() - t0)
+            x_lp = _lp_solution(c, A_ub, b_ub, A_lb, b_lb, ub)
+            if x_lp is not None and _warm_accept(c, x, x_lp, warm_split,
+                                                 warm_accept_gap,
+                                                 warm_slack_abs):
+                return MilpResult(x=x, status="warm", objective=float(c @ x),
+                                  solve_seconds=time.perf_counter() - t0)
 
     cons = []
     if A_ub is not None and A_ub.shape[0]:
@@ -106,15 +130,45 @@ def _stack_leq(A_ub, b_ub, A_lb, b_lb):
 
 def _lp_bound(c, A_ub, b_ub, A_lb, b_lb, ub) -> Optional[float]:
     """LP-relaxation lower bound (one HiGHS simplex, no integrality)."""
+    x = _lp_solution(c, A_ub, b_ub, A_lb, b_lb, ub)
+    return None if x is None else float(c @ x)
+
+
+def _lp_solution(c, A_ub, b_ub, A_lb, b_lb, ub) -> Optional[np.ndarray]:
+    """LP-relaxation optimum (one HiGHS simplex, no integrality)."""
     n = len(c)
     A, b = _stack_leq(A_ub, b_ub, A_lb, b_lb)
     res = linprog(c, A_ub=A, b_ub=b, bounds=list(zip(np.zeros(n), ub)),
                   method="highs")
-    return float(res.fun) if res.success else None
+    return res.x if res.success else None
 
 
-def _repair_geq(x, c, A_lb, b_lb, integ, ub) -> None:
-    """Repair A_lb x >= b_lb in place: bump the cheapest helpful column."""
+def _warm_accept(c, x, x_lp, split, gap, slack_abs) -> bool:
+    """LP-bound acceptance: single-part, or two-part when ``split`` set."""
+    if split is None:
+        bound = float(c @ x_lp)
+        return float(c @ x) <= bound + gap * max(1.0, abs(bound))
+    m = np.asarray(split, bool)
+    cost_x, cost_lp = float(c[~m] @ x[~m]), float(c[~m] @ x_lp[~m])
+    pen_x, pen_lp = float(c[m] @ x[m]), float(c[m] @ x_lp[m])
+    # absolute (one-instance-granularity) allowances only when the LP
+    # itself is slack-saturated — outside droughts a warm point must
+    # serve everything the LP serves, and the cost test stays relative
+    drought = pen_lp > 1e-9
+    cost_allow = (float(c[~m].max()) if drought and (~m).any() else 0.0)
+    if cost_x > cost_lp + gap * max(1.0, abs(cost_lp)) + cost_allow:
+        return False
+    allow = slack_abs if drought else 0.0
+    return pen_x <= pen_lp + gap * max(1.0, abs(pen_lp)) + allow
+
+
+def _repair_geq(x, c, A_lb, b_lb, integ, ub, allowed=None) -> None:
+    """Repair A_lb x >= b_lb in place: bump the cheapest helpful column.
+
+    ``allowed`` optionally restricts the candidate columns (the final
+    warm-repair pass uses it to fill residual shortfall with pure-slack
+    columns only, which no ≤-row can re-break).
+    """
     if A_lb is None or not A_lb.shape[0]:
         return
     A = sparse.csr_matrix(A_lb)
@@ -125,7 +179,10 @@ def _repair_geq(x, c, A_lb, b_lb, integ, ub) -> None:
             break
         i = int(np.argmax(b_lb - lhs))
         col_gain = A[i].toarray().ravel()
-        cand = np.where((col_gain > 1e-12) & (x < ub - 1e-9))[0]
+        ok = (col_gain > 1e-12) & (x < ub - 1e-9)
+        if allowed is not None:
+            ok &= allowed
+        cand = np.where(ok)[0]
         if len(cand) == 0:
             break  # cannot repair; return best effort
         j = cand[np.argmin(c[cand] / col_gain[cand])]
@@ -168,8 +225,12 @@ def _warm_repair(x0, c, A_ub, b_ub, A_lb, b_lb, integ,
 
     Shed ≤-violations first (power dropped since the last solve), then
     add capacity for ≥-violations (load rose), then re-shed in case the
-    additions overdrew a cap. Returns None if still infeasible — the
-    caller then cold-solves.
+    additions overdrew a cap. The re-shed can break ≥-rows again (the
+    classic shed/cover cycle when a cap binds tightly in a drought), so
+    a final pass fills any residual shortfall using only columns with
+    no ≤-row footprint — the pure slack variables — which nothing can
+    re-break. Returns None if still infeasible — the caller then
+    cold-solves.
     """
     x = np.clip(x0, 0.0, np.where(np.isfinite(ub), ub, np.inf))
     x[integ > 0] = np.round(x[integ > 0])
@@ -177,6 +238,9 @@ def _warm_repair(x0, c, A_ub, b_ub, A_lb, b_lb, integ,
     _repair_leq(x, A_ub, b_ub, integ)
     _repair_geq(x, c, A_lb, b_lb, integ, ub)
     _repair_leq(x, A_ub, b_ub, integ)
+    if A_ub is not None and A_ub.shape[0]:
+        foot = np.asarray(abs(sparse.csr_matrix(A_ub)).sum(axis=0)).ravel()
+        _repair_geq(x, c, A_lb, b_lb, integ, ub, allowed=foot <= 1e-12)
     return x if _feasible(x, A_ub, b_ub, A_lb, b_lb) else None
 
 

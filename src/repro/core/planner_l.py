@@ -25,39 +25,45 @@ Deviations from the literal Fig. 10 (documented in DESIGN.md):
 Solve paths
 -----------
 The Fig. 10 ILP couples sites only through the per-class serving-capacity
-constraint (3) — everything else ((1), (2), (4), (5)) is block-diagonal
-per site. The monolithic HiGHS solve exploits none of that structure and
-hits a wall around ~16 heterogeneous sites (~10 s/slot); the paper's own
-premise (cross-farm complementarity) and follow-up systems (XWind-style
-cross-site routing over dozens-to-hundreds of micro-DCs) live exactly in
-the regime the monolith cannot reach. ``plan_l`` therefore has two paths:
+constraint (3) and the fleet drain budget (6,7) — everything else ((1),
+(2), (4), (5)) is block-diagonal per site. The monolithic HiGHS solve
+exploits none of that structure and hits a wall around ~16 heterogeneous
+sites (~10 s/slot); the paper's own premise (cross-farm complementarity)
+and follow-up systems (XWind-style cross-site routing over dozens-to-
+hundreds of micro-DCs) live exactly in the regime the monolith cannot
+reach. ``plan_l`` therefore has two paths:
 
+  * ``method="decomposed"`` (the default at every fleet size) —
+    Lagrangian price decomposition on the coupling constraints. An LP
+    relaxation of the aggregate problem — including the fleet drain
+    budget — yields per-class capacity prices λ_c, a per-drain price
+    λ_R (the budget row's dual), and fractional per-site capacity
+    quotas. Each site then solves a small independent ILP covering its
+    quota at minimum cost, with declined quota priced at the fleet
+    marginal λ_c and drains of its live (s, c, t) groups priced at λ_R.
+    Sites whose LP restriction rounds cleanly (residual shortfall
+    within one-instance granularity) skip branch-and-cut outright —
+    most do; the hard remainder are independent ILPs run in a
+    ``ProcessPoolExecutor`` (``workers=``; contiguous chunks, results
+    reassembled in site order — bit-identical to the sequential loop).
+    A drain-aware surplus-trim, greedy cheapest-column repair, and a
+    projection step that restores live capacity when the independent
+    site solutions jointly overshoot R_L close the feasibility and
+    integrality gaps; a drain-guarded cross-site 1-swap polish closes
+    most of the rest. Fleet drains stay ≤ R_L on every slot
+    (tests/test_planning.py) with objectives within ~1% of the monolith
+    wherever the monolith can finish.
   * ``method="monolithic"`` — the original single HiGHS branch-and-cut
-    over the full column pool. Used below ``DECOMPOSE_THRESHOLD`` sites
-    (default: always, for the paper's 4-site grid) so small-fleet results
-    stay bit-comparable with earlier revisions.
-  * ``method="decomposed"`` — Lagrangian price decomposition on (3):
-    an LP relaxation of the aggregate problem yields per-class capacity
-    prices (its duals) and fractional per-site capacity quotas (its
-    solution); each site then solves a small independent ILP covering
-    its quota at minimum cost, with declined quota priced at the fleet
-    marginal λ_c; a surplus-trim and a greedy cheapest-column repair
-    close the integrality gap, and a short subgradient loop re-prices
-    classes that remain short. Sites the LP left idle are skipped
-    outright — only the fleet's cheapest sites pay a MILP. This is
-    a deliberate deviation from the literal Fig. 10 — the global R_L
-    drain budget (6,7) couples sites and is *not* enforced across
-    subproblems (each site still sees a drain-free objective); fleets
-    that need the exact stickiness bound use the monolithic path. In
-    exchange, 256-site fleets plan in seconds instead of tens of
-    minutes, with objectives within ~1% of the monolith wherever the
-    monolith can finish (tests/test_planning.py).
+    over the full column pool, kept as the exact reference for parity
+    tests and small-fleet A/B runs.
 
-``method="auto"`` (the default) picks monolithic at or below
-``DECOMPOSE_THRESHOLD`` sites and decomposed above it.
+``method="auto"`` (the default) is an alias for ``decomposed``: the
+two-regime site-count split is gone now that the decomposition enforces
+the full Fig. 10 constraint set, R_L included.
 """
 from __future__ import annotations
 
+import os
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -68,11 +74,9 @@ import numpy as np
 from repro.core.lookup import LookupTable, Row
 from repro.core.milp import solve_milp
 from repro.core.planning import (ColumnPool, ConstraintBuilder, FleetState,
-                                 GpuBudget, sct_key, sct_unkey, table_soa,
-                                 trim_surplus)
+                                 GpuBudget, sct_key, sct_unkey, table_soa)
 
 DROP_PENALTY = 1e6          # per unserved rps — dominates any latency gain
-DECOMPOSE_THRESHOLD = 24    # sites; above this, "auto" uses the decomposition
 Objective = Literal["latency", "power"]
 Method = Literal["auto", "monolithic", "decomposed"]
 
@@ -268,8 +272,7 @@ def _solve_monolithic(pool: ColumnPool, sites: list[SiteSpec],
     # died needs no drain (the instances are dark regardless).
     if use_reconfig:
         old_agg = _live_old_agg(old, power_w, pool)
-        total_old = max(1.0, old_agg.sum())
-        r_limit = max(1.0, r_frac * total_old)
+        r_limit = _drain_budget(old_agg, r_frac)
         # drain count: R >= old_live - sum X   (growth is free)
         b.ub(np.concatenate([codes, np.arange(G)]),
              np.concatenate([iX, iR]),
@@ -301,17 +304,57 @@ def _solve_monolithic(pool: ColumnPool, sites: list[SiteSpec],
                 num_sites=S, _cols=pool.column_arrays(), _pool=pool)
 
 
+def _drain_budget(old_agg: np.ndarray, r_frac: float) -> float:
+    """R_L in instances: r_frac of the (power-scaled) live fleet, ≥ 1."""
+    return max(1.0, r_frac * max(1.0, float(old_agg.sum())))
+
+
+def _live_scale(old: Plan, power_w: np.ndarray) -> np.ndarray:
+    """Per-site survival fraction of the old plan's power draw."""
+    old_power = old.power_used()
+    scale = np.ones(old.num_sites)
+    pos = old_power > 0
+    scale[pos] = np.minimum(
+        1.0, np.asarray(power_w, float)[:old.num_sites][pos] / old_power[pos])
+    return scale
+
+
+def fleet_drains(old: Plan, new: Plan, power_w: np.ndarray) -> float:
+    """Σ_g max(0, live_old_g − new_g) — the drain total R_L bounds.
+
+    Counts drains of *live* previous capacity at (s, c, t) granularity,
+    with old capacity power-scaled exactly as the planners scale it
+    (capacity whose power died needs no drain). Public so tests and
+    benchmarks can audit any plan pair against the budget.
+    """
+    pool = getattr(new, "_pool", None)
+    if pool is not None and len(pool):
+        old_agg = _live_old_agg(old, np.asarray(power_w, float), pool)
+        new_g = np.bincount(pool.sct()[0],
+                            weights=np.asarray(new.counts, float),
+                            minlength=len(old_agg))
+        return float(np.maximum(old_agg - new_g, 0.0).sum())
+    scale = _live_scale(old, power_w)
+    new_agg = new.agg_by_sct()
+    return float(sum(max(0.0, v * scale[k[0]] - new_agg.get(k, 0))
+                     for k, v in old.agg_by_sct().items()))
+
+
+def drain_limit(old: Plan, power_w: np.ndarray, r_frac: float) -> float:
+    """The R_L budget the planner enforces for this (old, power) slot."""
+    scale = _live_scale(old, power_w)
+    site = old.column_arrays()[0]
+    total = float((np.asarray(old.counts, float) * scale[site]).sum())
+    return max(1.0, r_frac * max(1.0, total))
+
+
 def _live_old_agg(old: Plan, power_w: np.ndarray,
                   pool: ColumnPool) -> np.ndarray:
     """Old live instance counts per current (s,c,t) group, power-scaled."""
     _, g_site, g_cls, g_tp = pool.sct()
     g_key = sct_key(g_site, g_cls, g_tp)
     old_site, old_cls, old_tp, _, _, _ = old.column_arrays()
-    old_power = old.power_used()
-    scale = np.ones(old.num_sites)
-    pos = old_power > 0
-    scale[pos] = np.minimum(1.0, np.asarray(power_w, float)[:old.num_sites][pos]
-                            / old_power[pos])
+    scale = _live_scale(old, power_w)
     old_key = sct_key(old_site, old_cls, old_tp.astype(np.intp))
     pos_idx = np.searchsorted(g_key, old_key)
     pos_idx = np.clip(pos_idx, 0, len(g_key) - 1)
@@ -326,21 +369,32 @@ def _live_old_agg(old: Plan, power_w: np.ndarray,
 # decomposed path (Lagrangian prices + per-site ILPs)
 # ------------------------------------------------------------------
 def _lp_master(pool: ColumnPool, gpus: np.ndarray, power_w: np.ndarray,
-               load: np.ndarray,
-               cost: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """LP relaxation of the aggregate problem: capacity prices + quotas.
+               load: np.ndarray, cost: np.ndarray,
+               old_agg: Optional[np.ndarray] = None,
+               r_limit: float = np.inf
+               ) -> tuple[np.ndarray, float, np.ndarray]:
+    """LP relaxation of the aggregate problem: prices + quotas.
 
     The LP drops integrality and the one-(f,l) constraint — it is the
     natural Lagrangian master: its capacity duals price one rps of each
-    class at the margin, and its (fractional) solution says how much
-    capacity of each class each site should provision. Returns
-    (prices [9], x_lp [n]).
+    class at the margin, its (fractional) solution says how much
+    capacity of each class each site should provision, and — when an
+    old plan is present — the dual of its fleet drain-budget row prices
+    one drained live instance at the margin (λ_R). Returns
+    (prices [9], λ_R, x_lp [n]).
     """
     from scipy.optimize import linprog
 
     n = len(pool)
-    nv = n + 9
-    c_vec = np.concatenate([cost, np.full(9, DROP_PENALTY)])
+    if old_agg is not None:
+        codes = pool.sct()[0]
+        G = len(pool.sct()[1])
+        dgrp = np.nonzero(old_agg > 1e-9)[0]
+    else:
+        dgrp = np.empty(0, dtype=np.intp)
+    Gd = len(dgrp)
+    nv = n + 9 + Gd
+    c_vec = np.concatenate([cost, np.full(9, DROP_PENALTY), np.zeros(Gd)])
     b = ConstraintBuilder(nv)
     b.ub(pool.site, np.arange(n), pool.tp.astype(float), gpus)
     b.ub(pool.site, np.arange(n), pool.power, np.asarray(power_w, float))
@@ -349,95 +403,287 @@ def _lp_master(pool: ColumnPool, gpus: np.ndarray, power_w: np.ndarray,
          np.concatenate([np.arange(n), n + np.arange(9)]),
          np.concatenate([-pool.load, -np.ones(9)]),
          -np.asarray(load, float))
+    if Gd:
+        # drain link per live group:  -Σ_{j∈g} x_j - d_g <= -old_g
+        gmap = np.full(G, -1, dtype=np.intp)
+        gmap[dgrp] = np.arange(Gd)
+        loc = gmap[codes]
+        msk = loc >= 0
+        b.ub(np.concatenate([loc[msk], np.arange(Gd)]),
+             np.concatenate([np.arange(n)[msk], n + 9 + np.arange(Gd)]),
+             np.concatenate([-np.ones(int(msk.sum())), -np.ones(Gd)]),
+             -old_agg[dgrp])
+        # fleet drain budget:  Σ_g d_g <= R_L   (dual → λ_R)
+        b.ub(np.zeros(Gd, dtype=np.intp), n + 9 + np.arange(Gd),
+             np.ones(Gd), [float(r_limit)])
     A_ub, b_ub, _, _ = b.build()
     S = len(gpus)
     res = linprog(c_vec, A_ub=A_ub, b_ub=b_ub, method="highs")
     if not res.success:
-        return np.zeros(9), np.zeros(n)
-    prices = np.maximum(-res.ineqlin.marginals[2 * S: 2 * S + 9], 0.0)
-    return prices, np.maximum(res.x[:n], 0.0)
+        return np.zeros(9), 0.0, np.zeros(n)
+    marg = res.ineqlin.marginals
+    prices = np.maximum(-marg[2 * S: 2 * S + 9], 0.0)
+    lam_r = float(max(-marg[-1], 0.0)) if Gd else 0.0
+    return prices, lam_r, np.maximum(res.x[:n], 0.0)
 
 
-def _site_subproblem(soa, cost_rows: np.ndarray, prices: np.ndarray,
-                     quota: np.ndarray, gpus_s: float, power_s: float,
-                     time_limit: float) -> np.ndarray:
+def _site_subproblem(shared: tuple, sub: tuple) -> np.ndarray:
     """Per-site ILP: meet the site's LP capacity quota at minimum cost.
 
-    min Σ cost_j x_j + Σ_c λ_c u_c
+    min Σ cost_j x_j + Σ_c λ_c u_c + λ_R Σ_g d_g
     s.t. GPU cap, power cap, one (f,l) per (c,t),
-         Σ_j load_j x_j + u_c >= quota_c.
+         Σ_j load_j x_j + u_c >= quota_c,
+         Σ_{j∈g} x_j + d_g >= old_g          (live groups only).
 
     Unserved quota ``u_c`` is priced at the fleet marginal λ_c — the
     site covers its share only where local serving beats buying the
     capacity back at the fleet margin; what it declines flows to the
-    global repair step. Returns integer counts over all table rows.
+    global repair step. Drains ``d_g`` of the site's live previous
+    capacity are priced at the fleet drain marginal λ_R, so a site only
+    walks away from running instances when the re-placement win beats
+    the fleet's going drain price; the hard R_L cap itself is restored
+    globally by ``FleetState.project_drains``.
+
+    When ``x0`` (the master LP's restriction to this site) is given,
+    the solve is warm-started by rounding: the restriction is projected
+    onto one (f, l) per group and floored — always feasible (caps only
+    shrink, declined quota is priced slack) — and *accepted outright*
+    when every class's residual shortfall sits within one-instance
+    rounding granularity, because that residue is exactly what the
+    integer program could not serve either (it would round up where the
+    fleet margin says decline) and the global repair re-covers it at
+    the same greedy margin. Sites whose restriction splits across
+    operating points — where branch-and-cut genuinely reorganizes —
+    fall through to the ILP. Most sites take the fast path, which is
+    what makes fleet-scale drain-priced re-plans cheap.
+
+    ``shared``/``sub`` are plain array tuples (not objects) so site
+    problems pickle cheaply into worker processes; results depend only
+    on their contents, which keeps pooled and sequential solves
+    bit-identical. Returns integer counts over all table rows.
     """
-    m = len(soa.cls)
-    tp = soa.tp.astype(float)
+    x = _site_round_accept(shared, sub)
+    return x if x is not None else _site_ilp(shared, sub)
+
+
+def _site_round_accept(shared: tuple, sub: tuple) -> Optional[np.ndarray]:
+    """The rounding fast path of ``_site_subproblem`` (numpy only)."""
+    cls, tp, load_r, power_r, cost_rows, prices, time_limit = shared
+    quota, gpus_s, power_s, old_g, lam, x0 = sub
+    if x0 is None:
+        return None
+    m = len(cls)
+    key = sct_key(np.zeros(m, dtype=np.intp), cls, tp)
+    codes = np.unique(key, return_inverse=True)[1]
+    cap_j = np.maximum(gpus_s // np.maximum(tp, 1), 0).astype(float)
+    xs = np.minimum(np.asarray(x0, float), cap_j)
+    # one (f,l) per (c,t): keep each group's largest-capacity row
+    order = np.lexsort((np.arange(m), -xs * load_r, codes))
+    first = np.ones(m, bool)
+    first[1:] = codes[order][1:] != codes[order][:-1]
+    keep = np.zeros(m, bool)
+    keep[order[first]] = True
+    xk = np.where(keep, np.floor(xs + 1e-9), 0.0)
+    covered = np.bincount(cls, weights=xk * load_r, minlength=9)
+    shortfall = np.maximum(quota, 0.0) - covered
+    gran = np.zeros(9)                      # per-class one-instance load
+    np.maximum.at(gran, cls, load_r)
+    if (shortfall <= gran + 1e-9).all():
+        return xk.astype(int)
+    return None
+
+
+def _site_ilp(shared: tuple, sub: tuple) -> np.ndarray:
+    """The branch-and-cut body of ``_site_subproblem``."""
+    cls, tp, load_r, power_r, cost_rows, prices, time_limit = shared
+    quota, gpus_s, power_s, old_g, lam, x0 = sub
+    m = len(cls)
+    tpf = tp.astype(float)
     # (cls, tp) groups via the shared validated encoding (site fixed at 0)
-    key = sct_key(np.zeros(m, dtype=np.intp), soa.cls, soa.tp)
+    key = sct_key(np.zeros(m, dtype=np.intp), cls, tp)
     uniq, codes = np.unique(key, return_inverse=True)
     G = len(uniq)
-    # variable layout: [X (m) | Y (m) | u (9)]
-    nv = 2 * m + 9
+    cap_j = np.maximum(gpus_s // np.maximum(tp, 1), 0).astype(float)
+    drain = (old_g is not None and lam > 1e-12
+             and float(np.sum(old_g)) > 1e-9)
+    dgrp = np.nonzero(old_g > 1e-9)[0] if drain else np.empty(0, np.intp)
+    Gd = len(dgrp)
+    # variable layout: [X (m) | Y (m) | u (9) | d (Gd)]
+    nv = 2 * m + 9 + Gd
     iX = np.arange(m)
     iY = m + np.arange(m)
     iU = 2 * m + np.arange(9)
-    cap_j = np.maximum(gpus_s // np.maximum(soa.tp, 1), 0).astype(float)
+    iD = 2 * m + 9 + np.arange(Gd)
 
     c_vec = np.zeros(nv)
     c_vec[iX] = cost_rows
     c_vec[iU] = prices
+    if Gd:
+        c_vec[iD] = lam
     b = ConstraintBuilder(nv)
-    b.ub(np.zeros(m, np.intp), iX, tp, [gpus_s])
-    b.ub(np.zeros(m, np.intp), iX, soa.power, [power_s])
+    b.ub(np.zeros(m, np.intp), iX, tpf, [gpus_s])
+    b.ub(np.zeros(m, np.intp), iX, power_r, [power_s])
     b.ub(codes, iY, np.ones(m), np.ones(G))
     b.ub(np.concatenate([np.arange(m), np.arange(m)]),
          np.concatenate([iX, iY]),
          np.concatenate([np.ones(m), -cap_j]), np.zeros(m))
-    b.lb(np.concatenate([soa.cls, np.arange(9)]),
+    b.lb(np.concatenate([cls, np.arange(9)]),
          np.concatenate([iX, iU]),
-         np.concatenate([soa.load, np.ones(9)]), quota)
+         np.concatenate([load_r, np.ones(9)]), quota)
+    if Gd:
+        gmap = np.full(G, -1, dtype=np.intp)
+        gmap[dgrp] = np.arange(Gd)
+        loc = gmap[codes]
+        msk = loc >= 0
+        b.lb(np.concatenate([loc[msk], np.arange(Gd)]),
+             np.concatenate([iX[msk], iD]),
+             np.ones(int(msk.sum()) + Gd), old_g[dgrp])
     A_ub, b_ub, A_lb, b_lb = b.build()
     integrality = np.zeros(nv)
     integrality[iX] = 1
     integrality[iY] = 1
-    upper = np.concatenate([cap_j, np.ones(m), np.maximum(quota, 0.0)])
+    upper = np.concatenate([cap_j, np.ones(m), np.maximum(quota, 0.0),
+                            old_g[dgrp] if Gd else np.empty(0)])
     res = solve_milp(c_vec, A_ub=A_ub, b_ub=b_ub, A_lb=A_lb, b_lb=b_lb,
                      integrality=integrality, upper=upper,
                      time_limit=time_limit)
     return np.round(res.x[iX]).astype(int)
 
 
-def _greedy_repair(counts: np.ndarray, pool: ColumnPool, cost: np.ndarray,
-                   load: np.ndarray, gpus: np.ndarray,
-                   power_w: np.ndarray) -> None:
-    """Serve residual shortfall with cheapest-completion columns (in place)."""
-    FleetState(counts, pool, cost, gpus, pool.site, power_w).cover_all(load)
+def _solve_site_chunk(payload: tuple) -> list:
+    shared, subs = payload
+    return [_site_ilp(shared, sub) for sub in subs]
 
 
-def _swap_improve(counts: np.ndarray, pool: ColumnPool, cost: np.ndarray,
-                  load: np.ndarray, gpus: np.ndarray, power_w: np.ndarray,
-                  deadline: float, max_rounds: int = 8) -> None:
-    """Cross-site 1-swap polish (in place).
+def _resolve_workers(workers: Optional[int], n_hard: int) -> int:
+    if workers is not None:
+        return max(1, int(workers))
+    if n_hard < 24:                   # pool spin-up beats small ILP batches
+        return 1
+    return min(os.cpu_count() or 1, 8)
+
+
+def _solve_sites(shared: tuple, subs: list, workers: Optional[int]) -> list:
+    """Solve the independent site problems, pooling the hard ones.
+
+    The rounding fast path runs inline for every site first (pure
+    numpy, sub-millisecond); only the sites whose LP restriction did
+    not round — the ones that pay a real branch-and-cut — go to the
+    ``ProcessPoolExecutor``, in contiguous chunks reassembled in site
+    order. Each solve depends only on its (shared, sub) arrays, so any
+    worker count (including the sequential fallback) returns
+    bit-identical plans — provided the site ILPs finish inside their
+    per-site time limit (a branch-and-cut truncated mid-search is
+    wall-clock dependent like any time-limited solve; the ILPs here are
+    tiny and the budget is split deterministically over the hard batch,
+    so limits bind only under extreme contention). The pool engages
+    exactly when there is enough ILP work to amortise its spin-up.
+    """
+    out: list = [_site_round_accept(shared, sub) for sub in subs]
+    hard = [i for i, x in enumerate(out) if x is None]
+    # split the solve's time budget over the ILPs that actually run —
+    # a deterministic bound (no wall-clock break mid-loop, which would
+    # make pooled and sequential runs diverge under time pressure)
+    sub_tl = max(0.05, min(2.0, shared[-1] / max(1, len(hard))))
+    shared = shared[:-1] + (sub_tl,)
+    w = _resolve_workers(workers, len(hard))
+    if w <= 1 or len(hard) < 2:
+        for i in hard:
+            out[i] = _site_ilp(shared, subs[i])
+        return out
+    from concurrent.futures import ProcessPoolExecutor
+    chunk = max(1, -(-len(hard) // (w * 4)))
+    payloads = [(shared, [subs[i] for i in hard[k:k + chunk]])
+                for k in range(0, len(hard), chunk)]
+    with ProcessPoolExecutor(max_workers=w) as ex:
+        solved = [x for xs in ex.map(_solve_site_chunk, payloads)
+                  for x in xs]
+    for i, x in zip(hard, solved):
+        out[i] = x
+    return out
+
+
+def _drain_exchange(st: FleetState, load: np.ndarray, deadline: float,
+                    max_moves: int = 400) -> None:
+    """Re-choose *which* live groups spend the drain budget (in place).
+
+    The projection restores drained capacity cheapest-first, which fixes
+    feasibility but not the monolith's other degree of freedom: with the
+    budget binding, the optimal plan drains the most *expensive* live
+    surplus and keeps the cheap. Each move evicts one live instance
+    whose class capacity is surplus (creating one drain) and restores
+    one instance of the currently-cheapest drained group (retiring one
+    drain) — net drains ≈ 0, cost strictly down; moves that would leave
+    the budget violated or a class short are undone.
+    """
+    p = st.pool
+    if st.old_group is None:
+        return
+    cheapest = st._group_best()
+    blocked: set = set()                    # restore groups with no room
+    for _ in range(max_moves):
+        if time.perf_counter() > deadline:
+            return
+        gs = np.nonzero(st.drains > 1e-9)[0]
+        gs = gs[[int(g) not in blocked for g in gs]]
+        if len(gs) == 0:
+            return
+        js = np.where(st.group_row[gs] >= 0, st.group_row[gs], cheapest[gs])
+        ok = js >= 0
+        js, gr = js[ok], gs[ok]
+        if len(js) == 0:
+            return
+        i = int(np.argmin(st.cost[js]))
+        j_r, g_r = int(js[i]), int(gr[i])
+        # evictable: live-old instances whose class stays covered
+        ev = ((st.counts > 0)
+              & (st.cap[p.cls] - p.load >= load[p.cls] - 1e-9)
+              & (st.cost > st.cost[j_r] + 1e-9))
+        cand = np.nonzero(ev)[0]
+        g = st.codes[cand]                  # vectorized removal_drain(j, 1)
+        dgain = (np.maximum(st.old_group[g] - (st.group_count[g] - 1), 0.0)
+                 - st.drains[g])
+        cand = cand[dgain > 1e-9]
+        if len(cand) == 0:
+            return
+        j_e = int(cand[np.argmax(st.cost[cand])])
+        st.remove(j_e, 1)
+        room = (st.gpu_left[st.gpu_key[j_r]] >= p.tp[j_r]
+                and st.pw_left[p.site[j_r]] >= p.power[j_r] - 1e-9)
+        if room:
+            st.add(j_r, 1)
+        if not room or st.fleet_drains > st.r_limit + 1e-9:
+            if room:
+                st.remove(j_r, 1)
+            st.add(j_e, 1)
+            # this restore group cannot take the exchange — skip it and
+            # keep trying the other drained groups
+            blocked.add(g_r)
+
+
+def _swap_improve(st: FleetState, load: np.ndarray, deadline: float,
+                  max_rounds: int = 8) -> None:
+    """Cross-site 1-swap polish (in place on ``st``).
 
     The per-site quota ILPs cannot mix load points inside one (s, c, t)
     group (constraint 4), so a site handed a 5-rps quota may round up to
     2x4-rps where the monolith would mix 4+1 across sites. Each round
     tries, per class, to evict one instance of the most expensive active
     column and re-cover the lost capacity with the fleet's cheapest
-    columns; the swap commits only when it strictly lowers cost. This is
-    exactly the cross-site granularity trade the monolithic ILP performs
-    and the decomposition's last percent of optimality gap.
+    columns; the swap commits only when it strictly lowers cost, and an
+    eviction that would spend drain budget the fleet no longer has is
+    skipped outright.
     """
-    st = FleetState(counts, pool, cost, gpus, pool.site, power_w)
+    pool, counts, cost = st.pool, st.counts, st.cost
     for _ in range(max_rounds):
         improved = False
         for c in range(9):
             act = np.nonzero((pool.cls == c) & (counts > 0))[0]
             if len(act) == 0:
                 continue
-            j = act[np.argmax(cost[act])]
+            j = int(act[np.argmax(cost[act])])
+            if st.removal_drain(j, 1) > st.drain_headroom() + 1e-9:
+                continue
             saved = cost[j]
             before = counts.copy()
             st.remove(j, 1)
@@ -448,7 +694,7 @@ def _swap_improve(counts: np.ndarray, pool: ColumnPool, cost: np.ndarray,
                 improved = True
             else:
                 counts[:] = before
-                st.__init__(counts, pool, cost, gpus, pool.site, power_w)
+                st.rebuild()
             if time.perf_counter() > deadline:
                 return
         if not improved:
@@ -457,7 +703,10 @@ def _swap_improve(counts: np.ndarray, pool: ColumnPool, cost: np.ndarray,
 
 def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
                       power_w: np.ndarray, load_per_class: np.ndarray,
-                      objective: Objective, time_limit: float) -> Plan:
+                      objective: Objective, time_limit: float,
+                      old: Optional[Plan] = None, r_frac: float = 0.03,
+                      workers: Optional[int] = None,
+                      site_warm: bool = True) -> Plan:
     t0 = time.perf_counter()
     S = len(sites)
     table = pool.table
@@ -469,19 +718,30 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
     cost = pool.cost(objective)
     row_cost = soa.e2e if objective == "latency" else soa.power
 
-    prices, x_lp = _lp_master(pool, gpus, power, load, cost)
+    if old is not None:
+        old_agg = _live_old_agg(old, power, pool)
+        r_limit = _drain_budget(old_agg, r_frac)
+    else:
+        old_agg, r_limit = None, np.inf
+    prices, lam_r, x_lp = _lp_master(pool, gpus, power, load, cost,
+                                     old_agg, r_limit)
     # per-site per-class capacity quotas from the fractional LP optimum
     quotas = np.zeros((S, 9))
     np.add.at(quotas, (pool.site, pool.cls), x_lp * pool.load)
+    g_site = pool.sct()[1]
     counts = np.zeros(S * R, dtype=int)
-    sub_tl = max(0.05, min(2.0, time_limit / max(1, S)))
+    shared = (soa.cls, soa.tp, soa.load, soa.power, row_cost, prices,
+              time_limit)
+    subs, sub_sites = [], []
     for s in range(S):
         if quotas[s].max() <= 1e-9:
-            continue
-        if time.perf_counter() - t0 > time_limit:
-            break
-        counts[s * R:(s + 1) * R] = _site_subproblem(
-            soa, row_cost, prices, quotas[s], gpus[s], power[s], sub_tl)
+            continue        # the LP left the site idle (or power-dead)
+        old_s = old_agg[g_site == s] if old_agg is not None else None
+        x0 = x_lp[s * R:(s + 1) * R] if site_warm else None
+        subs.append((quotas[s], gpus[s], power[s], old_s, lam_r, x0))
+        sub_sites.append(s)
+    for s, x in zip(sub_sites, _solve_sites(shared, subs, workers)):
+        counts[s * R:(s + 1) * R] = x
     # Sites rationally *decline* quota priced exactly at the LP margin
     # (integer serving rounds up, declining does not), so the marginal
     # capacity of each class intentionally lands in the global repair
@@ -491,16 +751,34 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
     # TP instead of exporting the load (observed as a 5% objective gap).
 
     fcounts = counts.astype(float)
-    trim_surplus(fcounts, pool, cost, load)
-    _greedy_repair(fcounts, pool, cost, load, gpus, power)
-    _swap_improve(fcounts, pool, cost, load, gpus, power,
-                  deadline=t0 + time_limit)
+    st = FleetState(fcounts, pool, cost, gpus, pool.site, power,
+                    old_group=old_agg, r_limit=r_limit)
+    st.trim(load)               # drain-aware surplus trim
+    drains_ok = st.project_drains()
+    #                             hard R_L feasibility across sites —
+    #                             before the cover, so restorations claim
+    #                             their headroom first and the repair
+    #                             places serving capacity around them
+    st.cover_all(load)          # greedy cheapest-completion repair
+    _drain_exchange(st, load, deadline=t0 + time_limit)
+    _swap_improve(st, load, deadline=t0 + time_limit)
     counts = np.round(fcounts).astype(int)
     cap = np.bincount(pool.cls, weights=counts * pool.load, minlength=9)
     unserved = np.maximum(load - cap, 0.0)
     unserved[unserved <= 1e-9] = 0.0
+    # projection is best-effort in fractional power-scaling corners
+    # (restoring integer instances cannot always reach a fractional
+    # old-live total) — never fail silently when the budget is missed
+    status = "decomposed"
+    if not drains_ok:
+        status = "decomposed_overbudget"
+        warnings.warn(
+            f"plan_l: drain projection left fleet drains "
+            f"{st.fleet_drains:.1f} above R_L={st.r_limit:.1f} "
+            "(no feasible restoration); plan returned with status "
+            "'decomposed_overbudget'", RuntimeWarning, stacklevel=3)
     return Plan(columns=pool.columns(), counts=counts, unserved=unserved,
-                objective=objective, status="decomposed",
+                objective=objective, status=status,
                 solve_seconds=time.perf_counter() - t0, num_sites=S,
                 _cols=pool.column_arrays(), _pool=pool)
 
@@ -509,29 +787,26 @@ def plan_l(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
            load_per_class: np.ndarray, *, objective: Objective = "latency",
            old: Optional[Plan] = None, r_frac: float = 0.03,
            time_limit: float = 60.0, method: Method = "auto",
-           decompose_threshold: int = DECOMPOSE_THRESHOLD) -> Plan:
+           workers: Optional[int] = None, site_warm: bool = True) -> Plan:
     """Solve the Fig. 10 ILP for one 15-min slot.
 
     ``method`` selects the solve path (see module docstring): "auto"
-    uses the monolithic HiGHS solve at or below ``decompose_threshold``
-    sites (bit-comparable with the paper grid) and the Lagrangian
-    per-site decomposition above it. The decomposed path does not
-    enforce the cross-site R_L drain budget — ``old``/``r_frac`` only
-    bind on the monolithic path (deviation documented in the module
-    docstring).
+    (the default) is the drain-priced Lagrangian decomposition at every
+    fleet size — the full constraint set, R_L included, with per-site
+    ILPs solved independently; "monolithic" is the exact single-solve
+    reference. ``workers`` sizes the process pool for the hard site
+    ILPs on the decomposed path (None = auto: sequential for small hard
+    batches, else one worker per core up to 8); any value returns
+    bit-identical plans. ``site_warm`` enables the rounding fast path
+    off the master LP's site restriction (disable for an
+    all-branch-and-cut A/B — the PR 2-style sequential loop).
     """
     S = len(sites)
     pool = ColumnPool.dense(table, S)
-    if method == "auto":
-        method = "decomposed" if S > decompose_threshold else "monolithic"
-    if method == "decomposed":
-        if old is not None:
-            warnings.warn(
-                "plan_l: the decomposed path does not enforce the R_L "
-                "reconfiguration bound; old/r_frac are ignored "
-                "(use method='monolithic' for exact stickiness)",
-                RuntimeWarning, stacklevel=2)
+    if method in ("auto", "decomposed"):
         return _solve_decomposed(pool, sites, power_w, load_per_class,
-                                 objective, time_limit)
+                                 objective, time_limit, old=old,
+                                 r_frac=r_frac, workers=workers,
+                                 site_warm=site_warm)
     return _solve_monolithic(pool, sites, power_w, load_per_class, objective,
                              old, r_frac, time_limit)

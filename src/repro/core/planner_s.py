@@ -74,7 +74,8 @@ def _warm_vector(warm: Plan, cols: list[tuple[int, Row]], pool: ColumnPool,
     trim_surplus(xc, pool, cost, load)
     st = FleetState(xc, pool, cost, g_gpus, codes, power_w,
                     enforce_sct=False)
-    st.cover_all(load)
+    st.shed_overdraw()          # power dropped: free the worst W/rps
+    st.cover_all(load)          # ... and re-cover at feasible rows
     x0[n:] = np.maximum(load - st.cap, 0.0)
     return x0
 
@@ -140,9 +141,15 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
     x0 = (_warm_vector(warm, cols, pool, pool.cost(objective), g_gpus,
                        codes, np.asarray(power_w, float), load_per_class)
           if warm is not None else None)
+    # two-part warm acceptance: slack terms tested separately from
+    # completion cost, with a one-instance-granularity allowance in
+    # slack-saturated droughts (see core.milp docstring)
+    split = np.zeros(nv, bool)
+    split[iSl] = True
     res = solve_milp(c_vec, A_ub=A_ub, b_ub=b_ub, A_lb=A_lb, b_lb=b_lb,
                      integrality=integrality, upper=upper,
-                     time_limit=time_limit, warm=x0)
+                     time_limit=time_limit, warm=x0, warm_split=split,
+                     warm_slack_abs=DROP_PENALTY * float(pool.load.max()))
     return Plan(columns=cols, counts=np.round(res.x[iZ]).astype(int),
                 unserved=np.maximum(res.x[iSl], 0.0), objective=objective,
                 status=res.status, solve_seconds=res.solve_seconds,

@@ -331,15 +331,30 @@ class FleetState:
     (s, c, t) group (the one-(f,l) rule: a live group only grows at its
     current point; pass ``enforce_sct=False`` for Fig. 11 problems,
     which have no such constraint).
+
+    Drain accounting (R_L)
+    ----------------------
+    When ``old_group`` (previous live instance counts per (s, c, t)
+    group, aligned to ``pool.sct()`` order) and ``r_limit`` are given,
+    the state also tracks the fleet drain total
+    ``Σ_g max(0, old_g − count_g)`` — the quantity the Fig. 10
+    reconfiguration bound (6,7) caps. ``trim`` and the swap polish
+    consult ``drain_headroom``/``removal_drain`` before removing live
+    capacity, and ``project_drains`` restores feasibility when the
+    incoming counts (independent per-site solutions) overshoot R_L.
     """
 
     def __init__(self, counts: np.ndarray, pool: ColumnPool,
                  cost: np.ndarray, gpu_cap: np.ndarray,
                  gpu_key: np.ndarray, power_w: np.ndarray,
-                 enforce_sct: bool = True):
+                 enforce_sct: bool = True,
+                 old_group: Optional[np.ndarray] = None,
+                 r_limit: float = np.inf):
         self.counts = counts
         self.pool = pool
         self.cost = cost
+        self._gpu_cap = np.asarray(gpu_cap, float)
+        self._power_w = np.asarray(power_w, float)
         self.gpu_key = np.asarray(gpu_key, dtype=np.intp)
         self.enforce_sct = enforce_sct
         self.codes = pool.sct()[0]
@@ -355,6 +370,41 @@ class FleetState:
                                       minlength=pool.num_sites))
         self.cap = np.bincount(pool.cls, weights=counts * pool.load,
                                minlength=9)
+        self.r_limit = float(r_limit)
+        if old_group is None:
+            self.old_group = None
+            self.fleet_drains = 0.0
+        else:
+            self.old_group = np.asarray(old_group, float)
+            self.group_count = np.bincount(self.codes, weights=counts,
+                                           minlength=G).astype(float)
+            self.drains = np.maximum(self.old_group - self.group_count, 0.0)
+            self.fleet_drains = float(self.drains.sum())
+
+    def _shift_group(self, g: int, delta: float) -> None:
+        if self.old_group is None:
+            return
+        self.group_count[g] += delta
+        d = max(0.0, self.old_group[g] - self.group_count[g])
+        self.fleet_drains += d - self.drains[g]
+        self.drains[g] = d
+
+    def rebuild(self) -> None:
+        """Recompute all derived state after an external counts rollback."""
+        self.__init__(self.counts, self.pool, self.cost, self._gpu_cap,
+                      self.gpu_key, self._power_w, self.enforce_sct,
+                      self.old_group, self.r_limit)
+
+    def drain_headroom(self) -> float:
+        return self.r_limit - self.fleet_drains
+
+    def removal_drain(self, j: int, k: int) -> float:
+        """By how much removing ``k`` of column ``j`` grows fleet drains."""
+        if self.old_group is None:
+            return 0.0
+        g = self.codes[j]
+        return (max(0.0, self.old_group[g] - (self.group_count[g] - k))
+                - self.drains[g])
 
     def add(self, j: int, k: int) -> None:
         p = self.pool
@@ -363,6 +413,7 @@ class FleetState:
         self.pw_left[p.site[j]] -= k * p.power[j]
         self.cap[p.cls[j]] += k * p.load[j]
         self.group_row[self.codes[j]] = j
+        self._shift_group(self.codes[j], k)
 
     def remove(self, j: int, k: int) -> None:
         p = self.pool
@@ -372,6 +423,7 @@ class FleetState:
         self.cap[p.cls[j]] -= k * p.load[j]
         if self.counts[j] <= 0:
             self.group_row[self.codes[j]] = -1
+        self._shift_group(self.codes[j], -k)
 
     def cover(self, c: int, deficit: float,
               budget: float = np.inf) -> Optional[float]:
@@ -424,6 +476,135 @@ class FleetState:
             short = load[c] - self.cap[c]
             if short > 1e-9:
                 self.cover(c, short)
+
+    def shed_overdraw(self) -> None:
+        """Shed instances at sites drawing beyond their power cap.
+
+        Removal order is power-per-rps (free the most power per rps of
+        capacity lost), so a follow-up ``cover_all`` can re-provision
+        the lost load at power-feasible rows — the greedy equivalent of
+        downclocking under a power drop, which a plain
+        heaviest-contributor shed cannot express.
+        """
+        p = self.pool
+        ppr = p.power / np.maximum(p.load, 1e-12)
+        for s in np.nonzero(self.pw_left < -1e-9)[0]:
+            idx = np.nonzero((p.site == s) & (self.counts > 0))[0]
+            for j in idx[np.argsort(-ppr[idx], kind="stable")]:
+                if self.pw_left[s] >= -1e-9:
+                    break
+                k = min(int(self.counts[j]),
+                        int(np.ceil(-self.pw_left[s] / p.power[j])))
+                if k > 0:
+                    self.remove(j, k)
+
+    def trim(self, load: np.ndarray) -> None:
+        """Remove surplus instances, most-expensive-per-rps first.
+
+        The drain-aware sibling of ``trim_surplus``: a removal that
+        would push the fleet drain total past ``r_limit`` is capped to
+        the column's no-drain slack (count above the group's old live
+        count) plus the remaining drain headroom.
+        """
+        p = self.pool
+        ratio = self.cost / np.maximum(p.load, 1e-12)
+        for c in range(9):
+            if self.cap[c] - load[c] <= 1e-12:
+                continue
+            idx = np.nonzero((p.cls == c) & (self.counts > 0))[0]
+            idx = idx[np.argsort(-ratio[idx], kind="stable")]
+            for j in idx:
+                surplus = self.cap[c] - load[c]
+                if surplus <= 1e-12:
+                    break
+                k = min(int(self.counts[j]), int(surplus / p.load[j]))
+                if k > 0 and self.old_group is not None:
+                    g = self.codes[j]
+                    free = max(0.0, self.group_count[g] - self.old_group[g])
+                    # drain-free slack stays removable even when the
+                    # incoming counts already overshoot the budget
+                    # (negative headroom must not swallow it)
+                    k = min(k, int(free + max(0.0, self.drain_headroom())
+                                   + 1e-9))
+                if k > 0:
+                    self.remove(j, k)
+
+    def _group_best(self, score: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per group: index of its min-``score`` column (first on ties).
+
+        Default score is cost per rps — the right metric for picking a
+        group's operating point when the restored capacity should keep
+        serving load (a per-instance-cheapest choice would park groups
+        at their lightest load point and strand their GPUs).
+        """
+        if score is None:
+            score = self.cost / np.maximum(self.pool.load, 1e-12)
+        G = len(self.group_row)
+        order = np.argsort(score, kind="stable")[::-1]
+        best = np.full(G, -1, dtype=np.intp)
+        best[self.codes[order]] = order          # last write = min score
+        return best
+
+    def project_drains(self) -> bool:
+        """Restore live capacity until fleet drains fit ``r_limit``.
+
+        Independent per-site solutions can jointly overshoot the fleet
+        drain budget (λ_R prices drains but does not hard-cap them).
+        This projection greedily re-adds instances to drained (s, c, t)
+        groups — at the group's active operating point when it has one,
+        else its cheapest row — cheapest-cost first; when no drained
+        group has GPU/power headroom it evicts the most expensive
+        no-drain instance at a drained group's site to make room. The
+        all-old-live point is drain-free and feasible (old capacity is
+        power-scaled before drains are counted), so this terminates
+        inside the budget in all but pathological fractional-scaling
+        corners; returns whether the budget is met.
+        """
+        if self.old_group is None or self.fleet_drains <= self.r_limit + 1e-9:
+            return True
+        p = self.pool
+        cheapest = self._group_best()
+        _, g_site, _, _ = p.sct()
+        for _ in range(100_000):
+            if self.fleet_drains <= self.r_limit + 1e-9:
+                return True
+            gs = np.nonzero(self.drains > 1e-9)[0]
+            if len(gs) == 0:
+                return True
+            # restore column per drained group: active row, else cheapest
+            js = np.where(self.group_row[gs] >= 0, self.group_row[gs],
+                          cheapest[gs])
+            ok = js >= 0
+            js, grp = js[ok], gs[ok]
+            room = np.minimum(
+                self.gpu_left[self.gpu_key[js]] // np.maximum(p.tp[js], 1),
+                np.floor(self.pw_left[p.site[js]]
+                         / np.maximum(p.power[js], 1e-12) + 1e-9))
+            fit = room >= 1
+            if fit.any():
+                cand, cgrp = js[fit], grp[fit]
+                i = int(np.argmin(self.cost[cand]))
+                j, g = int(cand[i]), int(cgrp[i])
+                k = int(min(room[fit][i],
+                            np.ceil(self.drains[g] - 1e-9),
+                            self.fleet_drains - self.r_limit + 1))
+                self.add(j, max(1, k))
+                continue
+            # no headroom: evict the most expensive no-drain instance at
+            # a drained group's site, then retry the restore
+            evicted = False
+            for g in gs[np.argsort(-self.drains[gs], kind="stable")]:
+                s = g_site[g]
+                cand = np.nonzero((p.site == s) & (self.counts > 0))[0]
+                cand = cand[[self.removal_drain(int(j), 1) <= 1e-9
+                             for j in cand]]
+                if len(cand):
+                    self.remove(int(cand[np.argmax(self.cost[cand])]), 1)
+                    evicted = True
+                    break
+            if not evicted:
+                return False            # stuck — best effort (documented)
+        return self.fleet_drains <= self.r_limit + 1e-9
 
 
 def trim_surplus(counts: np.ndarray, pool: ColumnPool,

@@ -21,7 +21,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.lookup import LookupTable
-from repro.core.planner_l import Objective, Plan, SiteSpec, plan_l
+from repro.core.planner_l import Method, Objective, Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
 from repro.core.scheduler import Configurator, DispatchResult, RequestScheduler
@@ -40,6 +40,8 @@ class HeronRouter:
     straggler_alpha: float = 0.2          # EWMA coefficient
     straggler_threshold: float = 2.0      # deweight sites slower than 2x fleet
     straggler_min_haircut: float = 0.25   # floor of the graded power haircut
+    planner_method: Method = "auto"       # "monolithic" = exact reference
+    planner_workers: Optional[int] = None  # site-ILP process pool size
 
     _plan_l: Optional[Plan] = None
     _plan_s: Optional[Plan] = None
@@ -104,7 +106,8 @@ class HeronRouter:
         p = plan_l(self.table, self.sites,
                    self._effective_power(predicted_power_w), predicted_load,
                    objective=self.objective, old=self._plan_l,
-                   r_frac=self.r_frac, time_limit=self.time_limit_l)
+                   r_frac=self.r_frac, time_limit=self.time_limit_l,
+                   method=self.planner_method, workers=self.planner_workers)
         self._cfgtor.apply(self._plan_l, p, self._now)
         self._plan_l = p
         self._plan_s = None

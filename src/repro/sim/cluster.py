@@ -57,7 +57,7 @@ from repro.core.baselines import (apply_power_reality,
                                   baseline_greedy_min_latency,
                                   baseline_wrr_dynamollm, shed_counts_batch)
 from repro.core.lookup import LookupTable
-from repro.core.planner_l import Plan, SiteSpec, plan_l
+from repro.core.planner_l import Method, Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
 from repro.core.scheduler import Configurator, GroupTable, RequestScheduler
@@ -116,12 +116,17 @@ def simulate_week(scheduler: SchedulerName, table: LookupTable,
                   arrivals_rps: np.ndarray, *,
                   predictor_kind: str = "oracle", r_frac: float = 0.03,
                   time_limit: float = 20.0,
-                  slots: Optional[int] = None) -> WeekResult:
+                  slots: Optional[int] = None,
+                  planner_method: Method = "auto",
+                  planner_workers: Optional[int] = None) -> WeekResult:
     """Slot-level week simulation.
 
     power_mw: [S, T] available generation per site; arrivals_rps: [9, T].
     The site's usable power is min(generation, provisioned demand) — the
     provisioned hardware cap is already expressed by the GPU constraint.
+    ``planner_method``/``planner_workers`` select the Planner-L solve
+    path ("auto" = the drain-priced decomposition at every fleet size;
+    "monolithic" = the exact reference) and its site-ILP pool size.
     """
     S, T = power_mw.shape
     T = min(T, arrivals_rps.shape[1]) if slots is None else min(slots, T)
@@ -137,10 +142,12 @@ def simulate_week(scheduler: SchedulerName, table: LookupTable,
         loads = arrivals_rps[:, t]
         if scheduler == "heron":
             p = plan_l(table, sites, pred_w, loads, objective="latency",
-                       old=old, r_frac=r_frac, time_limit=time_limit)
+                       old=old, r_frac=r_frac, time_limit=time_limit,
+                       method=planner_method, workers=planner_workers)
         elif scheduler == "heron_min_power":
             p = plan_l(table, sites, pred_w, loads, objective="power",
-                       old=old, r_frac=r_frac, time_limit=time_limit)
+                       old=old, r_frac=r_frac, time_limit=time_limit,
+                       method=planner_method, workers=planner_workers)
         elif scheduler == "wrr_dynamollm":
             p = baseline_wrr_dynamollm(table, sites, loads,
                                        time_limit=time_limit)

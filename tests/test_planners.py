@@ -57,7 +57,7 @@ def test_plan_l_constraints(table, sites):
     load = np.full(9, 5.0)
     power = np.array([2e6, 1e6, 5e5])
     p = plan_l(table, sites, power, load, objective="latency")
-    assert p.status in ("optimal", "fallback")
+    assert p.status in ("decomposed", "optimal", "fallback")
     _check_plan(p, table, sites, power, load)
     assert p.unserved.sum() < 1e-6          # ample power: everything served
 

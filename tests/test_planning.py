@@ -4,9 +4,15 @@ GpuBudget), the decomposed Planner-L solve path, and Planner-S warm starts.
 The load-bearing guarantees:
   * decomposed-vs-monolithic parity — same sites/power/load must agree on
     objective within 1% and on unserved within 1e-6 (seeded scenarios);
-  * the decomposed plan satisfies every Fig. 10 constraint exactly;
-  * warm-started ``plan_s`` is deterministic and lands within the warm
-    acceptance gap of the cold solve;
+  * the decomposed plan satisfies every Fig. 10 constraint exactly —
+    including the cross-site R_L drain budget: fleet drains stay under
+    the budget on every slot of a chained-plan sequence, at every tested
+    fleet size (4/16/24/48);
+  * process-pooled site solves return bit-identical plans to the
+    sequential loop for any worker count;
+  * warm-started ``plan_s`` is deterministic, lands within the warm
+    acceptance gap of the cold solve, and keeps warm-hitting in
+    slack-saturated droughts (two-part acceptance);
   * the columnar pool reproduces the legacy per-object enumerations
     bit-for-bit (column order, budget dicts, WRR weights).
 """
@@ -18,13 +24,15 @@ from scipy import sparse
 
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
-from repro.core.planner_l import (DECOMPOSE_THRESHOLD, DROP_PENALTY, Plan,
-                                  SiteSpec, build_columns, plan_l)
+from repro.core.planner_l import (DROP_PENALTY, Plan, SiteSpec,
+                                  build_columns, drain_limit, fleet_drains,
+                                  plan_l)
 from repro.core.planner_s import plan_s
 from repro.core.planning import (ColumnPool, ConstraintBuilder, GpuBudget,
                                  plan_objective)
+from repro.data.wind import make_site_population
 from repro.data.workload import make_trace
-from repro.power.model import H100_DGX
+from repro.power.model import (H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW)
 
 GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
 
@@ -208,27 +216,119 @@ def test_decomposed_drought_reports_drops(table, sites):
     assert deco.unserved.sum() > 0
 
 
-def test_auto_method_threshold(table):
-    """auto == monolithic at the paper grid, decomposed above threshold."""
-    small = [SiteSpec(f"s{i}", 128) for i in range(4)]
-    load = np.full(9, 3.0)
-    p = plan_l(table, small, np.full(4, 5e5), load)
-    assert p.status in ("optimal", "fallback")     # monolithic path
-    n = DECOMPOSE_THRESHOLD + 1
-    big = [SiteSpec(f"s{i}", 128) for i in range(n)]
-    p = plan_l(table, big, np.full(n, 5e5), load)
-    assert p.status == "decomposed"
+def test_auto_method_is_decomposed_everywhere(table):
+    """auto == decomposed at every fleet size; monolith is an override."""
+    for n in (1, 4, 32):
+        fleet = [SiteSpec(f"s{i}", 128) for i in range(n)]
+        p = plan_l(table, fleet, np.full(n, 5e5), np.full(9, 3.0))
+        assert p.status == "decomposed"
+    mono = plan_l(table, [SiteSpec("s0", 128)], np.array([5e5]),
+                  np.full(9, 3.0), method="monolithic")
+    assert mono.status in ("optimal", "fallback")
 
 
-def test_decomposed_matches_monolithic_small_fleet_bitwise(table, sites):
-    """Below the threshold the default path is the same HiGHS solve as
-    before the refactor — identical counts for identical inputs."""
+def test_default_matches_decomposed_bitwise(table, sites):
+    """The auto default is the decomposed solve — identical counts."""
     load = np.full(9, 5.0)
     power = np.array([2e6, 1e6, 5e5])
     a = plan_l(table, sites, power, load)
-    b = plan_l(table, sites, power, load, method="monolithic")
+    b = plan_l(table, sites, power, load, method="decomposed")
     assert (a.counts == b.counts).all()
     assert np.allclose(a.unserved, b.unserved)
+
+
+def test_monolithic_reference_deterministic(table, sites):
+    """The monolith override stays available and reproducible (the exact
+    Fig. 10 reference the parity suite measures against)."""
+    load = np.full(9, 5.0)
+    power = np.array([2e6, 1e6, 5e5])
+    a = plan_l(table, sites, power, load, method="monolithic")
+    b = plan_l(table, sites, power, load, method="monolithic")
+    assert a.status in ("optimal", "fallback")
+    assert (a.counts == b.counts).all()
+
+
+# ------------------------------------------------------------------
+# R_L drain budget on the decomposed path
+# ------------------------------------------------------------------
+def _pop_fleet(n: int, seed: int = 13):
+    """Heterogeneous wind-farm fleet (same construction as the benches)."""
+    pop = make_site_population(n, seed=seed)
+    sites, power = [], []
+    for s in pop[:n]:
+        pods = max(1, int(np.percentile(s.long_term_mw, 20.0)
+                          // SUPERPOD_PEAK_MW))
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        power.append(min(s.series_mw[100],
+                         np.percentile(s.long_term_mw, 20.0)) * 1e6)
+    power = np.array(power)
+    total = sum(s.num_gpus for s in sites)
+    load = np.full(9, total * 0.1 * 0.3 / 9)
+    return sites, power, load
+
+
+@pytest.mark.parametrize("n_sites", [4, 16, 24, 48])
+def test_decomposed_enforces_drain_budget(table, n_sites):
+    """Fleet drains ≤ R_L on every slot of a chained-plan sequence, with
+    load shifts and power wobbles forcing reconfiguration pressure."""
+    sites, power, load = _pop_fleet(n_sites)
+    rng = np.random.default_rng(n_sites)
+    old = plan_l(table, sites, power, load, time_limit=30.0)
+    for step in range(3):
+        pw = power * rng.uniform(0.75, 1.1, n_sites)
+        ld = np.roll(load, 2 * step + 2) * rng.uniform(0.7, 1.4, 9)
+        p = plan_l(table, sites, pw, ld, old=old, r_frac=0.03,
+                   time_limit=30.0)
+        assert p.status == "decomposed"
+        lim = drain_limit(old, pw, 0.03)
+        dr = fleet_drains(old, p, pw)
+        assert dr <= lim + 1e-6, (step, dr, lim)
+        _check_constraints(p, sites, pw, np.maximum(ld, 0.0))
+        old = p
+
+
+@pytest.mark.parametrize("n_sites", [4, 16])
+def test_decomposed_drain_parity_with_monolith(table, n_sites):
+    """Under a tight R_L both paths respect the same hard budget and
+    the decomposed objective stays within 1% of the exact monolith —
+    i.e. the fast path buys the same stickiness at the same price."""
+    sites, power, load = _pop_fleet(n_sites)
+    old = plan_l(table, sites, power, load, time_limit=30.0)
+    pw = power * 0.95
+    ld = np.roll(load, 3) * 1.2
+    deco = plan_l(table, sites, pw, ld, old=old, r_frac=0.02,
+                  time_limit=30.0)
+    mono = plan_l(table, sites, pw, ld, old=old, r_frac=0.02,
+                  method="monolithic", time_limit=120.0)
+    lim = drain_limit(old, pw, 0.02)
+    assert deco.status == "decomposed"          # projection met the budget
+    assert fleet_drains(old, deco, pw) <= lim + 1e-6
+    if mono.status == "optimal":
+        assert fleet_drains(old, mono, pw) <= lim + 1e-6
+        od = plan_objective(deco, DROP_PENALTY)
+        om = plan_objective(mono, DROP_PENALTY)
+        assert od <= om * 1.01 + 1e-9
+
+
+# ------------------------------------------------------------------
+# parallel site solves: bit-stable across worker counts
+# ------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1])
+def test_parallel_site_solves_bit_identical(table, seed):
+    """Process-pool and sequential site solves return the same plan for
+    every worker count — drains active so the priced path is exercised."""
+    n = 24
+    sites, power, load = _pop_fleet(n, seed=13 + seed)
+    rng = np.random.default_rng(seed)
+    old = plan_l(table, sites, power, load, workers=1, time_limit=30.0)
+    pw = power * rng.uniform(0.8, 1.05, n)
+    ld = np.roll(load, 4) * 1.25
+    plans = [plan_l(table, sites, pw, ld, old=old, r_frac=0.03,
+                    workers=w, time_limit=30.0) for w in (1, 2, 4)]
+    for p in plans[1:]:
+        assert (p.counts == plans[0].counts).all()
+        assert np.allclose(p.unserved, plans[0].unserved)
+        assert p.status == "decomposed"
 
 
 # ------------------------------------------------------------------
@@ -302,3 +402,29 @@ def test_plan_s_warm_none_is_cold(table, sites):
     a = plan_s(table, sites, power, load, budget)
     b = plan_s(table, sites, power, load, budget, warm=None)
     assert (a.counts == b.counts).all()
+
+
+def test_plan_s_warm_hits_survive_drought(table, sites):
+    """Two-part acceptance regression (ROADMAP item): warm hits must not
+    collapse when the objective is slack-saturated. A drought chain keeps
+    warm-hitting, and warm drops stay within one instance granularity of
+    the cold solve's."""
+    load = np.full(9, 30.0)
+    power = np.array([2e5, 1e5, 5e4])       # deep drought
+    pl = plan_l(table, sites, power, load)
+    budget = pl.gpu_budget_pool()
+    rng = np.random.default_rng(3)
+    prev = plan_s(table, sites, power, load, budget)
+    assert prev.unserved.sum() > 1.0        # scenario really is a drought
+    max_row_load = max(r.load for r in table.rows)
+    hits = 0
+    for _ in range(8):
+        pw = power * np.exp(rng.normal(0, 0.02, 3))
+        ld = load * rng.uniform(0.97, 1.03, 9)
+        warm = plan_s(table, sites, pw, ld, budget, warm=prev)
+        hits += warm.status == "warm"
+        cold = plan_s(table, sites, pw, ld, budget)
+        assert (warm.unserved.sum()
+                <= cold.unserved.sum() + max_row_load + 1e-6)
+        prev = warm
+    assert hits >= 5, f"warm hits collapsed in drought: {hits}/8"

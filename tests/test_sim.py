@@ -1,4 +1,10 @@
-"""Week-simulation + router integration tests (paper §5.2/§5.3, Figs 8/14/15/17)."""
+"""Week-simulation + router integration tests (paper §5.2/§5.3, Figs 8/14/15/17).
+
+Tiering: the three multi-hour window simulations carry ``@pytest.mark.slow``
+(registered in pytest.ini); each has a seeded fast smoke variant below it so
+``-m "not slow"`` still exercises the slot-sim path — Planner-L chaining,
+power reality, dispatch, baselines — end-to-end. Tier-1 CI runs everything.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -70,6 +76,43 @@ def test_min_power_vs_min_latency_tradeoff(setup):
     lat = simulate_week("heron", table, sites, power, arrivals, slots=24)
     pow_ = simulate_week("heron_min_power", table, sites, power, arrivals,
                          slots=24)
+    m = (lat.goodput() > 0) & (pow_.goodput() > 0)
+    assert lat.power()[m].mean() >= pow_.power()[m].mean() * 0.999
+    assert lat.mean_e2e()[m].mean() <= pow_.mean_e2e()[m].mean() * 1.001
+
+
+def test_heron_no_drops_baseline_drops_smoke(setup):
+    """Seeded smoke of the Fig 14-left comparison on a 4-hour window —
+    the same path as the slow test (window trimmed because the WRR
+    baseline pays four monolithic site ILPs per slot)."""
+    table, sites, power, arrivals = setup
+    h = simulate_week("heron", table, sites, power, arrivals, slots=16)
+    b = simulate_week("wrr_dynamollm", table, sites, power, arrivals,
+                      slots=16)
+    assert h.slots_with_drops() <= b.slots_with_drops()
+    assert h.goodput().sum() >= b.goodput().sum() * 0.999
+
+
+def test_goodput_improvement_smoke(setup):
+    """Seeded smoke of the drought-window goodput ratio (12 slots into
+    the deep-drought region at the Fig 8 stress volume)."""
+    table, sites, power, arrivals = setup
+    pw = power[:, 500:512]
+    arr = arrivals[:, 500:512] * 16.0
+    h = simulate_week("heron", table, sites, pw, arr)
+    b = simulate_week("wrr_dynamollm", table, sites, pw, arr)
+    ratio = goodput_improvement(h, b)
+    assert np.percentile(ratio, 50) >= 0.999
+    assert h.slots_with_drops() <= b.slots_with_drops()
+
+
+def test_min_power_vs_min_latency_tradeoff_smoke(setup):
+    """Seeded 1-day smoke of the Fig 16 trade-off (heron-only, so a full
+    96-slot day stays cheap on the decomposed planner)."""
+    table, sites, power, arrivals = setup
+    lat = simulate_week("heron", table, sites, power, arrivals, slots=96)
+    pow_ = simulate_week("heron_min_power", table, sites, power, arrivals,
+                         slots=96)
     m = (lat.goodput() > 0) & (pow_.goodput() > 0)
     assert lat.power()[m].mean() >= pow_.power()[m].mean() * 0.999
     assert lat.mean_e2e()[m].mean() <= pow_.mean_e2e()[m].mean() * 1.001
