@@ -1,0 +1,161 @@
+"""Serving-engine benchmark: burst admission latency + steady-state decode.
+
+Times a 32-request burst into one ServingEngine under both admission modes
+(``serial`` — the old one-request-at-a-time path with a B=1 decode tail —
+vs ``batched`` — grouped pow-2 prefills + chunked prefill-from-cache
+tails), plus the steady-state decode rate, and verifies the two modes'
+token streams are identical on every run. ``admit_s`` times the FIRST
+max_batch-sized admission wave (all of its prefill work + one shared
+decode step); ``drain_s`` is the whole burst including the decode drain
+that later waves interleave with. Acceptance (ISSUE 4): the burst admits
+with >= 4x fewer compiled dispatches and lower admission wall time.
+
+Writes ``BENCH_serving.json`` at the repo root under the
+``--update-tracker`` discipline (artifacts/bench/serving.json always).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, save_tracker
+from repro.configs import smoke_config
+from repro.models.api import build
+from repro.serving.engine import Request, ServingEngine
+
+ARCH = "llama3.2-1b"
+BURST = 32
+MAX_BATCH = 8
+MAX_SEQ = 64
+LENGTHS = [5, 9, 13, 17, 21, 25, 29, 30] * 4     # pow-2 buckets 4/8/16
+
+
+def _requests(cfg, seed=0, n_new=4):
+    rng = np.random.default_rng(seed)
+    now = time.perf_counter()
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=n)
+                    .astype(np.int32), max_new_tokens=n_new, arrival_s=now)
+            for i, n in enumerate(LENGTHS[:BURST])]
+
+
+def _burst(model, params, mode: str, *, reps: int) -> dict:
+    """Admission wall time for a BURST-request thundering herd. One engine
+    per mode: rep 0 pays all compilations (the serving steady state), the
+    timed reps measure the admission pipeline itself."""
+    cfg = model.cfg
+    eng = ServingEngine(model, params, max_batch=MAX_BATCH,
+                        max_seq=MAX_SEQ, admit_mode=mode)
+    admit_s, drain_s, calls, steps = [], [], 0, 0
+    ttfts, tbts = [], []
+    for rep in range(reps + 1):                     # rep 0 warms compiles
+        reqs = _requests(cfg)
+        calls0, steps0 = eng.metrics.prefill_calls, eng.metrics.steps
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        # first wave: one step admits max_batch requests (all of the
+        # wave's prefill/extend work) + a single mode-independent decode —
+        # this is the admission-bound number; later waves interleave with
+        # decode drain, which drain_s captures
+        eng.step()
+        jax.block_until_ready(eng.cache["pos"])
+        t1 = time.perf_counter()
+        eng.run()
+        jax.block_until_ready(eng.cache["pos"])
+        t2 = time.perf_counter()
+        assert all(len(r.tokens) == r.max_new_tokens for r in reqs)
+        if rep:                      # exclude the compile-warmup rep's tails
+            admit_s.append(t1 - t0)
+            drain_s.append(t2 - t0)
+            calls = eng.metrics.prefill_calls - calls0
+            steps = eng.metrics.steps - steps0
+            ttfts += [r.ttft for r in reqs]
+            tbts += [r.tbt for r in reqs if r.tbt is not None]
+    last = {r.rid: list(r.tokens) for r in reqs}
+    return {"admit_s": float(np.median(admit_s)),
+            "drain_s": float(np.median(drain_s)),
+            "p50_ttft_s": float(np.percentile(ttfts, 50)),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)),
+            "p99_tbt_s": float(np.percentile(tbts, 99)),
+            "prefill_calls": calls, "steps": steps,    # per-burst, like calls
+            "streams": last}
+
+
+def _steady_tokens_per_s(model, params) -> float:
+    """Decode throughput with all slots live (no admission in the loop)."""
+    cfg = model.cfg
+    eng = ServingEngine(model, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ)
+    rng = np.random.default_rng(1)
+    n_steps = 30
+    for i in range(MAX_BATCH):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=16).astype(np.int32),
+            max_new_tokens=n_steps + 10))
+    eng.step()                                      # admit + first decode
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        live = eng.step()
+    jax.block_until_ready(eng.cache["pos"])
+    dt = time.perf_counter() - t0
+    assert live == MAX_BATCH, "slots retired mid-measurement"
+    return n_steps * MAX_BATCH / dt
+
+
+def run(fast: bool = True):
+    reps = 3 if fast else 10
+    cfg = smoke_config(ARCH)
+    model = build(cfg)
+    params = model.init_params(jax.random.key(0))
+
+    res = {mode: _burst(model, params, mode, reps=reps)
+           for mode in ("serial", "batched")}
+    # equivalence is part of the bench contract, not just the test suite
+    assert res["serial"]["streams"] == res["batched"]["streams"], \
+        "serial vs batched token streams diverged"
+    for m in res.values():
+        m.pop("streams")
+    tok_s = _steady_tokens_per_s(model, params)
+
+    sr, br = res["serial"], res["batched"]
+    payload = {
+        "arch": ARCH, "burst": BURST, "max_batch": MAX_BATCH,
+        "max_seq": MAX_SEQ, "reps": reps,
+        "serial": sr, "batched": br,
+        "admit_speedup": sr["admit_s"] / max(br["admit_s"], 1e-9),
+        "dispatch_ratio": sr["prefill_calls"] / max(br["prefill_calls"], 1),
+        "steady_tokens_per_s": tok_s,
+    }
+    save_tracker("serving", payload)
+
+    rows = [
+        row("serve_admit_serial", sr["admit_s"] * 1e6,
+            f"first {MAX_BATCH}-req wave of a {BURST}-req burst; "
+            f"{sr['prefill_calls']} dispatches/burst, "
+            f"p99 TTFT {sr['p99_ttft_s']*1e3:.0f} ms"),
+        row("serve_admit_batched", br["admit_s"] * 1e6,
+            f"first wave {payload['admit_speedup']:.1f}x faster; "
+            f"{br['prefill_calls']} dispatches/burst "
+            f"({payload['dispatch_ratio']:.1f}x fewer), "
+            f"p99 TTFT {br['p99_ttft_s']*1e3:.0f} ms"),
+        row("serve_steady_decode", 1e6 / max(tok_s, 1e-9),
+            f"{tok_s:.0f} tok/s steady-state at B={MAX_BATCH}"),
+    ]
+    return rows
+
+
+def main():
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    common.emit(run(fast=not args.full))
+
+
+if __name__ == "__main__":
+    main()

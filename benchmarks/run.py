@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_scalability      Fig 14 right (planner runtimes vs #sites)
     bench_planning         decomposed Planner-L + warm-started Planner-S
     bench_dispatch         fast path    (columnar vs loop dispatch)
+    bench_serving          engine       (burst admission serial vs batched)
     bench_stickiness       §5.2         (R_L sweep)
     bench_kernels          kernels      (Pallas vs oracle)
     bench_roofline         §Roofline    (dry-run artifact table)
@@ -42,6 +43,7 @@ MODULES = [
     "bench_scalability",
     "bench_planning",
     "bench_dispatch",
+    "bench_serving",
     "bench_stickiness",
     "bench_kernels",
     "bench_roofline",

@@ -33,12 +33,16 @@ from repro.serving.engine import Request, ServingEngine
 
 def serve_demo(*, arch: str = "llama3.2-1b", num_requests: int = 32,
                num_sites: int = 2, max_batch: int = 4, max_seq: int = 128,
-               seed: int = 0, verbose: bool = True) -> dict:
+               seed: int = 0, verbose: bool = True,
+               admit_mode: str = "batched",
+               admit_token_budget: int | None = None) -> dict:
     cfg = smoke_config(arch)
     model = build(cfg)
     params = model.init_params(jax.random.key(seed))
     engines = [ServingEngine(model, params, max_batch=max_batch,
-                             max_seq=max_seq, seed=seed + i)
+                             max_seq=max_seq, seed=seed + i,
+                             admit_mode=admit_mode,
+                             admit_token_budget=admit_token_budget)
                for i in range(num_sites)]
 
     # Heron planning layer (fleet-scale numbers; the engines are the
@@ -87,8 +91,10 @@ def serve_demo(*, arch: str = "llama3.2-1b", num_requests: int = 32,
         for i, m in enumerate(metrics):
             s = m.summary()
             print(f"  site {i} ({sites[i].name}): {s['num_completed']} done, "
-                  f"mean TTFT {s['mean_ttft']*1e3:.0f} ms, "
-                  f"mean E2E {s['mean_e2e']*1e3:.0f} ms")
+                  f"TTFT mean {s['mean_ttft']*1e3:.0f} / "
+                  f"p99 {s['p99_ttft']*1e3:.0f} ms, "
+                  f"mean E2E {s['mean_e2e']*1e3:.0f} ms, "
+                  f"{s['prefill_calls']} admission dispatches")
     return out
 
 
@@ -98,9 +104,16 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--sites", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--admit-mode", choices=("batched", "serial"),
+                    default="batched",
+                    help="batched admission pipeline vs serial reference")
+    ap.add_argument("--admit-budget", type=int, default=None,
+                    help="max prompt tokens admitted per engine step")
     args = ap.parse_args(argv)
     out = serve_demo(arch=args.arch, num_requests=args.requests,
-                     num_sites=args.sites, max_batch=args.max_batch)
+                     num_sites=args.sites, max_batch=args.max_batch,
+                     admit_mode=args.admit_mode,
+                     admit_token_budget=args.admit_budget)
     return 0 if out["completed"] == out["submitted"] else 1
 
 

@@ -5,10 +5,18 @@
     init_params(key)                      -> params pytree
     loss_fn(params, batch)                -> scalar
     prefill_fn(params, inputs)            -> (logits, cache)
+    extend_fn(params, inputs, cache)      -> (logits, cache)
     decode_fn(params, inputs, cache)      -> (logits, cache)
     input_specs(shape)                    -> dict of ShapeDtypeStruct
     cache_specs(shape)                    -> cache pytree of ShapeDtypeStruct
     param_specs()                         -> params pytree of ShapeDtypeStruct
+
+``extend_fn`` continues a prefill from an existing fixed-shape decode cache:
+inputs carry a [B, C] token chunk, ``cache["pos"]`` gives each row's valid
+length, and the chunk lands at positions pos..pos+C-1 — uniform across every
+cache family (GQA KV, MLA latents, SSM/RWKV recurrent state, hybrid,
+enc-dec/VLM prefix caches). It is the primitive behind the serving engine's
+chunked batched admission.
 
 ``input_specs``/``cache_specs``/``param_specs`` never allocate — they are
 what the multi-pod dry-run lowers against. Modality frontends ([audio]/
@@ -36,6 +44,7 @@ class Model:
     init_params: Callable
     loss_fn: Callable
     prefill_fn: Callable
+    extend_fn: Callable
     decode_fn: Callable
 
     # ---------------- shape-only views (dry-run) ----------------
@@ -76,5 +85,6 @@ def build(cfg: ModelConfig, parallel: Optional[ParallelConfig] = None) -> Model:
         init_params=functools.partial(T.init_params, cfg),
         loss_fn=functools.partial(T.loss_fn, cfg, parallel),
         prefill_fn=functools.partial(T.prefill_fn, cfg, parallel),
+        extend_fn=functools.partial(T.extend_fn, cfg, parallel),
         decode_fn=functools.partial(T.decode_fn, cfg, parallel),
     )

@@ -32,6 +32,17 @@ def set_flash_threshold(n: int) -> None:
     FLASH_SEQ_THRESHOLD = n
 
 
+def scan_chunk_for(S: int, chunk: int) -> int:
+    """Largest supported scan chunk dividing S (``chunk``, then 8, then 1).
+
+    Shared by the recurrent families' chunked scans (rwkv6 / mamba2); any
+    segment length works, which is what lets a prefill *continue* from a
+    carried state — the serving engine's chunked prefill-from-cache path
+    feeds power-of-2 segments through this.
+    """
+    return chunk if S % chunk == 0 else (8 if S % 8 == 0 else 1)
+
+
 def _norm_init(key, shape, dtype):
     return jnp.ones(shape, dtype)
 
@@ -169,6 +180,38 @@ def flash_attention_xla(q, k, v, *, causal: bool, q_offset=0, prefix_len: int = 
     return o.astype(q.dtype)
 
 
+def extend_attention(q, k_cache, v_cache, k_new, v_new, pos):
+    """Chunk attention against a [B,S,KVH,hd] cache (prefill continuation).
+
+    q: [B,C,H,hd]; k_new/v_new: [B,C,KVH,hd] — the chunk's own K/V;
+    ``pos``: [B] int32 valid cached tokens per sequence. Query ``j`` of the
+    chunk attends to the cached prefix (< pos) plus chunk positions <= j.
+    The C=1 case is ``decode_attention``'s math with an explicit chunk axis;
+    C>1 is what lets the serving engine admit a prompt tail in O(log S)
+    compiled calls instead of S serial decodes.
+    """
+    B, C, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.reshape(B, C, KVH, G, hd) * scale).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < pos[:, None]                  # [B,S]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    s_new = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k_new.astype(jnp.float32))
+    tri = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]         # [C,C]
+    s_new = jnp.where(tri[None, None, None], s_new, -1e30)
+    m = jnp.maximum(s.max(axis=-1), s_new.max(axis=-1))            # [B,KVH,G,C]
+    p = jnp.exp(s - m[..., None])
+    p_new = jnp.exp(s_new - m[..., None])
+    l = p.sum(axis=-1) + p_new.sum(axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v_cache.astype(jnp.float32))
+    o = o + jnp.einsum("bkgqj,bjkd->bkgqd", p_new, v_new.astype(jnp.float32))
+    o = o / l[..., None]
+    o = jnp.moveaxis(o, 3, 1).reshape(B, C, H, v_cache.shape[-1])
+    return o.astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, k_new, v_new, pos):
     """Single-token attention against a [B,S,KVH,hd] cache.
 
@@ -211,11 +254,20 @@ def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
     Returns (out, new_cache). ``cache`` is a dict(k=[B,S,KVH,hd], v=...) for
     decode; ``cross_kv`` short-circuits K/V to precomputed encoder K/V;
     ``qkv_delta`` adds (dq, dk, dv) [B,S,*] post-projection (zamba2 LoRA).
+
+    ``pos is not None`` marks a *continuation* against a populated fixed-size
+    cache: Sq == 1 is the single-token decode step, Sq > 1 is a chunked
+    prefill continuation (``extend``) — the chunk attends to the cached
+    prefix plus itself causally, and its K/V are scattered in at
+    pos..pos+Sq-1. ``pos is None`` with a cache is the fresh-prefill path
+    (emit K/V, ignore the placeholder cache content).
     """
     hd = cfg.resolved_head_dim
     H, KVH = cfg.num_heads, cfg.num_kv_heads
     B, Sq, _ = x.shape
-    decode = cache is not None and Sq == 1
+    cont = cache is not None and pos is not None
+    decode = cont and Sq == 1
+    extend = cont and Sq > 1
 
     q_p, k_p, v_p = x @ p["wq"], None, None
     if cross_kv is None:
@@ -281,6 +333,31 @@ def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
             vc = _cache_insert(vc, v[:, 0], pos)
             new_cache = {"k": shard(kc, "batch", "cache_seq", "cache_kv_heads", None),
                          "v": shard(vc, "batch", "cache_seq", "cache_kv_heads", None)}
+    elif extend:
+        if "k_scale" in cache:
+            ks_ = shard(cache["k_scale"], "batch", "cache_seq", None)
+            vs_ = shard(cache["v_scale"], "batch", "cache_seq", None)
+            kc = shard(cache["k"], "batch", "cache_seq", "cache_kv_heads", None)
+            vc = shard(cache["v"], "batch", "cache_seq", "cache_kv_heads", None)
+            kd = kc.astype(jnp.float32) * ks_[..., None]
+            vd = vc.astype(jnp.float32) * vs_[..., None]
+            o = extend_attention(q, kd.astype(q.dtype), vd.astype(q.dtype),
+                                 k, v, pos)
+            kq, ksc = quantize_kv(k)           # shape-generic: [B,C,KVH,hd]
+            vq, vsc = quantize_kv(v)
+            new_cache = {
+                "k": _cache_insert_chunk(kc, kq, pos),
+                "k_scale": _cache_insert_chunk(ks_, ksc, pos),
+                "v": _cache_insert_chunk(vc, vq, pos),
+                "v_scale": _cache_insert_chunk(vs_, vsc, pos)}
+        else:
+            kc = shard(cache["k"], "batch", "cache_seq", "cache_kv_heads", None)
+            vc = shard(cache["v"], "batch", "cache_seq", "cache_kv_heads", None)
+            o = extend_attention(q, kc, vc, k, v, pos)
+            kc = _cache_insert_chunk(kc, k, pos)
+            vc = _cache_insert_chunk(vc, v, pos)
+            new_cache = {"k": shard(kc, "batch", "cache_seq", "cache_kv_heads", None),
+                         "v": shard(vc, "batch", "cache_seq", "cache_kv_heads", None)}
     else:
         o = attend(q, k, v, causal=causal, prefix_len=prefix_len)
         if cache is not None:  # prefill writes the cache
@@ -307,10 +384,21 @@ def _cache_insert(cache, new, pos):
     return cache.at[jnp.arange(B), pos].set(new.astype(cache.dtype))
 
 
-def quantize_kv(x):
-    """Per-(batch, kv-head) absmax int8 quantization of one K or V token.
+def _cache_insert_chunk(cache, new, pos):
+    """cache: [B,S,...]; new: [B,C,...]; pos: [B] — write a C-token chunk at
+    per-sequence offsets pos..pos+C-1."""
+    B, C = new.shape[0], new.shape[1]
+    rows = jnp.arange(B)[:, None]
+    cols = pos[:, None] + jnp.arange(C)[None, :]
+    return cache.at[rows, cols].set(new.astype(cache.dtype))
 
-    x: [B, KVH, hd] -> (q int8 [B,KVH,hd], scale f32 [B,KVH]).
+
+def quantize_kv(x):
+    """Per-(batch, kv-head) absmax int8 quantization of K or V tokens.
+
+    x: [..., KVH, hd] -> (q int8 [..., KVH, hd], scale f32 [..., KVH]).
+    Shape-generic over leading dims: one token ([B,KVH,hd]) for decode,
+    a chunk ([B,C,KVH,hd]) for the extend path.
     """
     x32 = x.astype(jnp.float32)
     scale = jnp.maximum(jnp.abs(x32).max(axis=-1), 1e-30) / 127.0

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.distributed.sharding import shard
-from repro.models.layers import dense_init, rmsnorm
+from repro.models.layers import dense_init, rmsnorm, scan_chunk_for
 
 CHUNK = 32
 LOG_A_MIN = -1.5
@@ -31,6 +31,12 @@ def set_ssd_chunk(n: int) -> None:
     while the intra-chunk O(C²) tile stays VMEM-sized well past C=128."""
     global CHUNK
     CHUNK = n
+
+
+def chunk_for(S: int) -> int:
+    """SSD chunk for a segment of length S; ``mamba2_block`` with the
+    carried (ssm, conv) state is the exact sequential continuation."""
+    return scan_chunk_for(S, CHUNK)
 
 
 def mamba2_params(key, cfg, num_layers=None):
@@ -149,8 +155,8 @@ def mamba2_block(cfg, p, x, state_slice):
                                 state_slice["ssm"])
         y = y[:, None]
     else:
-        chunk = CHUNK if S % CHUNK == 0 else (8 if S % 8 == 0 else 1)
-        y, new_ssm = ssd_chunked(xs, dt_v, Bm, Cm, A, state_slice["ssm"], chunk=chunk)
+        y, new_ssm = ssd_chunked(xs, dt_v, Bm, Cm, A, state_slice["ssm"],
+                                 chunk=chunk_for(S))
     y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(B, S, d_in).astype(x.dtype)
     y = rmsnorm({"scale": p["ssm_norm"]}, y * jax.nn.silu(z), cfg.norm_eps)

@@ -16,6 +16,7 @@ from jax import lax
 from repro.distributed.sharding import shard
 from repro.models.layers import (
     dense_init, rmsnorm, rope_table, apply_rope, attend, _cache_insert,
+    _cache_insert_chunk,
 )
 
 
@@ -78,6 +79,63 @@ def mla_prefill(cfg, p, x, positions, want_cache: bool):
     out = o.reshape(B, S, H * v_hd) @ p["wo"]
     cache = {"ckv": ckv, "kr": kr} if want_cache else None
     return shard(out, "batch", "seq", None), cache
+
+
+def mla_extend(cfg, p, x, cache, pos):
+    """Absorbed-form chunk continuation against the latent cache.
+
+    x: [B,C,D]; cache: {"ckv": [B,S,kv_lora], "kr": [B,S,rope_d]};
+    pos: [B] valid cached tokens. Chunk query j attends to the cached
+    prefix plus chunk positions <= j; the chunk's latents are scattered in
+    at pos..pos+C-1. This is ``mla_decode`` generalised to C tokens — the
+    serving engine's prompt-tail path (O(log S) chunks instead of S serial
+    decodes).
+    """
+    B, C, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d, v_hd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    positions = pos[:, None] + jnp.arange(C)[None, :]
+    q_nope, q_rope = _project_q(cfg, p, x, positions)           # [B,C,H,*]
+    ckv_new, kr_new = _project_kv_latent(cfg, p, x, positions)  # [B,C,lora/rope]
+
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, H, nope)
+    q_lat = jnp.einsum("bchn,lhn->bchl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))                # [B,C,H,kv_lora]
+
+    ckv_c = shard(cache["ckv"], "batch", "cache_seq", None)
+    kr_c = shard(cache["kr"], "batch", "cache_seq", None)
+    S = ckv_c.shape[1]
+    s = jnp.einsum("bchl,bsl->bhcs", q_lat, ckv_c.astype(jnp.float32))
+    s = s + jnp.einsum("bchr,bsr->bhcs", q_rope.astype(jnp.float32),
+                       kr_c.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(S)[None, :] < pos[:, None]               # [B,S]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    s_new = jnp.einsum("bchl,bjl->bhcj", q_lat, ckv_new.astype(jnp.float32))
+    s_new = s_new + jnp.einsum("bchr,bjr->bhcj", q_rope.astype(jnp.float32),
+                               kr_new.astype(jnp.float32))
+    s_new = s_new * scale
+    tri = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]
+    s_new = jnp.where(tri[None, None], s_new, -1e30)
+    m = jnp.maximum(s.max(-1), s_new.max(-1))                   # [B,H,C]
+    pr = jnp.exp(s - m[..., None])
+    pr_new = jnp.exp(s_new - m[..., None])
+    l = pr.sum(-1) + pr_new.sum(-1)
+    out_lat = jnp.einsum("bhcs,bsl->bhcl", pr, ckv_c.astype(jnp.float32))
+    out_lat = out_lat + jnp.einsum("bhcj,bjl->bhcl", pr_new,
+                                   ckv_new.astype(jnp.float32))
+    out_lat = out_lat / l[..., None]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, H, v_hd)
+    o = jnp.einsum("bhcl,lhv->bchv", out_lat, w_uv.astype(jnp.float32))
+    out = o.reshape(B, C, H * v_hd).astype(x.dtype) @ p["wo"]
+    new_cache = {
+        "ckv": shard(_cache_insert_chunk(ckv_c, ckv_new, pos),
+                     "batch", "cache_seq", None),
+        "kr": shard(_cache_insert_chunk(kr_c, kr_new, pos),
+                    "batch", "cache_seq", None),
+    }
+    return shard(out, "batch", "seq", None), new_cache
 
 
 def mla_decode(cfg, p, x, cache, pos):

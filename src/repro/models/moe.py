@@ -81,7 +81,16 @@ def _route(x32, router_w, k):
 
 
 def moe_dense_ref(cfg, p, x):
-    """Reference path (single device / smoke tests): computes all experts."""
+    """Reference path (single device / smoke tests): computes all experts.
+
+    Routing, top-k, combine, and the expert FFNs are all per-token (the
+    aux loss crosses tokens but does not feed the output), so a row's
+    result never depends on its batch-mates. The serving engine's batched
+    admission and chunked ``extend_fn`` lean on this: MoE prefill chunks
+    stay equivalent whether a request is prefilled alone or grouped. The
+    EP paths trade this for capacity bounds (token dropping is
+    batch-dependent) and are not used by the serving engine.
+    """
     B, S, D = x.shape
     T = B * S
     xf = x.reshape(T, D)

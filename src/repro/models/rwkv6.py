@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.distributed.sharding import shard
-from repro.models.layers import dense_init, rmsnorm
+from repro.models.layers import dense_init, rmsnorm, scan_chunk_for
 
 CHUNK = 32
 LOG_W_MIN = -1.5   # per-token; CHUNK * 1.5 = 48 << 88 (fp32 exp overflow)
@@ -69,6 +69,12 @@ def rwkv6_params(key, cfg, num_layers=None):
         "ln2": jnp.ones((*L, d), dt),
     }
     return p
+
+
+def chunk_for(S: int) -> int:
+    """WKV chunk for a segment of length S; ``rwkv6_block`` with state0
+    from a prior segment is the exact sequential continuation."""
+    return scan_chunk_for(S, CHUNK)
 
 
 def _token_shift(x, prev):
@@ -176,8 +182,7 @@ def time_mix(cfg, p, x, tm_state, wkv_state):
         out, new_wkv = wkv6_decode(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, wkv_state)
         out = out[:, None]  # [B,1,H,hd]
     else:
-        chunk = CHUNK if S % CHUNK == 0 else (8 if S % 8 == 0 else 1)
-        out, new_wkv = wkv6_chunked(r, k, v, logw, u, wkv_state, chunk=chunk)
+        out, new_wkv = wkv6_chunked(r, k, v, logw, u, wkv_state, chunk=chunk_for(S))
     out = _group_norm(out, p["ln_x"], cfg.norm_eps).astype(x.dtype)
     out = (out * g) @ p["w_o"]
     return shard(out, "batch", "seq", None), x[:, -1, :], new_wkv

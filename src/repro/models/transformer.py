@@ -127,8 +127,11 @@ def _trunk_layer(cfg, parallel, p, x, positions, *, prefix_len=0, cache=None,
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm({"scale": p["ln1"]}, x, cfg.norm_eps)
     if cfg.use_mla:
-        if cache is not None and x.shape[1] == 1:
-            o, new_cache = MLA.mla_decode(cfg, p["attn"], h, cache, pos)
+        if cache is not None and pos is not None:      # continuation
+            if x.shape[1] == 1:
+                o, new_cache = MLA.mla_decode(cfg, p["attn"], h, cache, pos)
+            else:
+                o, new_cache = MLA.mla_extend(cfg, p["attn"], h, cache, pos)
         else:
             o, new_cache = MLA.mla_prefill(cfg, p["attn"], h, positions,
                                            want_cache=cache is not None)
@@ -402,6 +405,56 @@ def _prefill_cache_placeholder(cfg, L):
     if cfg.use_mla:
         return {"ckv": jnp.zeros((L, 0)), "kr": jnp.zeros((L, 0))}
     return {"k": jnp.zeros((L, 0)), "v": jnp.zeros((L, 0))}
+
+
+def extend_fn(cfg: ModelConfig, parallel: Optional[ParallelConfig], params,
+              inputs: dict, cache: dict):
+    """Continue a prefill from an existing decode cache with a [B,C] chunk.
+
+    ``cache`` is a fixed-shape decode cache (as built by ``make_decode_cache``
+    and populated by a prior prefill/extend/decode); ``cache["pos"]`` [B]
+    gives each row's valid length, which may differ per row. The chunk's
+    tokens occupy positions pos..pos+C-1: attention families scatter the
+    chunk's K/V (or MLA latents) in at those offsets and attend to prefix +
+    chunk causally; recurrent families (SSM / hybrid Mamba / RWKV) simply
+    advance their carried state, which IS the sequential continuation.
+    Returns (last-token logits [B,V], updated cache with pos += C).
+
+    This is what lets the serving engine admit a prompt tail in O(log S)
+    compiled calls (descending power-of-2 chunks) instead of up to S serial
+    B=1 decodes, while keeping the compile cache bounded: the cache shape is
+    fixed, so only C varies.
+    """
+    tokens = inputs["tokens"]          # [B, C] int32
+    B, C = tokens.shape
+    pos = cache["pos"]                 # [B] valid lengths (per-row)
+    x = Lyr.embed(params["embed"], tokens, cfg)
+    positions = pos[:, None] + jnp.arange(C)[None, :]   # [B, C]
+
+    if cfg.family == "ssm":
+        x, new_state = _rwkv_forward(cfg, params, x, cache["state"])
+        new_cache = {"state": new_state, "pos": pos + C}
+    elif cfg.family == "hybrid":
+        x, new_state, new_attn = _hybrid_forward(
+            cfg, parallel, params, x, positions, state=cache["state"],
+            attn_cache=cache["attn"], pos=pos)
+        new_cache = {"state": new_state, "attn": new_attn, "pos": pos + C}
+    elif cfg.family == "encdec":
+        cross = {"ln": params["cross"]["ln"], "attn": params["cross"]["attn"]}
+        x, new_kv, _ = _scan_trunk(cfg, parallel, params["layers"], x,
+                                   positions, caches=cache["kv"], pos=pos,
+                                   cross=cross, enc_kv=cache["enc_kv"])
+        new_cache = {"kv": new_kv, "enc_kv": cache["enc_kv"], "pos": pos + C}
+    else:
+        # dense / moe / vlm: any prefix (VLM patches, prior prompt chunks)
+        # is already in the cache; the chunk itself is text-only.
+        x, new_kv, _ = _scan_trunk(cfg, parallel, params["layers"], x,
+                                   positions, caches=cache["kv"], pos=pos)
+        new_cache = {"kv": new_kv, "pos": pos + C}
+
+    x = rmsnorm({"scale": params["final_norm"]}, x[:, -1:], cfg.norm_eps)
+    logit = Lyr.logits(params["embed"], x, cfg)
+    return logit[:, 0], new_cache
 
 
 def decode_fn(cfg: ModelConfig, parallel: Optional[ParallelConfig], params,

@@ -1,5 +1,6 @@
-"""JAX serving engine: KV-cache slots, continuous batching, sampling."""
+"""JAX serving engine: KV-cache slots, batched continuous batching, sampling."""
 from repro.serving.engine import EngineMetrics, Request, ServingEngine
-from repro.serving.sampling import sample
+from repro.serving.sampling import fold_keys, sample, sample_batch
 
-__all__ = ["EngineMetrics", "Request", "ServingEngine", "sample"]
+__all__ = ["EngineMetrics", "Request", "ServingEngine", "fold_keys",
+           "sample", "sample_batch"]

@@ -1,4 +1,4 @@
-"""Site-local serving engine: KV-cache slots + continuous batching.
+"""Site-local serving engine: KV-cache slots + batched continuous batching.
 
 This is the per-site engine the paper assumes (vLLM in their testbed) —
 built here in JAX because Heron needs a real serving substrate to route
@@ -7,38 +7,55 @@ into. Design:
   * a fixed pool of ``max_batch`` cache *slots*; each slot owns one
     sequence's decode cache (KV / recurrent state, family-specific pytree);
   * **continuous batching**: new requests are admitted into free slots via
-    single-request prefill + cache insertion; every engine step runs ONE
+    a *batched admission pipeline* (below); every engine step runs ONE
     batched decode over all slots (fixed shapes → one compiled program);
-  * finished sequences retire their slot immediately — no batch barriers;
-  * per-request TTFT / TBT / E2E metrics against the class SLOs, which is
-    what Heron's goodput accounting consumes.
+  * finished sequences retire their slot immediately via ``release_slot``
+    — no batch barriers;
+  * per-request TTFT / TBT / E2E metrics (means and p50/p99 tails) against
+    the class SLOs, which is what Heron's goodput accounting consumes.
+
+Batched admission pipeline (the burst path — a site absorbing a drained
+neighbour's traffic sees all of its requests at once):
+
+  1. waiting requests are grouped by the largest power-of-2 prefix of
+     their prompt (*bucket*) and prefilled TOGETHER — one compiled
+     ``prefill`` call per (bucket, pow2-padded batch) shape;
+  2. each prompt's tail (prompt minus bucket) runs through DESCENDING
+     power-of-2 chunks of ``Model.extend_fn`` — prefill continued from the
+     engine cache at per-row offsets. Tails are the binary digits of the
+     remaining length, so a round admits every slot that has the current
+     chunk-size bit set: O(log S) compiled calls shared across the whole
+     admission group, instead of up to S/2 serial B=1 decodes per request;
+  3. a per-step admission token budget (``admit_token_budget``) bounds how
+     many prompt tokens one ``step()`` may prefill, so already-live slots'
+     TBT cannot balloon under a thundering herd (at least one request is
+     always admitted so oversized prompts cannot starve).
+
+The extend calls run at the engine's fixed batch with a row mask (masked
+rows keep their old cache bits), so the compile cache stays
+O(log max_seq) extend entries + O(log max_seq) x O(log max_batch) prefill
+entries + one decode entry. Right-padding prompts instead would corrupt
+recurrent/SSM states and shift last-token logits, so it is deliberately
+not used. ``admit_mode="serial"`` keeps the old one-request-at-a-time
+path (pow2-prefix prefill + B=1 decode tail) as the equivalence
+reference.
+
+Sampling policy: every token draw uses a key derived from (engine seed,
+request id, token index) — see ``serving.sampling.fold_keys`` — so a
+request's token stream is bit-identical regardless of admission order,
+batching, or slot placement. (Previous engines split one engine-global
+key per step, which made streams depend on batch composition.) Per-row
+temperatures still let greedy (t == 0) and sampled requests coexist in
+one batched decode.
 
 Cache insertion is family-agnostic: every cache leaf is [B]-batched at
 axis 0 (1-D leaves like ``pos``) or axis 1 (stacked [L, B, ...] leaves),
 so one ``dynamic_update_slice`` rule covers GQA/MLA/SSM/hybrid/enc-dec.
-
-Compile-cache discipline: prefill is jitted per input shape, so admitting
-raw prompts would compile one program per distinct prompt length. Instead
-``_admit`` chunks the prompt to its largest power-of-2 prefix (prefill)
-and feeds the remaining tokens through the already-compiled single-token
-decode — numerically identical to a full-length prefill for every cache
-family (attention and recurrent alike, since decode *is* the sequential
-continuation), while keeping the prefill compile cache at O(log max_seq)
-entries. Right-padding instead would corrupt recurrent/SSM states and
-shift the last-token logits, so it is deliberately not used. Trade-off:
-the tail is up to bucket-1 (~S/2) serial B=1 decode steps, so admission
-is O(S) in the worst case — cheap per step once compiled, but a future
-PR could chunk the tail through descending power-of-2 prefill chunks if
-prefill ever learns to continue from an existing cache.
-
-Sampling honours per-request temperatures within one batched decode:
-``sample`` takes a per-row temperature vector, so greedy (t == 0) and
-sampled (t > 0) requests coexist in the same step without collapsing the
-batch to a single temperature.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -48,7 +65,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import Model
-from repro.serving.sampling import sample
+from repro.serving.sampling import fold_keys, sample_batch
 
 
 @dataclass
@@ -99,35 +116,77 @@ def insert_cache(engine_cache, req_cache, slot):
                         engine_cache, req_cache)
 
 
+@jax.jit
+def insert_cache_rows(engine_cache, group_cache, slots):
+    """Scatter a batched prefill cache into engine slots: row ``r`` of
+    ``group_cache`` lands in slot ``slots[r]``, one compiled call (and one
+    functional cache copy) per (bucket, batch) shape for the whole group.
+    Out-of-range slot ids drop their row — how pow2 padding rows and their
+    garbage prefill results are discarded."""
+    def ins(e, g):
+        g = g.astype(e.dtype)
+        if e.ndim == 1:
+            return e.at[slots].set(g, mode="drop")
+        idx = (slice(None), slots) + tuple(slice(0, d) for d in g.shape[2:])
+        return e.at[idx].set(g, mode="drop")
+
+    return jax.tree.map(ins, engine_cache, group_cache)
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else 0.0
+
+
 @dataclass
 class EngineMetrics:
     completed: list
+    rejected: list = field(default_factory=list)
     steps: int = 0
-    prefills: int = 0
+    prefills: int = 0          # requests admitted (one prefill each, logically)
+    prefill_calls: int = 0     # compiled model dispatches spent on admission
 
     def summary(self) -> dict:
         ttfts = [r.ttft for r in self.completed if r.ttft is not None]
         e2es = [r.e2e for r in self.completed if r.e2e is not None]
         tbts = [r.tbt for r in self.completed if r.tbt is not None]
         f = lambda xs: float(np.mean(xs)) if xs else 0.0
-        return {"num_completed": len(self.completed), "steps": self.steps,
-                "prefills": self.prefills, "mean_ttft": f(ttfts),
-                "mean_tbt": f(tbts), "mean_e2e": f(e2es)}
+        out = {"num_completed": len(self.completed), "steps": self.steps,
+               "prefills": self.prefills, "prefill_calls": self.prefill_calls,
+               "rejected": len(self.rejected),
+               "mean_ttft": f(ttfts), "mean_tbt": f(tbts), "mean_e2e": f(e2es)}
+        # tail percentiles: what the goodput accounting and the serving
+        # bench consume — burst admission shows up in p99, not the mean
+        for name, xs in (("ttft", ttfts), ("tbt", tbts), ("e2e", e2es)):
+            out[f"p50_{name}"] = _pct(xs, 50)
+            out[f"p99_{name}"] = _pct(xs, 99)
+        return out
 
 
 class ServingEngine:
-    """Continuous-batching engine over one model replica."""
+    """Continuous-batching engine over one model replica.
+
+    ``admit_mode``: "batched" (default — grouped prefill + chunked extend
+    tails) or "serial" (the reference: one request at a time, B=1 decode
+    tail). Token streams are bit-identical between the two.
+    ``admit_token_budget``: max prompt tokens admitted per step (None =
+    unlimited); bounds TBT inflation for live slots under bursts.
+    """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, eos_token: int = -1, seed: int = 0,
-                 clock=None):
+                 clock=None, admit_mode: str = "batched",
+                 admit_token_budget: Optional[int] = None):
+        if admit_mode not in ("batched", "serial"):
+            raise ValueError(f"admit_mode {admit_mode!r}")
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos = eos_token
-        self._key = jax.random.key(seed)
+        self.admit_mode = admit_mode
+        self.admit_token_budget = admit_token_budget
+        self._base_key = jax.random.key(seed)
         self._clock = clock or time.perf_counter
 
         from repro.models import transformer as T
@@ -135,62 +194,249 @@ class ServingEngine:
         self.active: list[Optional[Request]] = [None] * max_batch
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
         self.new_counts = [0] * max_batch
-        self.waiting: list[Request] = []
+        self.waiting: deque[Request] = deque()
         self.metrics = EngineMetrics(completed=[])
         self._decode = jax.jit(model.decode_fn)
         self._prefill = jax.jit(model.prefill_fn)
-        # zeros template for the B=1 prompt-tail continuation (immutable)
-        self._b1_cache = T.make_decode_cache(self.cfg, 1, max_seq)
+        self._extend = jax.jit(self._masked_extend)
+        # zeros template for the serial-mode B=1 prompt-tail continuation;
+        # built lazily — batched mode (the default) never needs it
+        self._b1_cache = None
 
     # --------------------------------------------------------------- admit
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
+    def _masked_extend(self, params, tokens, mask, cache):
+        """One extend chunk over the full engine cache; rows with
+        ``mask[b] == False`` keep their old cache bits (so live decode
+        slots and idle slots are untouched). Compiled once per chunk
+        length — the engine batch is fixed."""
+        logits, new_cache = self.model.extend_fn(params, {"tokens": tokens},
+                                                 cache)
 
-    def _admit(self) -> None:
-        while self.waiting:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.waiting.pop(0)
-            S = len(req.prompt)
-            # largest power-of-2 prefix through prefill; the tail goes
-            # through the already-compiled decode (see module docstring)
-            bucket = 1 << (max(S, 1).bit_length() - 1)
-            prompt = jnp.asarray(req.prompt[:bucket], jnp.int32)[None]
-            inputs = {"tokens": prompt}
-            if self.cfg.family == "encdec":
-                inputs["frames"] = jnp.zeros(
-                    (1, self.cfg.num_prefix_embeddings, self.cfg.d_model),
-                    jnp.dtype(self.cfg.dtype))
-            if self.cfg.family == "vlm":
-                inputs["patches"] = jnp.zeros(
-                    (1, self.cfg.num_prefix_embeddings, self.cfg.d_model),
-                    jnp.dtype(self.cfg.dtype))
-            logits, req_cache = self._prefill(self.params, inputs)
-            if bucket < S:
-                # continue the prompt token-by-token at B=1: decode(prefill
-                # of a prefix) is the exact sequential continuation, so the
-                # final logits/cache match a full-length prefill
-                req_cache = insert_cache(self._b1_cache, req_cache, 0)
-                for tok in req.prompt[bucket:]:
-                    logits, req_cache = self._decode(
-                        self.params, {"token": jnp.asarray([tok], jnp.int32)},
-                        req_cache)
-            self._key, k = jax.random.split(self._key)
-            tok = sample(logits, k, req.temperature)
-            req.tokens.append(int(tok[0]))
-            req.prefill_done_s = self._clock()
-            self.cache = insert_cache(self.cache, req_cache, slot)
-            self.last_token = self.last_token.at[slot].set(tok[0])
+        def sel(new, old):
+            m = mask if new.ndim <= 1 else mask.reshape(
+                (1, new.shape[1]) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+
+        return logits, jax.tree.map(sel, new_cache, cache)
+
+    def _prefill_inputs(self, tokens: np.ndarray) -> dict:
+        inputs: dict[str, Any] = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        B = tokens.shape[0]
+        if self.cfg.family == "encdec":
+            inputs["frames"] = jnp.zeros(
+                (B, self.cfg.num_prefix_embeddings, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "vlm":
+            inputs["patches"] = jnp.zeros(
+                (B, self.cfg.num_prefix_embeddings, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        return inputs
+
+    def _finalize_admits(self, items: list, logits) -> None:
+        """Sample first tokens for every request finalized by one model
+        call and make their slots live — ONE batched (fold_keys,
+        sample_batch) dispatch and one host sync for the whole group.
+        Per-row keys make each row's draw bitwise identical to a B=1 call
+        through the same pair, so grouping (and the decode step's own
+        sampling) can never change a stream.
+
+        items: [(slot, req, row)] with ``row`` indexing ``logits``.
+        """
+        if not items:
+            return
+        rows = jnp.asarray([row for _, _, row in items], jnp.int32)
+        rids = jnp.asarray([req.rid for _, req, _ in items], jnp.int32)
+        temps = jnp.asarray([req.temperature for _, req, _ in items],
+                            jnp.float32)
+        keys = fold_keys(self._base_key, rids, jnp.zeros_like(rids))
+        toks = np.asarray(sample_batch(logits[rows], keys, temps))
+        now = self._clock()
+        live_slots, live_toks = [], []
+        for j, (slot, req, _) in enumerate(items):
+            tok = int(toks[j])
+            req.tokens.append(tok)
+            req.prefill_done_s = now
+            self.metrics.prefills += 1
+            if req.max_new_tokens <= 1 or tok == self.eos:
+                # complete at admission: the prompt's last logits already
+                # gave the only requested (or an EOS) token — the slot
+                # never goes live, so no unrequested decode step runs
+                req.finish_s = now
+                self.metrics.completed.append(req)
+                self.release_slot(slot)
+                continue
             self.active[slot] = req
             self.new_counts[slot] = 1
-            self.metrics.prefills += 1
+            live_slots.append(slot)
+            live_toks.append(tok)
+        if live_slots:
+            self.last_token = self.last_token.at[jnp.asarray(live_slots)].set(
+                jnp.asarray(live_toks, jnp.int32))
+
+    def _admit(self) -> None:
+        if not self.waiting:
+            return
+        free = [i for i, r in enumerate(self.active) if r is None]
+        admits: list[tuple[int, Request]] = []
+        spent = 0
+        # VLM rows spend cache positions on the patch prefix too (enc-dec
+        # frames live in the separate encoder cache, so they don't)
+        prefix = (self.cfg.num_prefix_embeddings
+                  if self.cfg.family == "vlm" else 0)
+        while self.waiting and free:
+            req = self.waiting[0]
+            S = len(req.prompt)
+            if req.max_new_tokens <= 0:
+                # degenerate but legal: nothing to generate — complete
+                # with zero tokens, no slot, no prefill
+                self.waiting.popleft()
+                req.finish_s = self._clock()
+                self.metrics.completed.append(req)
+                continue
+            if S == 0 or prefix + S + req.max_new_tokens - 1 > self.max_seq:
+                # can never fit this engine's cache: reject without
+                # consuming a slot (burst-proof: the queue keeps draining)
+                self.waiting.popleft()
+                req.finish_s = self._clock()
+                self.metrics.rejected.append(req)
+                continue
+            if (admits and self.admit_token_budget is not None
+                    and spent + S > self.admit_token_budget):
+                break  # budget spent; the rest waits for the next step
+            self.waiting.popleft()
+            admits.append((free.pop(0), req))
+            spent += S
+        if not admits:
+            return
+        try:
+            if self.admit_mode == "serial":
+                for slot, req in admits:
+                    self._admit_serial(slot, req)
+            else:
+                self._admit_batched(admits)
+        except Exception:
+            # a failed admission must not strand its round-mates: anything
+            # not yet live goes back to the FRONT of the queue with clean
+            # state, so completed + rejected + waiting + active always
+            # reconciles. (Serial mode attributes the failure and records
+            # that one request as rejected; batched failures cannot be
+            # attributed to a single request, so everything is retried.)
+            # Membership is by identity: Request.__eq__ would compare
+            # ndarray prompts and raise.
+            requeue = []
+            for slot, req in admits:
+                if (req.prefill_done_s is None
+                        and all(r is not req for r in self.metrics.rejected)):
+                    req.tokens.clear()
+                    self.release_slot(slot)
+                    requeue.append(req)
+            self.waiting.extendleft(reversed(requeue))
+            raise
+
+    def _admit_serial(self, slot: int, req: Request) -> None:
+        """Reference path: pow2-prefix prefill + serial B=1 decode tail."""
+        S = len(req.prompt)
+        bucket = 1 << (S.bit_length() - 1)
+        logits, req_cache = self._prefill(
+            self.params, self._prefill_inputs(req.prompt[None, :bucket]))
+        self.metrics.prefill_calls += 1
+        if bucket < S:
+            # continue the prompt token-by-token at B=1: decode(prefill
+            # of a prefix) is the exact sequential continuation, so the
+            # final logits/cache match a full-length prefill
+            if self._b1_cache is None:
+                from repro.models import transformer as T
+                self._b1_cache = T.make_decode_cache(self.cfg, 1, self.max_seq)
+            req_cache = insert_cache(self._b1_cache, req_cache, 0)
+            for tok in req.prompt[bucket:]:
+                logits, req_cache = self._decode(
+                    self.params, {"token": jnp.asarray([tok], jnp.int32)},
+                    req_cache)
+                self.metrics.prefill_calls += 1
+        try:
+            self.cache = insert_cache(self.cache, req_cache, slot)
+            self._finalize_admits([(slot, req, 0)], logits)
+        except Exception:
+            self._reject_failed(slot, req)
+            raise
+
+    def _reject_failed(self, slot: int, req: Request) -> None:
+        """Admission error path: release the slot and record the failing
+        request as rejected, keeping the engine's accounting consistent
+        (completed + rejected + waiting + active == submitted)."""
+        self.release_slot(slot)
+        req.tokens.clear()
+        req.prefill_done_s = None
+        req.finish_s = self._clock()
+        self.metrics.rejected.append(req)
+
+    def _admit_batched(self, admits: list) -> None:
+        """Grouped prefill + shared descending-pow2 extend tails."""
+        groups: dict[int, list] = {}
+        for slot, req in admits:
+            bucket = 1 << (len(req.prompt).bit_length() - 1)
+            groups.setdefault(bucket, []).append((slot, req))
+        pend: dict[int, list] = {}          # slot -> [req, consumed]
+        for bucket in sorted(groups, reverse=True):
+            group = groups[bucket]
+            kp = 1 << (len(group) - 1).bit_length()   # pow2-padded batch
+            toks = np.zeros((kp, bucket), np.int32)
+            # padding rows scatter to slot id max_batch -> dropped
+            slots = np.full((kp,), self.max_batch, np.int32)
+            for r, (slot, req) in enumerate(group):
+                toks[r] = req.prompt[:bucket]
+                slots[r] = slot
+            logits, gcache = self._prefill(self.params,
+                                           self._prefill_inputs(toks))
+            self.metrics.prefill_calls += 1
+            self.cache = insert_cache_rows(self.cache, gcache,
+                                           jnp.asarray(slots))
+            fins = []
+            for r, (slot, req) in enumerate(group):
+                if bucket == len(req.prompt):
+                    fins.append((slot, req, r))
+                else:
+                    pend[slot] = [req, bucket]
+            self._finalize_admits(fins, logits)
+        while pend:
+            # chunk = the largest remaining binary digit across pending
+            # rows; every row with that bit set advances this round
+            C = max(1 << ((len(req.prompt) - cons).bit_length() - 1)
+                    for req, cons in pend.values())
+            toks = np.zeros((self.max_batch, C), np.int32)
+            mask = np.zeros((self.max_batch,), bool)
+            takers = []
+            for slot, (req, cons) in pend.items():
+                if (len(req.prompt) - cons) & C:
+                    toks[slot] = req.prompt[cons:cons + C]
+                    mask[slot] = True
+                    takers.append(slot)
+            logits, self.cache = self._extend(
+                self.params, jnp.asarray(toks), jnp.asarray(mask), self.cache)
+            self.metrics.prefill_calls += 1
+            fins = []
+            for slot in takers:
+                req, cons = pend[slot]
+                cons += C
+                if cons == len(req.prompt):
+                    del pend[slot]
+                    fins.append((slot, req, slot))
+                else:
+                    pend[slot][1] = cons
+            self._finalize_admits(fins, logits)
+
+    # --------------------------------------------------------------- slots
+    def release_slot(self, slot: int) -> None:
+        """Family-agnostic slot retirement: clear the slot's bookkeeping
+        and zero its cache position, so every family's valid-length reads
+        mask out the stale cache rows. Used on sequence finish and by
+        admission error paths."""
+        self.active[slot] = None
+        self.new_counts[slot] = 0
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
 
     # --------------------------------------------------------------- step
     def step(self) -> int:
@@ -201,12 +447,17 @@ class ServingEngine:
             return 0
         logits, self.cache = self._decode(
             self.params, {"token": self.last_token}, self.cache)
-        self._key, k = jax.random.split(self._key)
         temps = np.zeros(self.max_batch, np.float32)
+        rids = np.zeros(self.max_batch, np.int32)
+        idxs = np.zeros(self.max_batch, np.int32)
         for i in live:
             temps[i] = self.active[i].temperature
-        # per-row temperatures: greedy and sampled requests coexist
-        toks = sample(logits, k, jnp.asarray(temps))
+            rids[i] = self.active[i].rid
+            idxs[i] = len(self.active[i].tokens)
+        # per-(request, token-index) keys + per-row temperatures: a row's
+        # draw is independent of its batch-mates and its admission order
+        keys = fold_keys(self._base_key, jnp.asarray(rids), jnp.asarray(idxs))
+        toks = sample_batch(logits, keys, jnp.asarray(temps))
         toks_np = np.asarray(toks)
         self.last_token = toks
         self.metrics.steps += 1
@@ -220,9 +471,7 @@ class ServingEngine:
             if done:
                 req.finish_s = now
                 self.metrics.completed.append(req)
-                self.active[i] = None
-                # zero the slot's position so its cache reads are masked
-                self.cache["pos"] = self.cache["pos"].at[i].set(0)
+                self.release_slot(i)
         return len([r for r in self.active if r is not None])
 
     def run(self, max_steps: int = 10_000) -> EngineMetrics:

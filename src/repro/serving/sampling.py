@@ -1,4 +1,16 @@
-"""Token sampling for the serving engine (greedy / temperature / top-k)."""
+"""Token sampling for the serving engine (greedy / temperature / top-k).
+
+Two entry points:
+
+  * ``sample`` — one key for the whole batch; kept as a public
+    single-stream convenience, no longer used by the engine;
+  * ``sample_batch`` + ``fold_keys`` — per-row keys derived from
+    (engine seed, request id, token index). Row ``r``'s draw depends only
+    on ``keys[r]`` and ``logits[r]``, so a request's token stream is
+    bit-identical regardless of admission order, batch composition, or
+    which slot it landed in. This is the serving engine's determinism
+    contract: the same (seed, rid) always yields the same stream.
+"""
 from __future__ import annotations
 
 import functools
@@ -25,4 +37,41 @@ def sample(logits, key, temperature=0.0, top_k: int = 0):
         kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
     sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, sampled)
+
+
+@jax.jit
+def fold_keys(base_key, rids, indices):
+    """Per-(request, token) sampling keys: fold_in(fold_in(base, rid), idx).
+
+    rids/indices: [B] int32. ``idx`` is the token's index within its
+    request's stream (0 = the first token sampled off the prefill logits).
+    ``fold_in`` is elementwise-deterministic, so a row's key never depends
+    on its batch-mates.
+    """
+    def one(rid, idx):
+        return jax.random.fold_in(jax.random.fold_in(base_key, rid), idx)
+
+    return jax.vmap(one)(rids, indices)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def sample_batch(logits, keys, temperature, top_k: int = 0):
+    """logits: [B, V]; keys: [B] typed PRNG keys; temperature: [B] or scalar.
+
+    Per-row categorical draws under per-row keys (vmapped, so row ``r``'s
+    draw is bitwise what a B=1 call with ``keys[r]`` would produce). Rows
+    with temperature == 0 decode greedily and ignore their key.
+    """
+    temp = jnp.asarray(temperature, jnp.float32)
+    tcol = temp[..., None] if temp.ndim == 1 else temp
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(tcol, 1e-6)
+    scaled = logits.astype(jnp.float32) / t
+    if top_k:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    sampled = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row).astype(jnp.int32)
+    )(keys, scaled)
     return jnp.where(temp <= 0.0, greedy, sampled)

@@ -67,6 +67,31 @@ def test_model_decode_with_int8_cache_close_to_fp():
     assert "k_scale" in q_cache["kv"]
 
 
+def test_model_extend_with_int8_cache_close_to_fp():
+    """Chunked prefill continuation (extend_fn) over a quantized cache:
+    tracks the fp path, re-quantizes the chunk's K/V on insert, and
+    advances pos — the serving engine's admission path works unchanged on
+    int8 slots."""
+    cfg = smoke_config("llama3.2-1b")
+    model = build(cfg)
+    params = model.init_params(jax.random.key(2))
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+    _, cache = model.prefill_fn(params, {"tokens": jnp.asarray(prompt[:8])[None]})
+    from repro.serving.engine import insert_cache
+    fp_cache = insert_cache(T.make_decode_cache(cfg, 1, 64), cache, 0)
+    q_cache = T.quantize_decode_cache(fp_cache)
+    chunk = {"tokens": jnp.asarray(prompt[8:])[None]}
+    lf, fp_cache = model.extend_fn(params, chunk, fp_cache)
+    lq, q_cache = model.extend_fn(params, chunk, q_cache)
+    assert float(jnp.abs(lf.astype(jnp.float32)
+                         - lq.astype(jnp.float32)).max()) < 1.0
+    assert q_cache["kv"]["k"].dtype == jnp.int8 and "k_scale" in q_cache["kv"]
+    assert int(q_cache["pos"][0]) == 12
+    # the chunk's rows landed quantized at positions 8..11
+    assert float(jnp.abs(q_cache["kv"]["k_scale"][:, 0, 8:12]).max()) > 0
+
+
 def test_int8_cache_specs_shard(tmp_path):
     """cache_specs(kv_dtype='int8') produces int8 leaves + scale leaves."""
     from repro.configs import SHAPES

@@ -119,9 +119,10 @@ def test_per_slot_temperature_isolation():
 
 
 def test_prefill_bucketing_bounds_compiles():
-    """Prompt lengths are chunked to power-of-2 prefill prefixes, so many
-    distinct lengths share a handful of prefill compilations — and tokens
-    still match the standalone full-length loop exactly."""
+    """Prompt lengths are chunked to power-of-2 prefill prefixes and
+    admitted in (bucket, pow2-padded batch) groups, so many distinct
+    lengths share a handful of prefill compilations — and tokens still
+    match the standalone full-length loop exactly."""
     cfg, model, params, eng = _make("llama3.2-1b", max_batch=4)
     rng = np.random.default_rng(6)
     lengths = (3, 5, 6, 7, 9, 11, 13)      # buckets: 2, 4, 4, 4, 8, 8, 8
@@ -132,7 +133,8 @@ def test_prefill_bucketing_bounds_compiles():
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=n_new))
     metrics = eng.run()
     assert metrics.summary()["num_completed"] == len(prompts)
-    # 7 distinct prompt lengths, but only 3 buckets -> <= 3 prefill traces
+    # 7 distinct prompt lengths, but only 3 (bucket, batch) groups ->
+    # <= 3 prefill traces; tails ride the O(log max_seq) extend cache
     if hasattr(eng._prefill, "_cache_size"):    # private jax API; best-effort
         assert eng._prefill._cache_size() <= 3
     got = {r.rid: r.tokens for r in metrics.completed}
