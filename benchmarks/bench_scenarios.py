@@ -1,0 +1,125 @@
+"""Scenario families — goodput/drops/E2E under injected disturbances.
+
+Drives the policy/scenario control plane (ISSUE 5): for each scenario
+family (site failure, grid trip, curtailment, demand surge, straggler
+onset, predictor-error regime) the same seeded ScenarioEngine week is
+simulated under Heron and both power-agnostic baselines. Reported per
+family: drops absorbed (baseline drops - Heron drops), goodput ratio,
+and for the straggler family the E2E inflation each policy eats relative
+to its own event-free run — Heron's site-health/straggler path is the
+only one that reacts, which is the chart the paper's K1 story implies.
+
+Runs on a healthy-power window (the wind week's own drought is benched
+by bench_goodput) so the injected events are the dominant signal.
+
+Writes ``BENCH_scenarios.json`` at the repo root under the
+``--update-tracker`` discipline (artifacts/bench/scenarios.json always).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Timer, row, save_tracker
+from repro.sim.cluster import simulate_week
+from repro.sim.scenarios import (Curtailment, DemandSurge, GridTrip,
+                                 PredictorError, ScenarioEngine, SiteFailure,
+                                 StragglerOnset)
+from repro.sim.testbed import paper_grid
+
+POLICIES = ("heron", "wrr_dynamollm", "greedy_min_latency")
+START = 200                   # healthy-power window (events are the signal)
+VOLUME = 240.0
+SEED = 0
+
+
+def _families(slots: int) -> dict[str, list]:
+    """Event stacks scaled to the window; site 0 is the biggest site."""
+    q = max(slots // 4, 1)
+    return {
+        "none": [],
+        "site_failure": [SiteFailure(site=0, start=q, duration=2 * q)],
+        "grid_trip": [GridTrip(site=0, start=q, duration=2, depth=1.0,
+                               detect_ticks=1)],
+        "curtailment": [Curtailment(frac=0.5, start=q, duration=2 * q)],
+        "demand_surge": [DemandSurge(magnitude=2.0, start=q, duration=2 * q)],
+        "straggler": [StragglerOnset(site=0, start=1, duration=slots,
+                                     slowdown=6.0)],
+        "predictor_error": [PredictorError(sigma=0.3)],
+    }
+
+
+def run(fast: bool = True):
+    rows = []
+    t = Timer()
+    slots = 10 if fast else 24
+    g = paper_grid("coding", multiplier=VOLUME)
+    table, sites = g.table, g.sites
+    pw = g.power_mw[:, START:START + slots]
+    ar = g.arrivals_rps[:, START:START + slots]
+
+    results: dict[str, dict[str, dict]] = {}
+    with t():
+        for fam, events in _families(slots).items():
+            sc = ScenarioEngine(events, seed=SEED)
+            results[fam] = {}
+            for pol in POLICIES:
+                wk = simulate_week(pol, table, sites, pw, ar, scenario=sc,
+                                   seed=SEED)
+                results[fam][pol] = {
+                    "goodput": float(wk.goodput().sum()),
+                    "drops": float(wk.drops().sum()),
+                    "drop_slots": int(wk.slots_with_drops()),
+                    "mean_e2e": float(wk.mean_e2e().mean()),
+                    "power_mw": float(wk.power().mean() / 1e6),
+                }
+    us_total = t.us
+
+    payload = {"slots": slots, "start": START, "volume": VOLUME,
+               "seed": SEED, "families": {}}
+    for fam, by_pol in results.items():
+        h = by_pol["heron"]
+        fam_out = {"policies": by_pol}
+        if fam != "none":
+            for base in ("wrr_dynamollm", "greedy_min_latency"):
+                b = by_pol[base]
+                fam_out[f"absorbed_vs_{base}"] = b["drops"] - h["drops"]
+                fam_out[f"goodput_ratio_vs_{base}"] = (
+                    h["goodput"] / max(b["goodput"], 1e-9))
+            # E2E inflation vs each policy's own event-free run — the
+            # straggler haircut shows up here (Heron inflates least)
+            fam_out["e2e_inflation"] = {
+                pol: by_pol[pol]["mean_e2e"]
+                / max(results["none"][pol]["mean_e2e"], 1e-9)
+                for pol in POLICIES}
+        payload["families"][fam] = fam_out
+
+    n_runs = len(results) * len(POLICIES)
+    for fam in ("site_failure", "grid_trip", "curtailment"):
+        f = payload["families"][fam]
+        h, w = results[fam]["heron"], results[fam]["wrr_dynamollm"]
+        rows.append(row(f"scenario_{fam}", us_total / n_runs,
+                        f"heron drops {h['drops']:.0f} vs wrr {w['drops']:.0f}"
+                        f" (absorbed {f['absorbed_vs_wrr_dynamollm']:.0f} rps"
+                        f"·slots, goodput x"
+                        f"{f['goodput_ratio_vs_wrr_dynamollm']:.2f})"))
+    infl = payload["families"]["straggler"]["e2e_inflation"]
+    rows.append(row("scenario_straggler", us_total / n_runs,
+                    f"e2e inflation heron x{infl['heron']:.2f} vs "
+                    f"greedy x{infl['greedy_min_latency']:.2f} "
+                    f"(haircut shifts load off the slow site)"))
+    save_tracker("scenarios", payload)
+    return rows
+
+
+def main():
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    common.emit(run(fast=not args.full))
+
+
+if __name__ == "__main__":
+    main()

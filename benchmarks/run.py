@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_traces           Fig 12       (length/arrival characteristics)
     bench_profiling        Fig 13/§5.1  (lookup tables)
     bench_goodput          Figs 8/14/15 (drops + goodput vs baselines)
+    bench_scenarios        ISSUE 5      (policies under injected scenarios)
     bench_tradeoff         Fig 16       (latency ↔ power)
     bench_components       Fig 17/§5.3  (Planner-S, packing, elasticity)
     bench_scalability      Fig 14 right (planner runtimes vs #sites)
@@ -38,6 +39,7 @@ MODULES = [
     "bench_traces",
     "bench_profiling",
     "bench_goodput",
+    "bench_scenarios",
     "bench_tradeoff",
     "bench_components",
     "bench_scalability",

@@ -5,19 +5,40 @@ Reproduces the paper's §5.2 headline experiment — Heron (Planner-L at
 a week of real-statistics wind power and the coding trace, through the
 drought that makes cross-site routing matter.
 
+Policies come from the RoutingPolicy registry (``repro.sim.policy``), so
+the same driver exercises anything registered there; ``--scenario
+stress`` layers a seeded ScenarioEngine disturbance stack (site failure,
+grid trip, demand surge) on top of the wind week to show Heron's
+site-health/straggler path absorbing events the power-agnostic baselines
+drop. Every run is recorded under artifacts/sim/ (``--no-record`` to
+skip) so benchmarks can reload instead of re-simulating.
+
     PYTHONPATH=src python examples/greenferencing_week.py [--slots 96]
+        [--scenario stress] [--seed 0]
 """
 import argparse
 
 import numpy as np
 
-from repro.configs import PAPER_MODEL
-from repro.core.lookup import build_table
-from repro.core.planner_l import SiteSpec
-from repro.data.wind import make_default_fleet
-from repro.data.workload import make_trace
-from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
 from repro.sim.cluster import goodput_improvement, simulate_week
+from repro.sim.policy import list_policies
+from repro.sim.scenarios import (DemandSurge, GridTrip, ScenarioEngine,
+                                 SiteFailure)
+from repro.sim.testbed import paper_grid
+
+POLICIES = ("heron", "heron_min_power", "wrr_dynamollm",
+            "greedy_min_latency")
+
+
+def stress_scenario(slots: int, seed: int) -> ScenarioEngine:
+    """Site failure + surprise grid trip + demand surge, scaled to the
+    simulated window (events land in the middle half)."""
+    q = max(slots // 4, 1)
+    return ScenarioEngine([
+        SiteFailure(site=0, start=q, duration=q),
+        GridTrip(site=1, start=2 * q, duration=2, depth=1.0, detect_ticks=1),
+        DemandSurge(magnitude=1.5, start=2 * q, duration=q),
+    ], seed=seed)
 
 
 def main():
@@ -29,29 +50,32 @@ def main():
     ap.add_argument("--volume", type=float, default=960.0)
     ap.add_argument("--trace", default="coding",
                     choices=("coding", "conversation"))
+    ap.add_argument("--scenario", default="none", choices=("none", "stress"),
+                    help="disturbance stack on top of the wind week")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the ScenarioEngine end-to-end")
+    ap.add_argument("--no-record", dest="record", action="store_false",
+                    help="skip writing artifacts/sim/ run records")
     args = ap.parse_args()
 
-    trace = make_trace(args.trace, base_rps=1.0, seed=11)
-    table = build_table(PAPER_MODEL, trace, H100_DGX,
-                        load_grid=(0.25, 1.0, 4.0, 16.0),
-                        freq_grid=(1.2, 2.0))
-    fleet = make_default_fleet(seed=7)
-    sites, thr = [], []
-    for s in fleet.sites:
-        pods = int(s.percentile_mw(20.0) // SUPERPOD_PEAK_MW)
-        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
-        thr.append(s.percentile_mw(20.0))
+    g = paper_grid(args.trace, multiplier=args.volume)
+    table, sites = g.table, g.sites
     sl = slice(args.start, args.start + args.slots)
-    power = np.minimum(fleet.week(), np.array(thr)[:, None])[:, sl]
-    arr = trace.class_arrivals(multiplier=args.volume)[:, sl] / (15 * 60)
+    power = g.power_mw[:, sl]
+    arr = g.arrivals_rps[:, sl]
 
+    scenario = (stress_scenario(args.slots, args.seed)
+                if args.scenario == "stress" else None)
     print(f"simulating {args.slots} slots @ {args.volume:.0f}x volume "
           f"({arr.sum(0).mean():.0f} rps mean) over "
-          f"{sum(s.num_gpus for s in sites):,} GPUs at 4 sites")
+          f"{sum(s.num_gpus for s in sites):,} GPUs at 4 sites "
+          f"[scenario={args.scenario}, seed={args.seed}; "
+          f"registered policies: {', '.join(list_policies())}]")
     results = {}
-    for sched in ("heron", "heron_min_power", "wrr_dynamollm",
-                  "greedy_min_latency"):
-        wk = simulate_week(sched, table, sites, power, arr)
+    for sched in POLICIES:
+        wk = simulate_week(sched, table, sites, power, arr,
+                           scenario=scenario, seed=args.seed,
+                           record=args.record)
         results[sched] = wk
         print(f"  {sched:20s} goodput {wk.goodput().sum():12,.0f} rps·slots  "
               f"drop-slots {wk.slots_with_drops():3d}  "

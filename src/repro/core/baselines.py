@@ -19,11 +19,15 @@ the C1 failure mode of Fig. 8.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+from typing import Optional
+
 import numpy as np
 
 from repro.core.lookup import LookupTable, Row
 from repro.core.planner_l import Plan, SiteSpec, plan_l
 from repro.core.planning import ColumnPool
+from repro.core.scheduler import DispatchResult, RequestScheduler
 
 
 def wrr_split(sites: list[SiteSpec], load_per_class: np.ndarray) -> list[np.ndarray]:
@@ -133,6 +137,70 @@ def baseline_greedy_min_latency(table: LookupTable, sites: list[SiteSpec],
                 unserved=unserved, objective="latency", status="baseline",
                 solve_seconds=0.0, num_sites=S,
                 _cols=pool.column_arrays(), _pool=pool)
+
+
+# ------------------------------------------------------------------
+# RoutingPolicy wrappers (see repro.sim.policy)
+# ------------------------------------------------------------------
+@dataclass
+class _BaselinePolicy:
+    """Shared lifecycle for the power-variability-agnostic baselines.
+
+    They re-plan every slot from per-class load alone, never re-solve
+    inside a slot (``plan_fine`` returns the standing plan), and ignore
+    health feedback and scenario control events — the agnosticism the
+    paper's §5.2 comparison is about. Dispatch runs through a plain WRR
+    Request Scheduler (no packing, matching the week simulator's
+    historical scoring of every policy).
+    """
+    table: LookupTable
+    sites: list[SiteSpec]
+    packing: bool = False
+    _plan: Optional[Plan] = field(default=None, repr=False)
+    _dispatcher: RequestScheduler = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._dispatcher = RequestScheduler(len(self.sites),
+                                            packing=self.packing)
+
+    def plan_fine(self, now: float, power_w: np.ndarray,
+                  observed_load: np.ndarray) -> Plan:
+        assert self._plan is not None, "plan_slot first"
+        return self._plan
+
+    def route(self, groups, arrivals: np.ndarray) -> DispatchResult:
+        return self._dispatcher.dispatch(groups, arrivals)
+
+    def observe(self, latency: np.ndarray, mask=None) -> None:
+        pass                    # no health integration (by design)
+
+    def on_event(self, event) -> None:
+        pass                    # no control-plane integration (by design)
+
+
+@dataclass
+class WrrDynamoLLMPolicy(_BaselinePolicy):
+    """Baseline (c) as a RoutingPolicy: WRR split + per-site DynamoLLM."""
+    time_limit: float = 20.0
+    name: str = "wrr_dynamollm"
+
+    def plan_slot(self, pred_power_w: np.ndarray,
+                  pred_load: np.ndarray) -> Plan:
+        self._plan = baseline_wrr_dynamollm(self.table, self.sites, pred_load,
+                                            time_limit=self.time_limit)
+        return self._plan
+
+
+@dataclass
+class GreedyMinLatencyPolicy(_BaselinePolicy):
+    """Baseline (d) as a RoutingPolicy: knee-point greedy min-latency."""
+    name: str = "greedy_min_latency"
+
+    def plan_slot(self, pred_power_w: np.ndarray,
+                  pred_load: np.ndarray) -> Plan:
+        self._plan = baseline_greedy_min_latency(self.table, self.sites,
+                                                 pred_load)
+        return self._plan
 
 
 def shed_counts_batch(plan: Plan, actual_power_w: np.ndarray) -> np.ndarray:

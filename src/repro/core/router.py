@@ -12,6 +12,24 @@ advances Planner-S/dispatch inside the slot. The same object also exposes
 the straggler mitigation used at 1000+-node scale: per-site service-
 latency EWMAs deweight slow sites inside the WRR (the router is the
 failure/straggler absorber — the paper's own K1 story).
+
+RoutingPolicy
+-------------
+``HeronRouter`` natively implements the simulators' pluggable control-
+plane interface (``repro.sim.policy.RoutingPolicy``): ``plan_slot`` /
+``plan_fine`` map onto the two planner cadences, ``route`` dispatches an
+arbitrary (e.g. brownout-shedded) group table through the router's
+Request Scheduler, ``observe`` feeds the per-site latency EWMAs with the
+fleet-relative slowdown signal, and ``on_event`` consumes ScenarioEngine
+control events (``site_down`` / ``site_up`` drive
+``mark_site_down``/``mark_site_up``; curtailment notices need no action
+here because the power forecast already reflects announced curtailment).
+``simulate_week("heron", ...)`` therefore exercises *this object* —
+straggler haircut and site-health replanning shape weekly results, and
+the Configurator's re-shard freeze clock ticks at slot cadence (its
+freeze windows bind Planner-S whenever ``plan_fine`` runs) — rather than
+re-implementing the planning loop; registered under the policy names
+``"heron"`` (min-latency) and ``"heron_min_power"``.
 """
 from __future__ import annotations
 
@@ -25,6 +43,8 @@ from repro.core.planner_l import Method, Objective, Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
 from repro.core.scheduler import Configurator, DispatchResult, RequestScheduler
+
+SLOT_SECONDS = 900.0            # one Planner-L slot (15 min)
 
 
 @dataclass
@@ -126,6 +146,58 @@ class HeronRouter:
         if p.status != "empty":
             self._plan_s = p
         return self._plan_s or self._plan_l
+
+    # ---------------- RoutingPolicy protocol ----------------
+    @property
+    def name(self) -> str:
+        return "heron" if self.objective == "latency" else "heron_min_power"
+
+    def plan_slot(self, pred_power_w: np.ndarray,
+                  pred_load: np.ndarray) -> Plan:
+        """RoutingPolicy entry for the Planner-L cadence: advances the
+        router clock one slot per call (so Configurator re-shard freezes
+        tick and expire at slot cadence instead of piling up at t=0),
+        then runs ``step_slot``. External callers that drive the clock
+        themselves via ``step_seconds(now=...)`` should keep calling
+        ``step_slot`` directly."""
+        if self._plan_l is not None:
+            self._now += SLOT_SECONDS
+        return self.step_slot(pred_power_w, pred_load)
+
+    def plan_fine(self, now: float, power_w: np.ndarray,
+                  observed_load: np.ndarray) -> Plan:
+        """RoutingPolicy alias for ``step_seconds`` (Planner-S cadence)."""
+        return self.step_seconds(now, power_w, observed_load)
+
+    def route(self, groups, arrivals_rps: np.ndarray) -> DispatchResult:
+        """Dispatch ``arrivals_rps`` over an externally-realized group
+        table (the week simulator routes the brownout-shedded plan, not
+        the nominal one) through the router's Request Scheduler."""
+        return self._dispatcher.dispatch(groups, arrivals_rps)
+
+    def observe(self, latency: np.ndarray,
+                mask: Optional[np.ndarray] = None) -> None:
+        """Feed the straggler EWMAs a fleet-relative latency signal.
+
+        The week simulator reports each site's service-latency *inflation*
+        (1.0 = nominal): structural cross-site E2E differences are
+        plan-intentional and must not read as straggling, while a real
+        straggler pushes its signal past ``straggler_threshold`` x the
+        fleet median and earns the graded haircut.
+        """
+        if mask is None:
+            mask = np.ones(len(self.sites), dtype=bool)
+        self.observe_latencies(mask, np.asarray(latency, dtype=float))
+
+    def on_event(self, event) -> None:
+        """Consume a ScenarioEngine control event (health signals)."""
+        kind = getattr(event, "kind", None)
+        if kind == "site_down":
+            self.mark_site_down(event.site)
+        elif kind == "site_up":
+            self.mark_site_up(event.site)
+        # curtailment notices: the planner already sees capped power via
+        # the (announced) forecast — nothing extra to freeze here.
 
     # ---------------- dispatch ----------------
     def dispatch(self, arrivals_rps: np.ndarray) -> DispatchResult:

@@ -315,7 +315,11 @@ class Configurator:
     _pending: dict[tuple[int, int, int], float] = field(default_factory=dict)
 
     def apply(self, old: Plan | None, new: Plan, now: float) -> None:
-        """Diff (s,c,t) instance counts; start re-shard timers on changes."""
+        """Diff (s,c,t) instance counts; start re-shard timers on changes.
+        Already-expired timers are purged so long-running drivers (the
+        week simulator applies once per slot) don't accumulate stale
+        pending entries."""
+        self._pending = {k: t for k, t in self._pending.items() if t > now}
         if old is None:
             return
         o = old.agg_by_sct()

@@ -23,7 +23,6 @@ Usage:
       --shape train_4k [--multi-pod] [--all] [--fsdp] [--out artifacts/dryrun]
 """
 import argparse
-import json
 import re
 import time
 import traceback
@@ -40,6 +39,7 @@ from repro.distributed.param_sharding import (batch_specs, cache_specs_tree,
 from repro.distributed.sharding import ParallelConfig, axis_rules, make_rules
 from repro.launch.mesh import make_parallel
 from repro.models.api import build
+from repro.sim.record import write_record
 from repro.training import AdamW, make_train_step
 
 # ----------------------------------------------------------------- HLO parse
@@ -247,7 +247,6 @@ def main(argv=None) -> int:
     ap.add_argument("--tag", default="")
     args = ap.parse_args(argv)
 
-    os.makedirs(args.out, exist_ok=True)
     todo = []
     if args.all:
         todo = [(a, s) for a, s, skip in cells() if not skip]
@@ -283,8 +282,7 @@ def main(argv=None) -> int:
                        "ok": False, "error": str(e),
                        "traceback": traceback.format_exc()}
                 print(f"[dryrun] FAIL {name}: {e}")
-            with open(path, "w") as f:
-                json.dump(rep, f, indent=1)
+            write_record(path, rep)   # same artifacts contract as the sims
             jax.clear_caches()        # keep the 64-cell sweep's RSS bounded
     return 1 if failures else 0
 

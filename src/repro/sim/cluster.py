@@ -2,17 +2,47 @@
 
 Two granularities, matching the paper's evaluation methodology:
 
-  * ``simulate_week``      — 15-min slots over 672 slots: Planner-L (or a
-    baseline) plans each slot; goodput / drops / latency / power are
-    accounted per slot. Baselines are power-variability agnostic, so their
-    plans are confronted with reality via ``apply_power_reality`` (whole-
-    instance brownout shedding) — reproducing Fig. 8/14/15.
+  * ``simulate_week``      — 15-min slots over 672 slots: a pluggable
+    ``RoutingPolicy`` (see ``repro.sim.policy``) plans each slot; goodput
+    / drops / latency / power are accounted per slot. Baselines are
+    power-variability agnostic, so their plans are confronted with
+    reality via ``apply_power_reality`` (whole-instance brownout
+    shedding) — reproducing Fig. 8/14/15.
 
   * ``simulate_slot_fine`` — 1-s steps inside one slot: per-second power
     and Poisson arrivals fluctuate around the slot values; Planner-S re-
     solves (f, l) every few seconds inside Planner-L's GPU budget, and the
     Request Scheduler's packing heuristic absorbs transient per-class
     overloads — reproducing Fig. 17 and the §5.3 elasticity test.
+
+Control plane
+-------------
+The driver is policy/scenario-driven rather than an inlined planning
+loop:
+
+  * ``simulate_week(name_or_policy, ...)`` resolves a ``RoutingPolicy``
+    through the name->factory registry (``"heron"``,
+    ``"heron_min_power"``, ``"wrr_dynamollm"``, ``"greedy_min_latency"``,
+    or anything added via ``register_policy``) and drives its
+    plan_slot / route / observe / on_event lifecycle. For the Heron
+    names this is the *actual* ``HeronRouter`` object — straggler EWMA
+    haircuts and ``mark_site_down`` health replanning shape weekly
+    results (the paper's K1 story), and the Configurator's re-shard
+    freeze clock ticks at slot cadence (its freeze windows bind
+    Planner-S via ``plan_fine``) — instead of being bypassed by a
+    parallel if/elif loop. A policy *instance* is driven as configured
+    (e.g. a hand-built ``HeronRouter`` keeps its ``packing=True``
+    dispatch default); use the registry names for the week scoring
+    convention (no packing, matching ``simulate_week_reference``).
+  * disturbances come from a seeded ``ScenarioEngine``
+    (``repro.sim.scenarios``): site failures & recoveries, grid-trip
+    power cliffs, curtailment orders, demand surges/diurnal swell,
+    predictor-error regimes, straggler onset — compiled once into
+    per-tick truth/knowledge factors and control events, consumed
+    uniformly here and in ``simulate_slot_fine``. The default
+    (event-free) scenario perturbs nothing, and the legacy scheduler
+    names stay bit-identical to the pre-refactor driver (kept as
+    ``simulate_week_reference``; pinned by tests/test_scenarios.py).
 
 Fluid-flow semantics: requests are rps flows per class; queueing beyond
 rated capacity accrues in a per-class fluid backlog whose Little's-law
@@ -33,22 +63,21 @@ Both simulators run on the columnar dispatch engine (``GroupTable``):
     a cheap ``GroupTable.with_counts`` + vector dispatch (the per-second
     Python loop only threads the fluid backlog, which is inherently
     sequential);
-  * the Planner-S re-solve schedule is float-safe: re-solves fire at
-    multiples of ``planner_s_period`` (for integer periods this is
-    exactly the old ``t % period == 0`` schedule; non-integer periods
-    no longer crash or alias);
-  * each Planner-S re-solve is warm-started from the previous one (the
-    GPU grant is pulled once as a columnar ``GpuBudget``): the prior
-    second's counts are projected onto the new power/load and accepted
-    when they pass ``solve_milp``'s LP-bound gap, replacing most
-    branch-and-cut solves with one LP plus vector repairs (status
-    ``"warm"``; ``FineResult.warm_hits`` counts them, and
+  * each Planner-S re-solve is warm-started from the previous one
+    (status ``"warm"``; ``FineResult.warm_hits`` counts them, and
     ``warm_start=False`` restores cold solves for A/B benchmarks).
+
+Run records: ``WeekResult``/``FineResult`` round-trip through
+``to_json``/``from_json``; pass ``record=`` to persist a run under
+``artifacts/sim/`` (benchmarks reload records via ``load_week_result``
+instead of re-simulating).
 """
 from __future__ import annotations
 
+import hashlib
+import os
 from dataclasses import dataclass, field
-from typing import Callable, Literal, Optional
+from typing import Literal, Optional, Union
 
 import numpy as np
 from scipy.signal import lfilter
@@ -61,6 +90,8 @@ from repro.core.planner_l import Method, Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
 from repro.core.scheduler import Configurator, GroupTable, RequestScheduler
+from repro.sim.record import load_record, write_record
+from repro.sim.scenarios import ScenarioEngine
 
 SchedulerName = Literal["heron", "heron_min_power", "wrr_dynamollm",
                         "greedy_min_latency"]
@@ -83,6 +114,23 @@ class SlotMetrics:
     def total_dropped(self) -> float:
         return float(self.dropped.sum())
 
+    def to_json(self) -> dict:
+        return {"served": self.served.tolist(),
+                "dropped": self.dropped.tolist(),
+                "mean_e2e": float(self.mean_e2e),
+                "power_w": float(self.power_w),
+                "solve_s": float(self.solve_s),
+                "reconfigs": int(self.reconfigs)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SlotMetrics":
+        return cls(served=np.asarray(d["served"], float),
+                   dropped=np.asarray(d["dropped"], float),
+                   mean_e2e=float(d["mean_e2e"]),
+                   power_w=float(d["power_w"]),
+                   solve_s=float(d["solve_s"]),
+                   reconfigs=int(d["reconfigs"]))
+
 
 @dataclass
 class WeekResult:
@@ -104,6 +152,15 @@ class WeekResult:
     def power(self) -> np.ndarray:
         return np.array([s.power_w for s in self.slots])
 
+    def to_json(self) -> dict:
+        return {"kind": "week", "name": self.name,
+                "slots": [s.to_json() for s in self.slots]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WeekResult":
+        return cls(name=d["name"],
+                   slots=[SlotMetrics.from_json(s) for s in d["slots"]])
+
 
 def goodput_improvement(heron: WeekResult, baseline: WeekResult) -> np.ndarray:
     """Per-slot goodput ratio (Fig. 14 middle / Fig. 15): Heron / baseline."""
@@ -111,23 +168,167 @@ def goodput_improvement(heron: WeekResult, baseline: WeekResult) -> np.ndarray:
     return g_h / np.maximum(g_b, 1e-9)
 
 
-def simulate_week(scheduler: SchedulerName, table: LookupTable,
+# repo root (src/repro/sim/cluster.py -> 4 levels up): record=True must
+# land in the same artifacts/sim/ tree the benchmarks read regardless of
+# the launch directory
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+
+def _record_path(record: Union[str, bool], name: str, S: int, T: int,
+                 seed: Optional[int], engine: ScenarioEngine,
+                 power_mw: np.ndarray, arrivals_rps: np.ndarray,
+                 predictor_kind: str, planner_knobs: tuple) -> str:
+    if record is True:
+        record = os.path.join(_REPO_ROOT, "artifacts", "sim")
+    if str(record).endswith(".json"):
+        return str(record)
+    # distinct runs must not overwrite each other's records: the auto
+    # name keys on the workload inputs (power/arrival windows, predictor,
+    # planner knobs) and, when events are present, the scenario stack
+    h = hashlib.md5()
+    h.update(np.ascontiguousarray(power_mw).tobytes())
+    h.update(np.ascontiguousarray(arrivals_rps).tobytes())
+    h.update(repr((predictor_kind, planner_knobs)).encode())
+    tag = f"_w{h.hexdigest()[:8]}"
+    if seed is not None:
+        tag += f"_seed{seed}"
+    if engine.events:
+        sc_digest = hashlib.md5(
+            repr((engine.seed, engine.events)).encode()).hexdigest()[:8]
+        tag += f"_sc{sc_digest}"
+    return os.path.join(str(record), f"week_{name}_{S}sites_{T}slots{tag}.json")
+
+
+def load_week_result(path: str) -> WeekResult:
+    """Reload a recorded ``simulate_week`` run (see the ``record=`` knob)."""
+    d = load_record(path)
+    return WeekResult.from_json(d.get("result", d))
+
+
+def simulate_week(scheduler, table: LookupTable,
                   sites: list[SiteSpec], power_mw: np.ndarray,
                   arrivals_rps: np.ndarray, *,
                   predictor_kind: str = "oracle", r_frac: float = 0.03,
                   time_limit: float = 20.0,
                   slots: Optional[int] = None,
                   planner_method: Method = "auto",
-                  planner_workers: Optional[int] = None) -> WeekResult:
-    """Slot-level week simulation.
+                  planner_workers: Optional[int] = None,
+                  scenario: Optional[ScenarioEngine] = None,
+                  seed: Optional[int] = None,
+                  record: Union[str, bool, None] = None) -> WeekResult:
+    """Slot-level week simulation, driven by a pluggable RoutingPolicy.
 
-    power_mw: [S, T] available generation per site; arrivals_rps: [9, T].
-    The site's usable power is min(generation, provisioned demand) — the
-    provisioned hardware cap is already expressed by the GPU constraint.
-    ``planner_method``/``planner_workers`` select the Planner-L solve
-    path ("auto" = the drain-priced decomposition at every fleet size;
-    "monolithic" = the exact reference) and its site-ILP pool size.
+    ``scheduler``: a registered policy name (see
+    ``repro.sim.policy.list_policies``) or a ``RoutingPolicy`` instance.
+    ``power_mw``: [S, T] available generation per site; arrivals_rps:
+    [9, T]. The site's usable power is min(generation, provisioned
+    demand) — the provisioned hardware cap is already expressed by the
+    GPU constraint. ``planner_method``/``planner_workers`` select the
+    Planner-L solve path for the Heron policies ("auto" = the
+    drain-priced decomposition at every fleet size; "monolithic" = the
+    exact reference) and the site-ILP pool size.
+
+    ``scenario`` perturbs per-slot truth and emits control events
+    (``repro.sim.scenarios``); ``seed`` makes the whole run reproducible
+    (it seeds the default scenario — pass an explicitly-seeded engine to
+    combine both). ``record`` persists the result as a JSON run record:
+    ``True`` -> artifacts/sim/, a directory, or a full ``.json`` path.
     """
+    S, T = power_mw.shape
+    T = min(T, arrivals_rps.shape[1]) if slots is None else min(slots, T)
+
+    engine = scenario if scenario is not None else ScenarioEngine(seed=seed)
+    sc = engine.compile(S, T)
+
+    if isinstance(scheduler, str):
+        from repro.sim.policy import make_policy
+        policy = make_policy(scheduler, table, sites, r_frac=r_frac,
+                             time_limit=time_limit,
+                             planner_method=planner_method,
+                             planner_workers=planner_workers)
+        name = scheduler
+    else:
+        policy = scheduler
+        name = getattr(scheduler, "name", type(scheduler).__name__)
+
+    # knowledge plane: the forecast pipeline's view of the power series
+    # (full-length so predictor clamping sees the same range as truth)
+    known_power = power_mw.astype(float).copy()
+    known_power[:, :T] *= sc.known_power_factor
+    predictors = [SeriesPredictor(known_power[s], kind=predictor_kind)
+                  for s in range(S)]
+
+    old: Optional[Plan] = None
+    cfgtor = Configurator()
+    out: list[SlotMetrics] = []
+    for t in range(T):
+        for ev in sc.controls_at(t):
+            policy.on_event(ev)
+        actual_w = power_mw[:, t] * sc.power_factor[:, t] * 1e6
+        pred_w = np.array([p.predict(t) for p in predictors]) * 1e6
+        noise = sc.pred_noise[:, t]
+        if (noise != 1.0).any():
+            pred_w = pred_w * noise
+        loads_known = arrivals_rps[:, t] * sc.known_arrival_factor[:, t]
+        loads_true = arrivals_rps[:, t] * sc.arrival_factor[:, t]
+
+        p = policy.plan_slot(pred_w, loads_known)
+        reconfigs = cfgtor.reconfig_count(old, p)
+        old = p
+        # reality: any plan drawing beyond actual generation browns out
+        real = apply_power_reality(p, actual_w)
+        gtable = real.group_table()
+        res = policy.route(gtable, loads_true)
+        # observed service latency: per-site inflation (1.0 = nominal) —
+        # the straggler signal; feeds the policy for the *next* slot
+        lat = sc.latency_factor[:, t]
+        mean_e2e = res.aggregate_e2e()
+        if (lat != 1.0).any():
+            w = res.per_site_load
+            tot = float(w.sum())
+            if tot > 0:
+                mean_e2e *= float((w * lat).sum() / tot)
+        policy.observe(lat)
+        out.append(SlotMetrics(served=res.served, dropped=res.dropped,
+                               mean_e2e=mean_e2e,
+                               power_w=gtable.total_power(),
+                               solve_s=p.solve_seconds, reconfigs=reconfigs))
+    # flush controls scheduled at/beyond the horizon (e.g. a recovery
+    # landing exactly on the boundary) so a reused policy ends consistent
+    for ev in sc.controls_after(T):
+        policy.on_event(ev)
+    wk = WeekResult(name=name, slots=out)
+    if record:
+        # the seed kwarg is inoperative when an explicit scenario is
+        # passed (the engine carries its own) — keep it out of the auto
+        # filename so identical runs map to one record
+        tag_seed = seed if scenario is None else None
+        write_record(_record_path(record, name, S, T, tag_seed, engine,
+                                  power_mw[:, :T], arrivals_rps[:, :T],
+                                  predictor_kind,
+                                  (r_frac, time_limit, planner_method,
+                                   planner_workers)),
+                     {"policy": name, "seed": engine.seed,
+                      "scenario": repr(engine),
+                      "predictor_kind": predictor_kind,
+                      "result": wk.to_json()})
+    return wk
+
+
+def simulate_week_reference(scheduler: SchedulerName, table: LookupTable,
+                            sites: list[SiteSpec], power_mw: np.ndarray,
+                            arrivals_rps: np.ndarray, *,
+                            predictor_kind: str = "oracle",
+                            r_frac: float = 0.03,
+                            time_limit: float = 20.0,
+                            slots: Optional[int] = None,
+                            planner_method: Method = "auto",
+                            planner_workers: Optional[int] = None) -> WeekResult:
+    """Pre-refactor inlined driver, kept verbatim as the equivalence
+    oracle: the policy-driven ``simulate_week`` must reproduce it
+    bit-identically for the four legacy scheduler names under the
+    default (event-free) scenario (tests/test_scenarios.py)."""
     S, T = power_mw.shape
     T = min(T, arrivals_rps.shape[1]) if slots is None else min(slots, T)
     dispatcher = RequestScheduler(S, packing=False)
@@ -157,7 +358,6 @@ def simulate_week(scheduler: SchedulerName, table: LookupTable,
             raise ValueError(scheduler)
         reconfigs = cfgtor.reconfig_count(old, p)
         old = p
-        # reality: any plan drawing beyond actual generation browns out
         real = apply_power_reality(p, actual_w)
         gtable = real.group_table()
         res = dispatcher.dispatch(gtable, loads)
@@ -200,6 +400,26 @@ class FineResult:
         """How many Planner-S re-solves the warm path absorbed."""
         return sum(1 for s in self.planner_s_status if s == "warm")
 
+    def to_json(self) -> dict:
+        return {"kind": "fine",
+                "e2e_per_second": {k: v.tolist()
+                                   for k, v in self.e2e_per_second.items()},
+                "dropped": {k: float(v) for k, v in self.dropped.items()},
+                "class_e2e": {k: v.tolist()
+                              for k, v in self.class_e2e.items()},
+                "planner_s_solves": [float(s) for s in self.planner_s_solves],
+                "planner_s_status": list(self.planner_s_status)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FineResult":
+        return cls(e2e_per_second={k: np.asarray(v, float)
+                                   for k, v in d["e2e_per_second"].items()},
+                   dropped={k: float(v) for k, v in d["dropped"].items()},
+                   class_e2e={k: np.asarray(v, float)
+                              for k, v in d["class_e2e"].items()},
+                   planner_s_solves=list(d.get("planner_s_solves", [])),
+                   planner_s_status=list(d.get("planner_s_status", [])))
+
 
 def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
                        base_plan: Plan, power_w_slot: np.ndarray,
@@ -208,7 +428,8 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
                        power_noise: float = 0.04,
                        power_scale: float = 1.0,
                        variants=("L", "L+S", "L+S+pack"),
-                       seed: int = 0, warm_start: bool = True) -> FineResult:
+                       seed: int = 0, warm_start: bool = True,
+                       scenario: Optional[ScenarioEngine] = None) -> FineResult:
     """Second-level simulation of one 15-min slot.
 
     Power per second follows an AR(1) wiggle (±power_noise) around
@@ -216,6 +437,13 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     Variants: 'L' follows Planner-L blindly; 'L+S' re-solves (f, l) every
     ``planner_s_period`` s at observed load/power; '+pack' adds the
     Request Scheduler packing heuristic.
+
+    ``scenario`` injects second-granularity disturbances through the
+    same engine the week simulator uses (tick = 1 s here): grid trips /
+    curtailment scale per-second power, demand surges scale the Poisson
+    intensities, and a ``PowerWiggle`` event overrides the AR(1)
+    parameters. The default (no scenario) path is bit-identical to the
+    historical hardcoded AR(1)-only disturbance model.
 
     The Planner-L GPU grant is pulled once as a columnar ``GpuBudget``
     and each Planner-S re-solve is warm-started from the previous one
@@ -227,10 +455,19 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     gpu_budget = base_plan.gpu_budget_pool()
     period = max(float(planner_s_period), 1.0)
     # per-second power: AR(1) multiplicative wiggle (vectorized)
-    wig = ar1_wiggle(rng, S, seconds, power_noise)
+    wig_ev = scenario.fine_wiggle() if scenario is not None else None
+    if wig_ev is not None:
+        wig = ar1_wiggle(rng, S, seconds, wig_ev.noise, wig_ev.phi)
+    else:
+        wig = ar1_wiggle(rng, S, seconds, power_noise)
     pw = power_w_slot[:, None] * power_scale * np.exp(wig)
-    arr = rng.poisson(np.maximum(arrivals_rps, 0)[:, None],
-                      size=(9, seconds)).astype(float)
+    lam = np.maximum(arrivals_rps, 0)[:, None]
+    if scenario is not None:
+        sc = scenario.compile(S, seconds)
+        if not sc.is_trivial:       # trivial scenario keeps the exact
+            pw = pw * sc.power_factor   # historical arrays (bit-compat)
+            lam = lam * sc.arrival_factor
+    arr = rng.poisson(lam, size=(9, seconds)).astype(float)
 
     results_e2e = {}
     results_drop = {}

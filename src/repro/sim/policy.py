@@ -1,0 +1,114 @@
+"""RoutingPolicy — the pluggable control-plane interface of the simulators.
+
+A routing policy is anything that can run the paper's control loop:
+
+    plan_slot(pred_power_w, pred_load) -> Plan     Planner-L cadence (15 min)
+    plan_fine(now, power_w, observed_load) -> Plan Planner-S cadence (~5 s)
+    route(groups, arrivals) -> DispatchResult      Request Scheduler dispatch
+    observe(latency, mask=None)                    per-site health feedback
+    on_event(event)                                ScenarioEngine controls
+
+``HeronRouter`` implements it natively (both objectives) — so
+``simulate_week("heron", ...)`` now drives the *actual* router object,
+straggler EWMA, site up/down marking and Configurator freeze windows
+included, instead of a parallel inlined planning loop. The two paper
+baselines are wrapped by ``WrrDynamoLLMPolicy`` / ``GreedyMinLatencyPolicy``
+(power-variability agnostic: they ignore power predictions, health
+feedback, and control events — which is exactly why scenarios hurt them).
+
+The name->factory registry keeps the legacy string API working
+(``simulate_week("wrr_dynamollm", ...)``) and is the extension point for
+new baselines: ``register_policy("mine", my_factory)`` and every driver,
+benchmark, and example picks it up. Factories receive
+``(table, sites, **kwargs)`` where kwargs are the driver's standard knobs
+(``r_frac``, ``time_limit``, ``planner_method``, ``planner_workers``,
+``packing``) — ignore what does not apply.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.baselines import (GreedyMinLatencyPolicy, WrrDynamoLLMPolicy)
+from repro.core.lookup import LookupTable
+from repro.core.planner_l import Plan, SiteSpec
+from repro.core.router import HeronRouter
+from repro.core.scheduler import DispatchResult
+
+
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    """Structural interface — see module docstring for the lifecycle."""
+    name: str
+
+    def plan_slot(self, pred_power_w: np.ndarray,
+                  pred_load: np.ndarray) -> Plan: ...
+
+    def plan_fine(self, now: float, power_w: np.ndarray,
+                  observed_load: np.ndarray) -> Plan: ...
+
+    def route(self, groups, arrivals: np.ndarray) -> DispatchResult: ...
+
+    def observe(self, latency: np.ndarray,
+                mask: Optional[np.ndarray] = None) -> None: ...
+
+    def on_event(self, event) -> None: ...
+
+
+PolicyFactory = Callable[..., RoutingPolicy]
+
+_REGISTRY: dict[str, PolicyFactory] = {}
+
+
+def register_policy(name: str, factory: PolicyFactory) -> None:
+    """Register a policy factory under ``name`` (later wins)."""
+    _REGISTRY[name] = factory
+
+
+def list_policies() -> list[str]:
+    """Registered policy names, sorted."""
+    return sorted(_REGISTRY)
+
+
+def make_policy(name: str, table: LookupTable, sites: list[SiteSpec],
+                **kwargs) -> RoutingPolicy:
+    """Instantiate a registered policy; unknown names list what exists."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown routing policy {name!r}; registered policies: "
+            f"{', '.join(list_policies())}")
+    return _REGISTRY[name](table, sites, **kwargs)
+
+
+# ------------------------------------------------------------------
+# built-in policies
+# ------------------------------------------------------------------
+def _heron_factory(objective: str) -> PolicyFactory:
+    def make(table: LookupTable, sites: list[SiteSpec], *,
+             r_frac: float = 0.03, time_limit: float = 20.0,
+             planner_method: str = "auto",
+             planner_workers: Optional[int] = None,
+             packing: bool = False, **_ignored) -> HeronRouter:
+        return HeronRouter(table=table, sites=sites, objective=objective,
+                           r_frac=r_frac, time_limit_l=time_limit,
+                           planner_method=planner_method,
+                           planner_workers=planner_workers, packing=packing)
+    return make
+
+
+def _wrr_factory(table: LookupTable, sites: list[SiteSpec], *,
+                 time_limit: float = 20.0, **_ignored) -> WrrDynamoLLMPolicy:
+    return WrrDynamoLLMPolicy(table=table, sites=sites,
+                              time_limit=time_limit)
+
+
+def _greedy_factory(table: LookupTable, sites: list[SiteSpec],
+                    **_ignored) -> GreedyMinLatencyPolicy:
+    return GreedyMinLatencyPolicy(table=table, sites=sites)
+
+
+register_policy("heron", _heron_factory("latency"))
+register_policy("heron_min_power", _heron_factory("power"))
+register_policy("wrr_dynamollm", _wrr_factory)
+register_policy("greedy_min_latency", _greedy_factory)

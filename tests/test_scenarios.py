@@ -1,0 +1,379 @@
+"""Policy/scenario control-plane tests (ISSUE 5).
+
+Three layers:
+
+  * **Equivalence** — the policy-driven ``simulate_week`` is pinned
+    bit-identical to the pre-refactor inlined driver
+    (``simulate_week_reference``) for all four legacy scheduler names on
+    the 4-site paper grid under the default (event-free) scenario. The
+    window is the week's deep drought at stress volume so brownout
+    shedding, plan chaining (``old``), and reconfig counting are all
+    exercised, not just the happy path.
+  * **Scenario events** — seeded smoke tests for the event families
+    (site failure, recovery, grid trip, curtailment, demand surge,
+    straggler onset, predictor-error regimes): each asserts the
+    *mechanism* (HeronRouter's site-health marking, surprise detection
+    lag, straggler EWMA haircut) not just that the code runs.
+  * **Plumbing** — registry errors list registered policies, seeds make
+    weeks reproducible end-to-end, results round-trip through JSON run
+    records.
+
+Everything here runs under ``-m "not slow"`` (windows are 6-10 slots).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.planner_l import plan_l
+from repro.sim.cluster import (FineResult, WeekResult, load_week_result,
+                               simulate_slot_fine, simulate_week,
+                               simulate_week_reference)
+from repro.sim.policy import RoutingPolicy, list_policies, make_policy
+from repro.sim.scenarios import (Curtailment, DemandSurge, DiurnalSwell,
+                                 GridTrip, PowerWiggle, PredictorError,
+                                 ScenarioEngine, SiteFailure, StragglerOnset)
+from repro.sim.testbed import paper_grid
+
+LEGACY = ("heron", "heron_min_power", "wrr_dynamollm", "greedy_min_latency")
+START = 200                     # healthy-power window for event tests
+SLOTS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = paper_grid("coding", multiplier=60.0)
+    return g.table, g.sites, g.power_mw, g.arrivals_rps
+
+
+@pytest.fixture(scope="module")
+def window(setup):
+    """Healthy-power 8-slot window at 240x volume — injected events are
+    the dominant signal here (the drought itself is tested elsewhere)."""
+    table, sites, power, arrivals = setup
+    return (table, sites, power[:, START:START + SLOTS],
+            arrivals[:, START:START + SLOTS] * 4.0)
+
+
+@pytest.fixture(scope="module")
+def heron_base(window):
+    """Event-free heron run on the window (shared across event tests)."""
+    table, sites, pw, ar = window
+    return simulate_week("heron", table, sites, pw, ar)
+
+
+def _same_week(a: WeekResult, b: WeekResult) -> bool:
+    """Bit-identical apart from solve wall time (nondeterministic)."""
+    return (len(a.slots) == len(b.slots)
+            and all((x.served == y.served).all()
+                    and (x.dropped == y.dropped).all()
+                    and x.mean_e2e == y.mean_e2e
+                    and x.power_w == y.power_w
+                    and x.reconfigs == y.reconfigs
+                    for x, y in zip(a.slots, b.slots)))
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.parametrize("name", LEGACY)
+def test_week_driver_bit_identical_to_reference(setup, name):
+    """Default scenario: the policy-driven driver reproduces the
+    pre-refactor inlined loop bit-for-bit (drought window, 960x volume,
+    so power-reality shedding and plan chaining are active)."""
+    table, sites, power, arrivals = setup
+    pw = power[:, 500:506]
+    ar = arrivals[:, 500:506] * 16.0
+    new = simulate_week(name, table, sites, pw, ar)
+    ref = simulate_week_reference(name, table, sites, pw, ar)
+    assert new.name == ref.name == name
+    assert _same_week(new, ref)
+
+
+def test_week_accepts_policy_instance(setup):
+    """A RoutingPolicy object runs identically to its registry name."""
+    table, sites, power, arrivals = setup
+    pw = power[:, 500:504]
+    ar = arrivals[:, 500:504] * 16.0
+    pol = make_policy("greedy_min_latency", table, sites)
+    assert isinstance(pol, RoutingPolicy)
+    by_obj = simulate_week(pol, table, sites, pw, ar)
+    by_name = simulate_week("greedy_min_latency", table, sites, pw, ar)
+    assert by_obj.name == "greedy_min_latency"
+    assert _same_week(by_obj, by_name)
+
+
+# ------------------------------------------------------------ registry
+def test_registry_lists_builtins():
+    assert set(LEGACY) <= set(list_policies())
+
+
+def test_unknown_policy_error_lists_registered(setup):
+    table, sites, power, arrivals = setup
+    with pytest.raises(ValueError, match="heron_min_power"):
+        simulate_week("no_such_policy", table, sites, power[:, :2],
+                      arrivals[:, :2])
+
+
+# ------------------------------------------------------------ scenarios
+def test_site_failure_heron_absorbs_baseline_drops(window, heron_base):
+    """The K1 mechanism: a SiteFailure zeroes truth power but NOT the
+    power forecast — only the SITE_DOWN health signal tells the control
+    plane. HeronRouter replans around the dead site (no drops); the
+    power-agnostic baseline keeps placing load there and drops it."""
+    table, sites, pw, ar = window
+    big = int(np.argmax([s.num_gpus for s in sites]))
+    sc = ScenarioEngine([SiteFailure(site=big, start=2, duration=4)], seed=0)
+    h = simulate_week("heron", table, sites, pw, ar, scenario=sc)
+    g = simulate_week("greedy_min_latency", table, sites, pw, ar, scenario=sc)
+    assert g.drops().sum() > 10.0          # baseline pays the C1 price
+    assert h.drops().sum() <= 1e-6         # health replanning absorbs it
+    assert h.goodput().sum() > g.goodput().sum()
+
+
+def test_site_recovery_restores_capacity(window, heron_base):
+    """SITE_UP marks the site alive again: post-recovery slots match the
+    event-free run's goodput and the policy ends fully healthy."""
+    table, sites, pw, ar = window
+    pol = make_policy("heron", table, sites)
+    sc = ScenarioEngine([SiteFailure(site=0, start=2, duration=3)], seed=0)
+    ev = simulate_week(pol, table, sites, pw, ar, scenario=sc)
+    assert pol._site_alive.all()           # SITE_UP consumed
+    # slots 5..7 are post-recovery: capacity is back
+    assert ev.drops()[5:].sum() <= 1e-6
+    assert ev.goodput()[-1] >= 0.99 * heron_base.goodput()[-1]
+
+
+def test_week_advances_router_clock(window):
+    """plan_slot ticks the router clock one slot per call, so
+    Configurator re-shard freezes expire at slot cadence instead of
+    piling up at t=0 across the whole week."""
+    from repro.core.router import SLOT_SECONDS
+    table, sites, pw, ar = window
+    pol = make_policy("heron", table, sites)
+    simulate_week(pol, table, sites, pw, ar)
+    assert pol._now == (SLOTS - 1) * SLOT_SECONDS
+    # only the last slot's re-shards can still be pending
+    frozen = pol._cfgtor.frozen(pol._now)
+    stale = pol._cfgtor.frozen(pol._now + SLOT_SECONDS)
+    assert not stale and len(frozen) >= len(stale)
+
+
+def test_curtailment_control_pairing():
+    """CURTAILMENT/CURTAILMENT_LIFTED always pair: orders already in
+    force at tick 0 announce at 0; out-of-horizon orders are silent."""
+    c = ScenarioEngine([Curtailment(frac=0.5, start=-5, duration=10)],
+                       seed=0).compile(4, 8)
+    kinds = {ev.tick: ev.kind for evs in c.controls.values() for ev in evs}
+    assert kinds == {0: "curtailment", 5: "curtailment_lifted"}
+    c = ScenarioEngine([Curtailment(frac=0.5, start=99, duration=4)],
+                       seed=0).compile(4, 8)
+    assert (c.power_factor == 1.0).all() and not c.controls
+
+
+def test_recovery_on_horizon_boundary_flushed(window):
+    """A recovery landing exactly on (or past) the horizon is flushed at
+    end-of-run: a reused policy is not left permanently site-down."""
+    table, sites, pw, ar = window
+    pol = make_policy("heron", table, sites)
+    sc = ScenarioEngine([SiteFailure(site=0, start=2, duration=SLOTS)],
+                        seed=0)
+    simulate_week(pol, table, sites, pw, ar, scenario=sc)
+    assert pol._site_alive.all()
+
+
+def test_grid_trip_surprise_then_detection(window):
+    """A grid trip is a surprise: the first affected slot hits the plan
+    via brownout shedding (drops even for Heron), then the detection lag
+    passes, forecasts reflect the cliff, and Heron replans it away."""
+    table, sites, pw, ar = window
+    big = int(np.argmax([s.num_gpus for s in sites]))
+    sc = ScenarioEngine([GridTrip(site=big, start=3, duration=4, depth=1.0,
+                                  detect_ticks=1)], seed=0)
+    h = simulate_week("heron", table, sites, pw, ar, scenario=sc)
+    assert h.drops()[3] > 1.0              # surprised at the cliff
+    assert h.drops()[5:7].sum() <= 1e-6    # detected + replanned around
+
+
+def test_curtailment_caps_draw(window, heron_base):
+    """An announced curtailment order: plans (and hence draw) stay under
+    the curtailed power in the window, below the event-free draw."""
+    table, sites, pw, ar = window
+    frac = 0.5
+    sc = ScenarioEngine([Curtailment(frac=frac, start=2, duration=4)], seed=0)
+    h = simulate_week("heron", table, sites, pw, ar, scenario=sc)
+    avail_w = pw[:, 2:6].sum(axis=0) * frac * 1e6
+    assert (h.power()[2:6] <= avail_w + 1e-6).all()
+    assert h.power()[2:6].sum() < heron_base.power()[2:6].sum()
+
+
+def test_demand_surge_served(window, heron_base):
+    """A predictable surge: plans size up and the extra load is served
+    (healthy-power window, so capacity—not power—is the binding box)."""
+    table, sites, pw, ar = window
+    sc = ScenarioEngine([DemandSurge(magnitude=2.0, start=2, duration=4)],
+                        seed=0)
+    h = simulate_week("heron", table, sites, pw, ar, scenario=sc)
+    base_win = heron_base.goodput()[2:6].sum()
+    assert h.goodput()[2:6].sum() > 1.5 * base_win
+    assert h.drops().sum() <= 0.01 * h.goodput().sum()
+
+
+def test_straggler_onset_haircut_shifts_load(window, heron_base):
+    """Straggler onset inflates one site's observed latency. The
+    router's EWMA crosses the threshold, the graded haircut shifts load
+    off the slow site, and Heron eats measurably less E2E inflation than
+    the health-blind baseline routing the same scenario."""
+    table, sites, pw, ar = window
+    sc = ScenarioEngine([StragglerOnset(site=0, start=1, duration=SLOTS,
+                                        slowdown=6.0)], seed=0)
+    pol = make_policy("heron", table, sites)
+    h_ev = simulate_week(pol, table, sites, pw, ar, scenario=sc)
+    g_ev = simulate_week("greedy_min_latency", table, sites, pw, ar,
+                         scenario=sc)
+    g_base = simulate_week("greedy_min_latency", table, sites, pw, ar)
+    # the EWMA saw the slowdown and the haircut engaged
+    ew = pol._site_latency_ewma
+    assert ew[0] > pol.straggler_threshold * np.median(ew[1:])
+    eff = pol._effective_power(pw[:, -1] * 1e6)
+    assert eff[0] < pw[0, -1] * 1e6
+    # E2E inflation vs each policy's own event-free run: Heron reacts,
+    # the baseline just eats the full load-weighted slowdown
+    infl_h = h_ev.mean_e2e()[2:].mean() / heron_base.mean_e2e()[2:].mean()
+    infl_g = g_ev.mean_e2e()[2:].mean() / g_base.mean_e2e()[2:].mean()
+    assert infl_g > 1.5                    # the event actually bites
+    assert infl_h < 0.8 * infl_g           # ...and Heron absorbs much of it
+
+
+def test_predictor_error_seeded_reproducible(setup):
+    """Predictor-error regimes draw from the engine seed: same seed ->
+    bit-identical week, different seed -> different predictions/plans.
+    (Run in the drought where predictions are binding.)"""
+    table, sites, power, arrivals = setup
+    pw = power[:, 500:504]
+    ar = arrivals[:, 500:504] * 16.0
+    mk = lambda seed: ScenarioEngine([PredictorError(sigma=0.4)], seed=seed)
+    a = simulate_week("heron", table, sites, pw, ar, scenario=mk(7))
+    b = simulate_week("heron", table, sites, pw, ar, scenario=mk(7))
+    c = simulate_week("heron", table, sites, pw, ar, scenario=mk(8))
+    assert _same_week(a, b)
+    assert not _same_week(a, c)
+
+
+def test_site_failure_control_ordering():
+    """Health controls can never invert: a detection lag outliving the
+    outage emits no controls at all, an outage already in progress at
+    tick 0 is detected immediately, and a fully out-of-horizon failure
+    neither perturbs power nor schedules controls."""
+    # detection would land after recovery -> undetected blip, no controls
+    c = ScenarioEngine([SiteFailure(site=0, start=10, duration=2,
+                                    detect_ticks=3)], seed=0).compile(4, 50)
+    assert (c.power_factor[0, 10:12] == 0.0).all()
+    assert not c.controls
+    # outage in progress at window start -> detected at tick 0
+    c = ScenarioEngine([SiteFailure(site=0, start=-2, duration=6)],
+                       seed=0).compile(4, 8)
+    kinds = {ev.tick: ev.kind for evs in c.controls.values() for ev in evs}
+    assert kinds == {0: "site_down", 4: "site_up"}
+    # entirely past the horizon -> nothing happens
+    c = ScenarioEngine([SiteFailure(site=0, start=99, duration=5)],
+                       seed=0).compile(4, 8)
+    assert (c.power_factor == 1.0).all() and not c.controls
+
+
+def test_diurnal_swell_modulates_arrivals():
+    """DiurnalSwell compiles to a sinusoidal arrival factor (pure
+    knowledge+truth modulation, no controls)."""
+    c = ScenarioEngine([DiurnalSwell(amplitude=0.5, period=8)],
+                       seed=0).compile(4, 16)
+    f = c.arrival_factor[0]
+    assert f.max() > 1.4 and f.min() < 0.6 and (f >= 0).all()
+    assert (c.arrival_factor == c.known_arrival_factor).all()
+    assert not c.controls
+
+
+# ------------------------------------------------------------ fine sim
+def test_fine_default_scenario_bit_identical(setup):
+    """An explicit trivial scenario (PowerWiggle with the default
+    parameters) reproduces the historical hardcoded-AR(1) fine sim
+    bit-for-bit — same rng draws, same factors."""
+    table, sites, power, arrivals = setup
+    t = 10
+    plan = plan_l(table, sites, power[:, t] * 1e6, arrivals[:, t],
+                  objective="latency", time_limit=20)
+    kw = dict(seconds=20, planner_s_period=5.0, seed=3)
+    ref = simulate_slot_fine(table, sites, plan, power[:, t] * 1e6,
+                             arrivals[:, t], **kw)
+    new = simulate_slot_fine(table, sites, plan, power[:, t] * 1e6,
+                             arrivals[:, t],
+                             scenario=ScenarioEngine([PowerWiggle()]), **kw)
+    for v in ref.e2e_per_second:
+        assert (ref.e2e_per_second[v] == new.e2e_per_second[v]).all()
+        assert ref.dropped[v] == new.dropped[v]
+
+
+def test_fine_grid_trip_planner_s_absorbs(setup):
+    """Second-granularity grid trip inside a slot: Planner-S re-solves
+    into the cliff and drops at most what blind Planner-L drops."""
+    table, sites, power, arrivals = setup
+    t = 150
+    arr = arrivals[:, t] * 10.0
+    plan = plan_l(table, sites, power[:, t] * 1e6, arr,
+                  objective="latency", time_limit=20)
+    big = int(np.argmax(plan.gpu_used()))
+    sc = ScenarioEngine([PowerWiggle(),
+                         GridTrip(site=big, start=10, duration=20, depth=0.9,
+                                  detect_ticks=0)], seed=0)
+    res = simulate_slot_fine(table, sites, plan, power[:, t] * 1e6, arr,
+                             seconds=30, seed=4, scenario=sc,
+                             variants=("L", "L+S"))
+    total = arr.sum() * 30
+    assert res.dropped["L+S"] <= res.dropped["L"] * 1.2 + 0.01 * total
+    assert res.dropped["L+S"] < 0.6 * total
+
+
+# ------------------------------------------------------------ records
+def test_week_result_json_roundtrip(heron_base):
+    d = heron_base.to_json()
+    back = WeekResult.from_json(d)
+    assert _same_week(heron_base, back)
+    assert all(x.solve_s == y.solve_s
+               for x, y in zip(heron_base.slots, back.slots))
+
+
+def test_week_record_written_and_reloadable(window, tmp_path):
+    table, sites, pw, ar = window
+    path = tmp_path / "run.json"
+    wk = simulate_week("greedy_min_latency", table, sites, pw, ar,
+                       seed=5, record=str(path))
+    assert path.exists()
+    back = load_week_result(str(path))
+    assert back.name == "greedy_min_latency"
+    assert _same_week(wk, back)
+    # directory form: auto-named record keyed on workload + seed
+    wk2 = simulate_week("greedy_min_latency", table, sites, pw, ar,
+                        seed=5, record=str(tmp_path))
+    autos = list(tmp_path.glob(
+        f"week_greedy_min_latency_4sites_{SLOTS}slots_w*_seed5.json"))
+    assert len(autos) == 1
+    assert _same_week(wk2, load_week_result(str(autos[0])))
+    # a different workload window must not collide with the first record
+    wk3 = simulate_week("greedy_min_latency", table, sites, pw, ar * 2.0,
+                        seed=5, record=str(tmp_path))
+    autos2 = set(tmp_path.glob("week_greedy_min_latency_*.json"))
+    assert len(autos2) == 2
+    assert not _same_week(wk2, wk3)
+
+
+def test_fine_result_json_roundtrip(setup):
+    table, sites, power, arrivals = setup
+    t = 10
+    plan = plan_l(table, sites, power[:, t] * 1e6, arrivals[:, t],
+                  objective="latency", time_limit=20)
+    res = simulate_slot_fine(table, sites, plan, power[:, t] * 1e6,
+                             arrivals[:, t], seconds=12, seed=1,
+                             variants=("L", "L+S"))
+    back = FineResult.from_json(res.to_json())
+    for v in res.e2e_per_second:
+        assert (res.e2e_per_second[v] == back.e2e_per_second[v]).all()
+        assert res.dropped[v] == back.dropped[v]
+        assert (res.class_e2e[v] == back.class_e2e[v]).all()
+    assert back.warm_hits == res.warm_hits
