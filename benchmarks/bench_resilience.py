@@ -1,0 +1,146 @@
+"""Resilience — served-token goodput under site failures, with vs without
+cross-site failover (ISSUE 6).
+
+The week/scenario benches score *rate-level* brownout shedding; this one
+scores the serving path itself: live ``ServingEngine``s (smoke-sized GQA
+model) at every site, a seeded ``FaultInjector`` derived from the same
+``ScenarioEngine`` definitions the week sim uses, and the
+``ServingCluster`` failover layer carrying preempted transcripts to
+surviving sites picked by a solved ``HeronRouter`` plan
+(``failover_order``). Two scenarios — mid-slot site failure and a
+full-depth grid trip — each run twice:
+
+  * ``failover``  — drained transcripts resume on surviving sites
+    (bit-identical continuations; recovered tokens are real);
+  * ``blind``     — drained work is lost (the pre-lifecycle engine's
+    behavior). New arrivals redirect in BOTH modes, so the delta is
+    exactly the in-flight recovery path.
+
+Reported per scenario: served-token goodput, recovered / lost /
+duplicated tokens (duplicated MUST be 0), p99 TTFT/E2E, and the goodput
+ratio failover/blind (> 1 is the tentpole's claim).
+
+Writes ``BENCH_resilience.json`` at the repo root under the
+``--update-tracker`` discipline (artifacts/bench/resilience.json always).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, row, save_tracker
+
+SEED = 0
+ARCH = "llama3.2-1b"            # smoke-sized GQA family
+
+
+def _grid_policy(num_sites: int):
+    """A HeronRouter with one solved plan over the paper grid, so
+    ``failover_order`` ranks sites by real WRR weights (not index)."""
+    from repro.core.router import HeronRouter
+    from repro.sim.testbed import paper_grid
+    g = paper_grid("coding", multiplier=60.0)
+    router = HeronRouter(table=g.table, sites=g.sites[:num_sites])
+    router.plan_slot(g.power_mw[:num_sites, 200] * 1e6,
+                     g.arrivals_rps[:, 200])
+    return router
+
+
+def _workload(num_sites: int, n_requests: int, ticks: int, vocab: int):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(SEED)
+    out = []
+    span = max(ticks // 2, 1)
+    for rid in range(n_requests):
+        prompt = rng.integers(1, vocab, size=int(rng.integers(4, 9)))
+        out.append((rid % span, rid % num_sites,
+                    Request(rid=rid, prompt=prompt.astype(np.int32),
+                            max_new_tokens=12,
+                            temperature=0.8 if rid % 2 else 0.0)))
+    return out
+
+
+def _scenarios(num_sites: int, ticks: int) -> dict[str, object]:
+    from repro.sim.scenarios import GridTrip, ScenarioEngine, SiteFailure
+    q = max(ticks // 4, 1)
+    return {
+        # site 0 dies mid-run and comes back: the drained transcripts are
+        # the recoverable work
+        "site_failure_midslot": ScenarioEngine(
+            [SiteFailure(site=0, start=q, duration=2 * q)], seed=SEED),
+        "grid_trip": ScenarioEngine(
+            [GridTrip(site=0, start=q, duration=2 * q, depth=1.0,
+                      detect_ticks=1)], seed=SEED),
+    }
+
+
+def run(fast: bool = True):
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models.api import build
+    from repro.serving.engine import ServingEngine
+    from repro.sim.cluster import simulate_serving_chaos
+    from repro.sim.faults import FaultInjector
+
+    rows = []
+    t = Timer()
+    num_sites = 3
+    ticks = 24 if fast else 48
+    n_requests = 12 if fast else 36
+
+    cfg = smoke_config(ARCH)
+    model = build(cfg)
+    params = model.init_params(jax.random.key(0))
+
+    def make_engine(site, clock):
+        return ServingEngine(model, params, max_batch=4, max_seq=64,
+                             seed=site, clock=clock)
+
+    policy = _grid_policy(num_sites)
+    payload = {"arch": ARCH, "num_sites": num_sites, "ticks": ticks,
+               "n_requests": n_requests, "seed": SEED, "scenarios": {}}
+    with t():
+        for name, engine in _scenarios(num_sites, ticks).items():
+            sc = engine.compile(num_sites, ticks)
+            inj = FaultInjector.from_scenario(sc, seed=SEED)
+            res = {}
+            for mode, failover in (("failover", True), ("blind", False)):
+                r = simulate_serving_chaos(
+                    num_sites, make_engine,
+                    _workload(num_sites, n_requests, ticks, cfg.vocab_size),
+                    inj, name=f"{name}_{mode}",
+                    policy=policy if failover else None,
+                    failover=failover, ticks=ticks)
+                res[mode] = r.to_json()
+            res["goodput_ratio"] = (
+                res["failover"]["served_tokens"]
+                / max(res["blind"]["served_tokens"], 1))
+            payload["scenarios"][name] = res
+    us_total = t.us
+
+    for name, res in payload["scenarios"].items():
+        f, b = res["failover"], res["blind"]
+        rows.append(row(
+            f"resilience_{name}", us_total / (2 * len(payload["scenarios"])),
+            f"served {f['served_tokens']} vs blind {b['served_tokens']} "
+            f"tok (x{res['goodput_ratio']:.2f}), recovered "
+            f"{f['recovered_tokens']}, dup {f['duplicated_tokens']}, "
+            f"p99 e2e {f['p99_e2e']:.1f}s vs {b['p99_e2e']:.1f}s"))
+    save_tracker("resilience", payload)
+    return rows
+
+
+def main():
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    common.emit(run(fast=not args.full))
+
+
+if __name__ == "__main__":
+    main()

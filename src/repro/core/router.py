@@ -30,6 +30,26 @@ the Configurator's re-shard freeze clock ticks at slot cadence (its
 freeze windows bind Planner-S whenever ``plan_fine`` runs) — rather than
 re-implementing the planning loop; registered under the policy names
 ``"heron"`` (min-latency) and ``"heron_min_power"``.
+
+Failover contract
+-----------------
+Site health events (``site_down`` / full-depth ``grid_trip``) do two
+things: the planner stops assigning the site (``_effective_power`` zeroes
+it), and ``failover_order(site)`` tells the serving layer where the dying
+site's *in-flight* work should land — surviving sites ranked by their
+aggregate WRR weight under the current plan, i.e. the same dispatch-path
+view of spare capacity the scheduler routes new work by. The caller
+(``sim.cluster.ServingCluster``) drains the dying site's engine into
+transcript snapshots and re-admits them sticky-first down this order,
+spending a per-request retry budget with ``serving.engine.retry_backoff``
+between attempts; a request that exhausts the budget is a permanent
+failure and counts against goodput. Policies without ``failover_order``
+get index-order failover — the contract is the *ordering*, preemption
+safety itself lives in the engine's keyed sampling streams.
+
+Straggler knobs (``straggler_alpha`` / ``straggler_threshold`` /
+``straggler_min_haircut``) are constructor parameters — see
+``_effective_power`` for the graded-haircut calibration they control.
 """
 from __future__ import annotations
 
@@ -190,14 +210,54 @@ class HeronRouter:
         self.observe_latencies(mask, np.asarray(latency, dtype=float))
 
     def on_event(self, event) -> None:
-        """Consume a ScenarioEngine control event (health signals)."""
+        """Consume a ScenarioEngine control event (health signals).
+
+        ``site_down``/``site_up`` are binary site-health edges. A
+        ``grid_trip`` carries the trip depth in ``value`` (fraction of
+        power lost): a full trip (~1.0) means the site is dark and is
+        treated as down; a partial trip is a brownout the planner already
+        absorbs through the power forecast, so the site stays routable.
+        ``grid_restored`` clears a full trip.
+        """
         kind = getattr(event, "kind", None)
         if kind == "site_down":
             self.mark_site_down(event.site)
         elif kind == "site_up":
             self.mark_site_up(event.site)
+        elif kind == "grid_trip":
+            if getattr(event, "value", 1.0) >= 0.999:
+                self.mark_site_down(event.site)
+        elif kind == "grid_restored":
+            self.mark_site_up(event.site)
         # curtailment notices: the planner already sees capped power via
         # the (announced) forecast — nothing extra to freeze here.
+
+    # ---------------- failover ----------------
+    def failover_order(self, site: int) -> list[int]:
+        """Preferred landing order for work drained off a dying ``site``.
+
+        The failover contract (honored by ``sim.cluster.ServingCluster``):
+        when a site dies, its preempted transcripts are re-routed to the
+        surviving sites in this order — sticky (first choice absorbs until
+        it rejects), with the caller applying the per-request retry budget
+        and ``serving.engine.retry_backoff`` between attempts.
+
+        Ranking reuses the existing dispatch path's view of the world:
+        surviving sites ordered by their aggregate WRR weight under the
+        current plan (most provisioned spare serving capacity first), so
+        failover lands where the planner already wanted load. Falls back
+        to alive-sites-by-index when no plan has been solved yet.
+        """
+        alive = [s for s in range(len(self.sites))
+                 if self._site_alive[s] and s != site]
+        plan = self._plan_s or self._plan_l
+        if plan is None:
+            return alive
+        agg = np.zeros(len(self.sites))
+        for rows in plan.wrr_weights().values():
+            for s, _row, w in rows:
+                agg[s] += w
+        return sorted(alive, key=lambda s: (-agg[s], s))
 
     # ---------------- dispatch ----------------
     def dispatch(self, arrivals_rps: np.ndarray) -> DispatchResult:

@@ -51,9 +51,49 @@ one batched decode.
 Cache insertion is family-agnostic: every cache leaf is [B]-batched at
 axis 0 (1-D leaves like ``pos``) or axis 1 (stacked [L, B, ...] leaves),
 so one ``dynamic_update_slice`` rule covers GQA/MLA/SSM/hybrid/enc-dec.
+
+Request lifecycle (fault tolerance)
+-----------------------------------
+A request moves through::
+
+    queued --admit--> admitted/live --finish--> completed
+       |                  |   |
+       | (watermark /     |   +--deadline--> timed_out
+       |  oversize /      +--preempt--> snapshot --resume--> queued (again)
+       |  deadline)                          |
+       +--> rejected / timed_out             +--(budget spent)--> failed
+
+Heron's premise is that sites *lose power mid-decode*. ``preempt(slots)``
+snapshots each in-flight request's full transcript (prompt + generated
+tokens) into a ``checkpoint.store.TranscriptSnapshot`` and frees the
+slot; ``drain()`` is the site-death path (every live slot plus the
+waiting queue). ``resume(snapshot)`` re-admits the transcript — the
+whole prompt+generated prefix replays through the admission pipeline's
+prefill-from-cache chunks, and sampling continues at token index
+``len(tokens)``. Because every draw is keyed by (seed, rid, token-index)
+and the snapshot carries the seed that keyed the stream, a preempted-
+and-resumed request's token stream is **bit-identical** to the
+uninterrupted run — on any engine serving the same model, regardless of
+that engine's own seed. That identity is this module's pinned
+correctness anchor (tests/test_faults.py), and it is also what makes
+cross-site failover accounting honest: recovered tokens are real tokens
+the user would have received anyway, never a divergent re-generation.
+
+Backpressure and brownout: ``queue_watermark`` rejects new submissions
+beyond a queue depth (fail fast under overload); ``set_brownout(frac)``
+enters power-brownout mode — admissions shed their ``max_new_tokens``
+to ``ceil(frac * requested)`` (graceful degradation instead of drops)
+and the per-step admission token budget scales by ``frac``. Requests
+may carry a ``deadline_s`` (absolute, engine clock) after which they
+time out whether queued or live, and a ``not_before_s`` backoff gate
+(see ``retry_backoff``) so failover retries don't thundering-herd a
+surviving site. ``EngineMetrics`` keeps the watchdog ledger: lost vs
+recovered vs duplicated tokens, preemptions, resumes, timeouts, shed
+tokens — ``reconcile()`` checks the books balance.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -63,18 +103,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.store import TranscriptSnapshot
 from repro.configs.base import ModelConfig
 from repro.models.api import Model
-from repro.serving.sampling import fold_keys, sample_batch
+from repro.serving.sampling import fold_idx, fold_keys, sample_batch
+
+
+def retry_backoff(attempts: int, *, base: float = 0.05,
+                  cap: float = 2.0) -> float:
+    """Capped exponential backoff delay before retry ``attempts`` (1-based):
+    ``min(base * 2**(attempts-1), cap)``. Deterministic (no jitter) so
+    chaos runs replay exactly; the per-request sampling keys make jitter
+    unnecessary for correctness."""
+    return min(base * (2.0 ** max(attempts - 1, 0)), cap)
 
 
 @dataclass
 class Request:
     rid: int
     prompt: np.ndarray                  # [S] int32 token ids
-    max_new_tokens: int
+    max_new_tokens: int                 # TOTAL tokens (incl. resumed prefix)
     arrival_s: float = 0.0
     temperature: float = 0.0
+    # fault-tolerance lifecycle
+    seed: Optional[int] = None          # sampling-seed override; a resumed
+    #                                     request carries its origin seed so
+    #                                     its stream survives engine changes
+    deadline_s: Optional[float] = None  # absolute deadline (engine clock)
+    not_before_s: float = 0.0           # backoff gate for (re-)admission
+    attempts: int = 0                   # admission/failover attempts so far
+    resumed_from: int = 0               # tokens carried in from a snapshot
     # filled by the engine
     tokens: list = field(default_factory=list)
     prefill_done_s: Optional[float] = None
@@ -141,9 +199,21 @@ def _pct(xs, q):
 class EngineMetrics:
     completed: list
     rejected: list = field(default_factory=list)
+    timed_out: list = field(default_factory=list)
     steps: int = 0
     prefills: int = 0          # requests admitted (one prefill each, logically)
     prefill_calls: int = 0     # compiled model dispatches spent on admission
+    # watchdog ledger (preempt/resume fault tolerance)
+    submitted: int = 0         # requests accepted into the queue
+    preemptions: int = 0       # live slots snapshotted + freed
+    evicted: int = 0           # snapshots handed out (preempted + drained)
+    resumed: int = 0           # snapshots re-admitted on this engine
+    recovered_tokens: int = 0  # tokens carried into a resume (not re-sampled)
+    lost_tokens: int = 0       # generated tokens discarded (timeout/failure)
+    duplicated_tokens: int = 0 # tokens re-emitted past a delivery high-water
+    #                            mark — MUST stay 0; nonzero means a request
+    #                            was resumed behind its own stream
+    shed_tokens: int = 0       # max_new_tokens haircut under brownout
 
     def summary(self) -> dict:
         ttfts = [r.ttft for r in self.completed if r.ttft is not None]
@@ -153,6 +223,15 @@ class EngineMetrics:
         out = {"num_completed": len(self.completed), "steps": self.steps,
                "prefills": self.prefills, "prefill_calls": self.prefill_calls,
                "rejected": len(self.rejected),
+               "timed_out": len(self.timed_out),
+               "submitted": self.submitted,
+               "preemptions": self.preemptions,
+               "resumed": self.resumed,
+               "served_tokens": sum(len(r.tokens) for r in self.completed),
+               "recovered_tokens": self.recovered_tokens,
+               "lost_tokens": self.lost_tokens,
+               "duplicated_tokens": self.duplicated_tokens,
+               "shed_tokens": self.shed_tokens,
                "mean_ttft": f(ttfts), "mean_tbt": f(tbts), "mean_e2e": f(e2es)}
         # tail percentiles: what the goodput accounting and the serving
         # bench consume — burst admission shows up in p99, not the mean
@@ -170,12 +249,16 @@ class ServingEngine:
     tail). Token streams are bit-identical between the two.
     ``admit_token_budget``: max prompt tokens admitted per step (None =
     unlimited); bounds TBT inflation for live slots under bursts.
+    ``queue_watermark``: max waiting-queue depth before ``submit`` rejects
+    (None = unbounded) — the fail-fast half of backpressure; the
+    shed-to-shorter half is ``set_brownout``.
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, eos_token: int = -1, seed: int = 0,
                  clock=None, admit_mode: str = "batched",
-                 admit_token_budget: Optional[int] = None):
+                 admit_token_budget: Optional[int] = None,
+                 queue_watermark: Optional[int] = None):
         if admit_mode not in ("batched", "serial"):
             raise ValueError(f"admit_mode {admit_mode!r}")
         self.model = model
@@ -186,14 +269,25 @@ class ServingEngine:
         self.eos = eos_token
         self.admit_mode = admit_mode
         self.admit_token_budget = admit_token_budget
+        self.queue_watermark = queue_watermark
+        self.seed = seed
+        self.brownout = 1.0
         self._base_key = jax.random.key(seed)
         self._clock = clock or time.perf_counter
+        self._has_deadlines = False
 
         from repro.models import transformer as T
         self.cache = T.make_decode_cache(self.cfg, max_batch, max_seq)
         self.active: list[Optional[Request]] = [None] * max_batch
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
         self.new_counts = [0] * max_batch
+        # per-slot request base keys: fold_in(key(seed), rid), set at
+        # admission; step() folds the token index on top (fold_idx), which
+        # is bitwise fold_keys(base, rid, idx) — but lets a resumed request
+        # carry its ORIGIN seed onto this engine (cross-engine identity)
+        self._slot_keys = fold_keys(self._base_key,
+                                    jnp.zeros((max_batch,), jnp.int32),
+                                    jnp.zeros((max_batch,), jnp.int32))
         self.waiting: deque[Request] = deque()
         self.metrics = EngineMetrics(completed=[])
         self._decode = jax.jit(model.decode_fn)
@@ -204,8 +298,38 @@ class ServingEngine:
         self._b1_cache = None
 
     # --------------------------------------------------------------- admit
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request. Returns False (and records a rejection) when
+        the queue is past ``queue_watermark`` — backpressure fails fast
+        instead of letting deadlines rot in an unbounded queue."""
+        self.metrics.submitted += 1
+        if (self.queue_watermark is not None
+                and len(self.waiting) >= self.queue_watermark):
+            req.finish_s = self._clock()
+            self.metrics.rejected.append(req)
+            return False
+        if req.deadline_s is not None:
+            self._has_deadlines = True
         self.waiting.append(req)
+        return True
+
+    def _request_base_key(self, req: Request):
+        """fold_in(key(seed), rid) — the request's stream base. A resumed
+        request's carried ``seed`` overrides the engine seed, so the
+        stream it continues is the one its origin engine started."""
+        base = (self._base_key if req.seed is None
+                else jax.random.key(req.seed))
+        return jax.random.fold_in(base, req.rid)
+
+    @staticmethod
+    def _effective_prompt(req: Request) -> np.ndarray:
+        """What admission must prefill: the prompt plus every token already
+        generated before a preemption — replaying the transcript rebuilds
+        the decode cache exactly as the uninterrupted run had it."""
+        if not req.tokens:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.tokens, np.int32)])
 
     def _masked_extend(self, params, tokens, mask, cache):
         """One extend chunk over the full engine cache; rows with
@@ -248,69 +372,124 @@ class ServingEngine:
         if not items:
             return
         rows = jnp.asarray([row for _, _, row in items], jnp.int32)
-        rids = jnp.asarray([req.rid for _, req, _ in items], jnp.int32)
+        slot_arr = jnp.asarray([slot for slot, _, _ in items], jnp.int32)
+        idxs = jnp.asarray([len(req.tokens) for _, req, _ in items],
+                           jnp.int32)
         temps = jnp.asarray([req.temperature for _, req, _ in items],
                             jnp.float32)
-        keys = fold_keys(self._base_key, rids, jnp.zeros_like(rids))
+        # slot base keys were pinned at admission (engine seed or the
+        # request's carried seed); the token index is len(tokens) — 0 for
+        # a fresh request, the resume point for a replayed transcript —
+        # so a resumed stream continues exactly where it left off
+        keys = fold_idx(self._slot_keys[slot_arr], idxs)
         toks = np.asarray(sample_batch(logits[rows], keys, temps))
         now = self._clock()
         live_slots, live_toks = [], []
         for j, (slot, req, _) in enumerate(items):
             tok = int(toks[j])
             req.tokens.append(tok)
-            req.prefill_done_s = now
+            if req.prefill_done_s is None:
+                # a resumed request keeps its ORIGINAL prefill time: TTFT
+                # measures when the user first saw a token, not the replay
+                req.prefill_done_s = now
             self.metrics.prefills += 1
-            if req.max_new_tokens <= 1 or tok == self.eos:
+            if len(req.tokens) >= req.max_new_tokens or tok == self.eos:
                 # complete at admission: the prompt's last logits already
-                # gave the only requested (or an EOS) token — the slot
-                # never goes live, so no unrequested decode step runs
+                # gave the only remaining requested (or an EOS) token —
+                # the slot never goes live, no unrequested decode runs
                 req.finish_s = now
                 self.metrics.completed.append(req)
                 self.release_slot(slot)
                 continue
             self.active[slot] = req
-            self.new_counts[slot] = 1
+            self.new_counts[slot] = len(req.tokens)
             live_slots.append(slot)
             live_toks.append(tok)
         if live_slots:
             self.last_token = self.last_token.at[jnp.asarray(live_slots)].set(
                 jnp.asarray(live_toks, jnp.int32))
 
+    def _sweep_waiting_deadlines(self, now: float) -> None:
+        """Expire queued requests whose absolute deadline has passed —
+        before admission, so a dead request never burns prefill compute."""
+        keep: deque[Request] = deque()
+        while self.waiting:
+            req = self.waiting.popleft()
+            if req.deadline_s is not None and now >= req.deadline_s:
+                req.finish_s = now
+                self.metrics.timed_out.append(req)
+                self.metrics.lost_tokens += len(req.tokens)
+            else:
+                keep.append(req)
+        self.waiting = keep
+
     def _admit(self) -> None:
         if not self.waiting:
             return
+        now = self._clock()
+        if self._has_deadlines:
+            self._sweep_waiting_deadlines(now)
         free = [i for i, r in enumerate(self.active) if r is None]
         admits: list[tuple[int, Request]] = []
+        held: list[Request] = []       # backoff-gated, keep queue order
         spent = 0
+        budget = self.admit_token_budget
+        if budget is not None and self.brownout < 1.0:
+            # brownout scales how much prefill work one step may take on
+            budget = max(1, int(budget * self.brownout))
         # VLM rows spend cache positions on the patch prefix too (enc-dec
         # frames live in the separate encoder cache, so they don't)
         prefix = (self.cfg.num_prefix_embeddings
                   if self.cfg.family == "vlm" else 0)
         while self.waiting and free:
             req = self.waiting[0]
-            S = len(req.prompt)
-            if req.max_new_tokens <= 0:
-                # degenerate but legal: nothing to generate — complete
-                # with zero tokens, no slot, no prefill
+            if req.not_before_s > now:
+                # retry backoff: not eligible yet — hold WITHOUT blocking
+                # the requests behind it (no head-of-line starvation)
+                held.append(self.waiting.popleft())
+                continue
+            # effective prompt length: a resumed transcript replays
+            # prompt + generated prefix through the prefill path
+            S = len(req.prompt) + len(req.tokens)
+            if req.max_new_tokens <= len(req.tokens):
+                # degenerate but legal: nothing (left) to generate —
+                # complete as-is, no slot, no prefill
                 self.waiting.popleft()
                 req.finish_s = self._clock()
                 self.metrics.completed.append(req)
                 continue
-            if S == 0 or prefix + S + req.max_new_tokens - 1 > self.max_seq:
+            if (len(req.prompt) == 0 or
+                    prefix + len(req.prompt) + req.max_new_tokens - 1
+                    > self.max_seq):
                 # can never fit this engine's cache: reject without
                 # consuming a slot (burst-proof: the queue keeps draining)
                 self.waiting.popleft()
                 req.finish_s = self._clock()
+                self.metrics.lost_tokens += len(req.tokens)
                 self.metrics.rejected.append(req)
                 continue
-            if (admits and self.admit_token_budget is not None
-                    and spent + S > self.admit_token_budget):
+            if (admits and budget is not None and spent + S > budget):
                 break  # budget spent; the rest waits for the next step
             self.waiting.popleft()
+            if self.brownout < 1.0 and not req.tokens:
+                # graceful degradation: fresh admissions under brownout
+                # shed max_new_tokens instead of being dropped (resumed
+                # transcripts keep their contract — shedding them would
+                # break the bit-identity anchor)
+                want = req.max_new_tokens
+                shed_to = max(1, int(math.ceil(want * self.brownout)))
+                if shed_to < want:
+                    self.metrics.shed_tokens += want - shed_to
+                    req.max_new_tokens = shed_to
             admits.append((free.pop(0), req))
             spent += S
+        if held:
+            self.waiting.extendleft(reversed(held))
         if not admits:
             return
+        for slot, req in admits:
+            self._slot_keys = self._slot_keys.at[slot].set(
+                self._request_base_key(req))
         try:
             if self.admit_mode == "serial":
                 for slot, req in admits:
@@ -325,12 +504,16 @@ class ServingEngine:
             # that one request as rejected; batched failures cannot be
             # attributed to a single request, so everything is retried.)
             # Membership is by identity: Request.__eq__ would compare
-            # ndarray prompts and raise.
+            # ndarray prompts and raise. A resumed request keeps its
+            # carried transcript prefix — only tokens sampled during the
+            # failed round are rolled back.
             requeue = []
             for slot, req in admits:
-                if (req.prefill_done_s is None
-                        and all(r is not req for r in self.metrics.rejected)):
-                    req.tokens.clear()
+                settled = (self.active[slot] is req
+                           or any(r is req for r in self.metrics.completed)
+                           or any(r is req for r in self.metrics.rejected))
+                if not settled:
+                    del req.tokens[req.resumed_from:]
                     self.release_slot(slot)
                     requeue.append(req)
             self.waiting.extendleft(reversed(requeue))
@@ -338,10 +521,11 @@ class ServingEngine:
 
     def _admit_serial(self, slot: int, req: Request) -> None:
         """Reference path: pow2-prefix prefill + serial B=1 decode tail."""
-        S = len(req.prompt)
+        full = self._effective_prompt(req)
+        S = len(full)
         bucket = 1 << (S.bit_length() - 1)
         logits, req_cache = self._prefill(
-            self.params, self._prefill_inputs(req.prompt[None, :bucket]))
+            self.params, self._prefill_inputs(full[None, :bucket]))
         self.metrics.prefill_calls += 1
         if bucket < S:
             # continue the prompt token-by-token at B=1: decode(prefill
@@ -351,7 +535,7 @@ class ServingEngine:
                 from repro.models import transformer as T
                 self._b1_cache = T.make_decode_cache(self.cfg, 1, self.max_seq)
             req_cache = insert_cache(self._b1_cache, req_cache, 0)
-            for tok in req.prompt[bucket:]:
+            for tok in full[bucket:]:
                 logits, req_cache = self._decode(
                     self.params, {"token": jnp.asarray([tok], jnp.int32)},
                     req_cache)
@@ -366,28 +550,35 @@ class ServingEngine:
     def _reject_failed(self, slot: int, req: Request) -> None:
         """Admission error path: release the slot and record the failing
         request as rejected, keeping the engine's accounting consistent
-        (completed + rejected + waiting + active == submitted)."""
+        (completed + rejected + waiting + active == submitted). A resumed
+        request keeps its carried transcript prefix (and original TTFT)
+        so a failover layer can still retry it elsewhere."""
         self.release_slot(slot)
-        req.tokens.clear()
-        req.prefill_done_s = None
+        self.metrics.lost_tokens += max(0, len(req.tokens) - req.resumed_from)
+        del req.tokens[req.resumed_from:]
+        if req.resumed_from == 0:
+            req.prefill_done_s = None
         req.finish_s = self._clock()
         self.metrics.rejected.append(req)
 
     def _admit_batched(self, admits: list) -> None:
-        """Grouped prefill + shared descending-pow2 extend tails."""
+        """Grouped prefill + shared descending-pow2 extend tails. Operates
+        on the *effective* prompt (prompt + resumed transcript prefix), so
+        a resumed request rides the same pipeline as a fresh one."""
         groups: dict[int, list] = {}
         for slot, req in admits:
-            bucket = 1 << (len(req.prompt).bit_length() - 1)
-            groups.setdefault(bucket, []).append((slot, req))
-        pend: dict[int, list] = {}          # slot -> [req, consumed]
+            full = self._effective_prompt(req)
+            bucket = 1 << (len(full).bit_length() - 1)
+            groups.setdefault(bucket, []).append((slot, req, full))
+        pend: dict[int, list] = {}          # slot -> [req, full, consumed]
         for bucket in sorted(groups, reverse=True):
             group = groups[bucket]
             kp = 1 << (len(group) - 1).bit_length()   # pow2-padded batch
             toks = np.zeros((kp, bucket), np.int32)
             # padding rows scatter to slot id max_batch -> dropped
             slots = np.full((kp,), self.max_batch, np.int32)
-            for r, (slot, req) in enumerate(group):
-                toks[r] = req.prompt[:bucket]
+            for r, (slot, req, full) in enumerate(group):
+                toks[r] = full[:bucket]
                 slots[r] = slot
             logits, gcache = self._prefill(self.params,
                                            self._prefill_inputs(toks))
@@ -395,23 +586,23 @@ class ServingEngine:
             self.cache = insert_cache_rows(self.cache, gcache,
                                            jnp.asarray(slots))
             fins = []
-            for r, (slot, req) in enumerate(group):
-                if bucket == len(req.prompt):
+            for r, (slot, req, full) in enumerate(group):
+                if bucket == len(full):
                     fins.append((slot, req, r))
                 else:
-                    pend[slot] = [req, bucket]
+                    pend[slot] = [req, full, bucket]
             self._finalize_admits(fins, logits)
         while pend:
             # chunk = the largest remaining binary digit across pending
             # rows; every row with that bit set advances this round
-            C = max(1 << ((len(req.prompt) - cons).bit_length() - 1)
-                    for req, cons in pend.values())
+            C = max(1 << ((len(full) - cons).bit_length() - 1)
+                    for req, full, cons in pend.values())
             toks = np.zeros((self.max_batch, C), np.int32)
             mask = np.zeros((self.max_batch,), bool)
             takers = []
-            for slot, (req, cons) in pend.items():
-                if (len(req.prompt) - cons) & C:
-                    toks[slot] = req.prompt[cons:cons + C]
+            for slot, (req, full, cons) in pend.items():
+                if (len(full) - cons) & C:
+                    toks[slot] = full[cons:cons + C]
                     mask[slot] = True
                     takers.append(slot)
             logits, self.cache = self._extend(
@@ -419,28 +610,127 @@ class ServingEngine:
             self.metrics.prefill_calls += 1
             fins = []
             for slot in takers:
-                req, cons = pend[slot]
+                req, full, cons = pend[slot]
                 cons += C
-                if cons == len(req.prompt):
+                if cons == len(full):
                     del pend[slot]
                     fins.append((slot, req, slot))
                 else:
-                    pend[slot][1] = cons
+                    pend[slot][2] = cons
             self._finalize_admits(fins, logits)
 
     # --------------------------------------------------------------- slots
     def release_slot(self, slot: int) -> None:
         """Family-agnostic slot retirement: clear the slot's bookkeeping
         and zero its cache position, so every family's valid-length reads
-        mask out the stale cache rows. Used on sequence finish and by
-        admission error paths."""
+        mask out the stale cache rows. Used on sequence finish, preemption
+        and admission error paths. Idempotent — releasing a free (or
+        never-admitted) slot is a no-op; an out-of-range slot id raises."""
+        if not 0 <= slot < self.max_batch:
+            raise ValueError(
+                f"slot {slot} out of range [0, {self.max_batch})")
         self.active[slot] = None
         self.new_counts[slot] = 0
         self.cache["pos"] = self.cache["pos"].at[slot].set(0)
 
+    # ----------------------------------------------------- preempt / resume
+    def preempt(self, slots: Optional[list] = None) -> list[TranscriptSnapshot]:
+        """Snapshot in-flight requests and free their cache slots.
+
+        ``slots=None`` preempts every live slot (the power-drop path).
+        Each snapshot carries the full transcript and the seed that keys
+        the request's sampling stream, so ``resume`` — here or on any
+        other engine serving the same model — continues it bit-identically.
+        """
+        if slots is None:
+            slots = [i for i, r in enumerate(self.active) if r is not None]
+        snaps = []
+        for slot in slots:
+            req = self.active[slot]
+            if req is None:
+                continue
+            seed = req.seed if req.seed is not None else self.seed
+            snaps.append(TranscriptSnapshot.from_request(req, seed=seed))
+            self.metrics.preemptions += 1
+            self.metrics.evicted += 1
+            self.release_slot(slot)
+        return snaps
+
+    def drain(self) -> list[TranscriptSnapshot]:
+        """Site-death path: preempt every live slot AND evict the waiting
+        queue — everything this engine owes comes back as snapshots for a
+        failover layer to carry to surviving sites."""
+        snaps = self.preempt()
+        while self.waiting:
+            req = self.waiting.popleft()
+            seed = req.seed if req.seed is not None else self.seed
+            snaps.append(TranscriptSnapshot.from_request(req, seed=seed))
+            self.metrics.evicted += 1
+        return snaps
+
+    def resume(self, snap: TranscriptSnapshot, *,
+               not_before_s: float = 0.0) -> Optional[Request]:
+        """Re-admit a preempted transcript. The carried seed keeps the
+        stream's keys; the carried ``prefill_done_s`` keeps the original
+        TTFT honest. Returns the queued Request, or None when the
+        watermark rejected it (the caller keeps the snapshot and may retry
+        elsewhere)."""
+        req = Request(rid=snap.rid,
+                      prompt=np.asarray(snap.prompt, np.int32),
+                      max_new_tokens=snap.max_new_tokens,
+                      arrival_s=snap.arrival_s,
+                      temperature=snap.temperature,
+                      seed=snap.seed,
+                      deadline_s=snap.deadline_s,
+                      not_before_s=not_before_s,
+                      attempts=snap.attempts,
+                      resumed_from=len(snap.tokens),
+                      tokens=list(snap.tokens),
+                      prefill_done_s=snap.prefill_done_s)
+        if not self.submit(req):
+            return None
+        self.metrics.resumed += 1
+        self.metrics.recovered_tokens += len(snap.tokens)
+        return req
+
+    def set_brownout(self, frac: float) -> None:
+        """Enter (or leave, frac=1.0) brownout: fresh admissions shed
+        ``max_new_tokens`` to ``ceil(frac * requested)`` and the per-step
+        admission token budget scales by ``frac`` — graceful degradation
+        under a power drop instead of wholesale drops."""
+        self.brownout = float(min(max(frac, 0.0), 1.0))
+
+    def reconcile(self) -> dict:
+        """Watchdog: every submitted request must be in exactly one of
+        completed / rejected / timed_out / waiting / active / evicted
+        (handed out as a snapshot). Returns the books and a ``balanced``
+        flag — an unbalanced ledger means the engine leaked a request."""
+        m = self.metrics
+        books = {"submitted": m.submitted,
+                 "completed": len(m.completed),
+                 "rejected": len(m.rejected),
+                 "timed_out": len(m.timed_out),
+                 "waiting": len(self.waiting),
+                 "active": sum(r is not None for r in self.active),
+                 "evicted": m.evicted}
+        books["balanced"] = (
+            books["submitted"] == books["completed"] + books["rejected"]
+            + books["timed_out"] + books["waiting"] + books["active"]
+            + books["evicted"])
+        return books
+
     # --------------------------------------------------------------- step
     def step(self) -> int:
         """Admit waiting requests, run one batched decode. Returns #active."""
+        if self._has_deadlines:
+            now = self._clock()
+            for i, r in enumerate(self.active):
+                if (r is not None and r.deadline_s is not None
+                        and now >= r.deadline_s):
+                    r.finish_s = now
+                    self.metrics.timed_out.append(r)
+                    self.metrics.lost_tokens += len(r.tokens)
+                    self.release_slot(i)
         self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
@@ -448,15 +738,15 @@ class ServingEngine:
         logits, self.cache = self._decode(
             self.params, {"token": self.last_token}, self.cache)
         temps = np.zeros(self.max_batch, np.float32)
-        rids = np.zeros(self.max_batch, np.int32)
         idxs = np.zeros(self.max_batch, np.int32)
         for i in live:
             temps[i] = self.active[i].temperature
-            rids[i] = self.active[i].rid
             idxs[i] = len(self.active[i].tokens)
         # per-(request, token-index) keys + per-row temperatures: a row's
-        # draw is independent of its batch-mates and its admission order
-        keys = fold_keys(self._base_key, jnp.asarray(rids), jnp.asarray(idxs))
+        # draw is independent of its batch-mates and its admission order.
+        # Slot base keys were pinned at admission (fold_idx on top equals
+        # fold_keys bitwise), so a resumed request keeps its origin stream
+        keys = fold_idx(self._slot_keys, jnp.asarray(idxs))
         toks = sample_batch(logits, keys, jnp.asarray(temps))
         toks_np = np.asarray(toks)
         self.last_token = toks

@@ -55,6 +55,22 @@ def fold_keys(base_key, rids, indices):
     return jax.vmap(one)(rids, indices)
 
 
+@jax.jit
+def fold_idx(keys, indices):
+    """Fold per-row token indices into per-row *request base keys*.
+
+    ``keys[r]`` is a request's base key — ``fold_in(key(seed), rid)``,
+    where ``seed`` is the engine seed or the request's own carried seed
+    (``Request.seed``, set when a preempted transcript is resumed on a
+    different engine). ``fold_idx(keys, idx)`` then equals
+    ``fold_keys(base, rids, idx)`` row-for-row, so splitting the fold in
+    two (rid at admission, idx per step) is bitwise the same scheme —
+    which is what lets a request's stream survive a cross-engine
+    failover unchanged.
+    """
+    return jax.vmap(jax.random.fold_in)(keys, indices)
+
+
 @functools.partial(jax.jit, static_argnames=("top_k",))
 def sample_batch(logits, keys, temperature, top_k: int = 0):
     """logits: [B, V]; keys: [B] typed PRNG keys; temperature: [B] or scalar.

@@ -76,6 +76,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Literal, Optional, Union
 
@@ -136,6 +137,9 @@ class SlotMetrics:
 class WeekResult:
     name: str
     slots: list[SlotMetrics]
+    # fault/chaos counters attached by chaos-aware drivers (empty for a
+    # plain week run) — round-trips through to_json/from_json
+    faults: dict = field(default_factory=dict)
 
     def goodput(self) -> np.ndarray:
         return np.array([s.total_served for s in self.slots])
@@ -153,13 +157,17 @@ class WeekResult:
         return np.array([s.power_w for s in self.slots])
 
     def to_json(self) -> dict:
-        return {"kind": "week", "name": self.name,
-                "slots": [s.to_json() for s in self.slots]}
+        out = {"kind": "week", "name": self.name,
+               "slots": [s.to_json() for s in self.slots]}
+        if self.faults:
+            out["faults"] = dict(self.faults)
+        return out
 
     @classmethod
     def from_json(cls, d: dict) -> "WeekResult":
         return cls(name=d["name"],
-                   slots=[SlotMetrics.from_json(s) for s in d["slots"]])
+                   slots=[SlotMetrics.from_json(s) for s in d["slots"]],
+                   faults=dict(d.get("faults", {})))
 
 
 def goodput_improvement(heron: WeekResult, baseline: WeekResult) -> np.ndarray:
@@ -394,6 +402,8 @@ class FineResult:
     class_e2e: dict[str, np.ndarray]            # variant -> [9] mean e2e
     planner_s_solves: list[float] = field(default_factory=list)
     planner_s_status: list[str] = field(default_factory=list)
+    # fault/chaos counters (empty for an undisturbed run)
+    faults: dict = field(default_factory=dict)
 
     @property
     def warm_hits(self) -> int:
@@ -401,14 +411,17 @@ class FineResult:
         return sum(1 for s in self.planner_s_status if s == "warm")
 
     def to_json(self) -> dict:
-        return {"kind": "fine",
-                "e2e_per_second": {k: v.tolist()
-                                   for k, v in self.e2e_per_second.items()},
-                "dropped": {k: float(v) for k, v in self.dropped.items()},
-                "class_e2e": {k: v.tolist()
-                              for k, v in self.class_e2e.items()},
-                "planner_s_solves": [float(s) for s in self.planner_s_solves],
-                "planner_s_status": list(self.planner_s_status)}
+        out = {"kind": "fine",
+               "e2e_per_second": {k: v.tolist()
+                                  for k, v in self.e2e_per_second.items()},
+               "dropped": {k: float(v) for k, v in self.dropped.items()},
+               "class_e2e": {k: v.tolist()
+                             for k, v in self.class_e2e.items()},
+               "planner_s_solves": [float(s) for s in self.planner_s_solves],
+               "planner_s_status": list(self.planner_s_status)}
+        if self.faults:
+            out["faults"] = dict(self.faults)
+        return out
 
     @classmethod
     def from_json(cls, d: dict) -> "FineResult":
@@ -418,7 +431,8 @@ class FineResult:
                    class_e2e={k: np.asarray(v, float)
                               for k, v in d["class_e2e"].items()},
                    planner_s_solves=list(d.get("planner_s_solves", [])),
-                   planner_s_status=list(d.get("planner_s_status", [])))
+                   planner_s_status=list(d.get("planner_s_status", [])),
+                   faults=dict(d.get("faults", {})))
 
 
 def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
@@ -445,6 +459,17 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     parameters. The default (no scenario) path is bit-identical to the
     historical hardcoded AR(1)-only disturbance model.
 
+    Scenarios thread BOTH planes at second granularity: Planner-S plans
+    on the *knowledge* power (``known_power_factor`` — a surprise
+    ``GridTrip`` is invisible to the re-solve until its detection lag
+    elapses) with sites zeroed once the scenario's control stream marks
+    them down (``site_down`` / full-depth ``grid_trip``), while brownout
+    shedding always confronts the plan with *truth* power. Per-site
+    ``latency_factor`` inflates the service component of E2E (not the
+    queueing wait) weighted by where the dispatch actually landed load —
+    so a mid-slot trip shows second-granularity detection dynamics and a
+    straggler site drags exactly the seconds it serves.
+
     The Planner-L GPU grant is pulled once as a columnar ``GpuBudget``
     and each Planner-S re-solve is warm-started from the previous one
     (``warm_start=False`` restores cold solves — the knob
@@ -462,12 +487,30 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
         wig = ar1_wiggle(rng, S, seconds, power_noise)
     pw = power_w_slot[:, None] * power_scale * np.exp(wig)
     lam = np.maximum(arrivals_rps, 0)[:, None]
+    known_pw = pw                   # knowledge plane == truth by default
+    lat_f = None                    # [S, seconds] latency inflation
+    sc = None
     if scenario is not None:
         sc = scenario.compile(S, seconds)
         if not sc.is_trivial:       # trivial scenario keeps the exact
+            known_pw = pw * sc.known_power_factor
             pw = pw * sc.power_factor   # historical arrays (bit-compat)
             lam = lam * sc.arrival_factor
+            if (sc.latency_factor != 1.0).any():
+                lat_f = sc.latency_factor
+        else:
+            sc = None
     arr = rng.poisson(lam, size=(9, seconds)).astype(float)
+
+    def _apply_controls(alive: np.ndarray, tick: int) -> None:
+        """Second-granularity site-health edges for the Planner-S view
+        (mirrors HeronRouter.on_event's health semantics)."""
+        for ev in sc.controls_at(tick):
+            if ev.kind == "site_down" or (
+                    ev.kind == "grid_trip" and ev.value >= 0.999):
+                alive[ev.site] = False
+            elif ev.kind in ("site_up", "grid_restored"):
+                alive[ev.site] = True
 
     results_e2e = {}
     results_drop = {}
@@ -485,12 +528,21 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
         dropped_total = 0.0
         plan = base_plan
         prev_s: Optional[Plan] = None
+        alive = np.ones(S, bool)    # control-stream site health (per variant)
         t = 0
         while t < seconds:
+            if sc is not None:
+                _apply_controls(alive, t)
             if use_s:
                 obs_load = arr[:, max(0, t - 5): t + 1].mean(axis=1)
+                # plan on the KNOWLEDGE plane: what telemetry/forecasts
+                # can see at second t, with control-confirmed dead sites
+                # zeroed — truth hits via shedding below
+                plan_pw = known_pw[:, t]
+                if not alive.all():
+                    plan_pw = plan_pw * alive
                 # plan for a small headroom over observed load
-                p = plan_s(table, sites, pw[:, t], obs_load * 1.1,
+                p = plan_s(table, sites, plan_pw, obs_load * 1.1,
                            gpu_budget, objective=base_plan.objective,
                            warm=prev_s if warm_start else None)
                 if p.status != "empty":
@@ -508,6 +560,10 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
             seg_counts = shed_counts_batch(plan, pw[:, t:t_end])
             gtable = GroupTable.from_plan(plan, active_only=False)
             for tt in range(t, t_end):
+                if sc is not None and tt > t:
+                    # mid-segment control edges update health for the
+                    # NEXT re-solve (detection → next Planner-S pass)
+                    _apply_controls(alive, tt)
                 tbl = gtable.with_counts(seg_counts[:, tt - t])
                 demand = arr[:, tt] + backlog
                 res = dispatcher.dispatch(tbl, demand)
@@ -520,7 +576,16 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
                 drop = res.dropped + overflow
                 dropped_total += float(drop.sum())
                 wait = np.where(cap > 0, backlog / np.maximum(cap, 1e-9), 0.0)
-                e2e_c = res.mean_e2e + wait
+                svc = res.mean_e2e
+                if lat_f is not None and (lat_f[:, tt] != 1.0).any():
+                    # stragglers inflate SERVICE time (not queueing),
+                    # weighted by where this second's load actually went
+                    w_site = res.per_site_load
+                    tot = float(w_site.sum())
+                    if tot > 0:
+                        svc = svc * float(
+                            (w_site * lat_f[:, tt]).sum() / tot)
+                e2e_c = svc + wait
                 m = res.served > 0
                 e2e_series[tt] = (float((e2e_c[m] * res.served[m]).sum()
                                         / res.served[m].sum()) if m.any() else 0.0)
@@ -533,3 +598,340 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
     return FineResult(e2e_per_second=results_e2e, dropped=results_drop,
                       class_e2e=results_cls, planner_s_solves=solves,
                       planner_s_status=statuses)
+
+
+# ------------------------------------------------------------------
+# engine-level chaos: live ServingEngines under a FaultInjector
+# ------------------------------------------------------------------
+def _pctl(xs, q):
+    return float(np.percentile(xs, q)) if xs else 0.0
+
+
+@dataclass
+class ChaosResult:
+    """Outcome of a ``simulate_serving_chaos`` run — the resilience
+    scorecard ``benchmarks/bench_resilience.py`` compares variants on."""
+    name: str
+    ticks: int
+    completed: int
+    failed: int                 # permanent failures (retry budget spent)
+    timed_out: int
+    rejected: int
+    preemptions: int
+    resumes: int
+    served_tokens: int          # unique delivered tokens over completed rids
+    recovered_tokens: int       # tokens carried across preempt->resume
+    lost_tokens: int            # tokens generated but never delivered
+    duplicated_tokens: int      # MUST be 0 — resume behind the stream
+    p50_ttft: float
+    p99_ttft: float
+    p50_e2e: float
+    p99_e2e: float
+    faults: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        d = {k: getattr(self, k) for k in (
+            "name", "ticks", "completed", "failed", "timed_out", "rejected",
+            "preemptions", "resumes", "served_tokens", "recovered_tokens",
+            "lost_tokens", "duplicated_tokens",
+            "p50_ttft", "p99_ttft", "p50_e2e", "p99_e2e")}
+        d["kind"] = "chaos"
+        d["faults"] = dict(self.faults)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ChaosResult":
+        kw = {k: d[k] for k in (
+            "name", "ticks", "completed", "failed", "timed_out", "rejected",
+            "preemptions", "resumes", "served_tokens", "recovered_tokens",
+            "lost_tokens", "duplicated_tokens",
+            "p50_ttft", "p99_ttft", "p50_e2e", "p99_e2e")}
+        return cls(faults=dict(d.get("faults", {})), **kw)
+
+
+class ServingCluster:
+    """Live ``ServingEngine``s at every site + the cross-site failover
+    layer — where the control plane's fault story meets real tokens.
+
+    ``make_engine(site, clock) -> ServingEngine`` builds a site's engine
+    on the cluster's shared *virtual* clock (one tick = ``tick_seconds``),
+    so TTFT/E2E are deterministic simulated seconds, not wall time.
+
+    Failover contract (see ``core.router`` docstring): on a ``kill``
+    fault the dying site's engine is drained into transcript snapshots;
+    with ``failover=True`` each snapshot is re-admitted sticky-first down
+    ``policy.failover_order(site)`` (alive-sites-by-index without a
+    policy), spending a per-snapshot retry budget with
+    ``serving.engine.retry_backoff`` pacing re-attempts; a snapshot that
+    exhausts the budget is a permanent failure. With ``failover=False``
+    (the blind baseline) drained work is simply lost. New arrivals
+    redirect off dead sites in both modes, so a resilience A/B isolates
+    exactly the in-flight recovery path.
+
+    Delivery ledger: per-rid high-water marks of tokens already streamed
+    to the user catch *duplicated* tokens — a resume that restarts behind
+    its own stream re-emits tokens, which the keyed sampling scheme makes
+    impossible by construction; the ledger is the run-time proof.
+    """
+
+    def __init__(self, num_sites: int, make_engine, *, policy=None,
+                 failover: bool = True, retry_budget: int = 3,
+                 tick_seconds: float = 1.0):
+        self.num_sites = num_sites
+        self.policy = policy
+        self.failover = failover
+        self.retry_budget = retry_budget
+        self.tick_seconds = float(tick_seconds)
+        self.now = 0.0
+        self._make_engine = make_engine
+        self.engines = [make_engine(s, self._clock) for s in range(num_sites)]
+        self.alive = np.ones(num_sites, bool)
+        self.read_power = np.ones(num_sites)   # corruptible telemetry
+        self._delayed: set = set()             # sites stalled this tick
+        self._dropping: set = set()            # sites not admitting this tick
+        self._ncons = [0] * num_sites          # completed-harvest cursors
+        self._graveyard: list = []             # metrics of replaced engines
+        self._hwm: dict[int, int] = {}         # rid -> delivered high-water
+        self._done_rids: set = set()
+        self.pending: list = []                # [snap, next_try_s] awaiting slot
+        self.failed: list = []                 # permanently failed snapshots
+        self.completed_ttft: list = []
+        self.completed_e2e: list = []
+        self.duplicated_tokens = 0
+        self.lost_tokens = 0                   # cluster-level (failed snaps)
+        self.fault_counts: dict[str, int] = {}
+
+    def _clock(self) -> float:
+        return self.now
+
+    # ------------------------------------------------------------ routing
+    def _order_from(self, site: int) -> list[int]:
+        """Failover landing order off ``site`` — the policy's view when it
+        has one (``failover_order``), else alive sites by index."""
+        fo = getattr(self.policy, "failover_order", None)
+        if fo is not None:
+            order = [s for s in fo(site)
+                     if s < self.num_sites and self.alive[s]]
+            # policy may not know about every dead/alive edge we've seen
+            rest = [s for s in range(self.num_sites)
+                    if self.alive[s] and s != site and s not in order]
+            return order + rest
+        return [s for s in range(self.num_sites)
+                if self.alive[s] and s != site]
+
+    def submit(self, req, site: int) -> bool:
+        """Submit a fresh request to ``site``, redirecting down the
+        failover order when the site is dead or its watermark rejects."""
+        candidates = ([site] if self.alive[site] else []) \
+            + self._order_from(site)
+        for s in candidates:
+            if self.engines[s] is not None and self.engines[s].submit(req):
+                return True
+        return False
+
+    # ------------------------------------------------------------- faults
+    def apply_fault(self, f) -> None:
+        from repro.sim import faults as F
+        self.fault_counts[f.kind] = self.fault_counts.get(f.kind, 0) + 1
+        if f.kind == F.KILL:
+            self.kill(f.site)
+        elif f.kind == F.RESTORE:
+            self.restore(f.site)
+        elif f.kind == F.DELAY:
+            self._delayed.add(f.site)
+        elif f.kind == F.DROP_ADMISSION:
+            self._dropping.add(f.site)
+        elif f.kind == F.CORRUPT_POWER:
+            self.read_power[f.site] = f.value
+        else:
+            raise ValueError(f"unknown fault kind {f.kind!r}")
+
+    def kill(self, site: int) -> None:
+        """Site loses power mid-decode: drain the engine, hand the
+        transcripts to failover (or lose them, blind mode)."""
+        if not self.alive[site] or self.engines[site] is None:
+            return
+        eng = self.engines[site]
+        self._harvest(site)
+        snaps = eng.drain()
+        self.alive[site] = False
+        if self.policy is not None:
+            from repro.sim.scenarios import ControlEvent
+            self.policy.on_event(ControlEvent(kind="site_down", site=site))
+        self._graveyard.append(eng.metrics)
+        self.engines[site] = None
+        self._ncons[site] = 0
+        if self.failover:
+            for snap in snaps:
+                self._place(snap, from_site=site)
+        else:
+            for snap in snaps:
+                self.lost_tokens += len(snap.tokens)
+                self.failed.append(snap)
+
+    def restore(self, site: int) -> None:
+        if self.alive[site]:
+            return
+        self.engines[site] = self._make_engine(site, self._clock)
+        self.alive[site] = True
+        self.read_power[site] = 1.0
+        if self.policy is not None:
+            from repro.sim.scenarios import ControlEvent
+            self.policy.on_event(ControlEvent(kind="site_up", site=site))
+
+    # ----------------------------------------------------------- failover
+    def _place(self, snap, from_site: int) -> None:
+        """Sticky re-route: first surviving site in the failover order
+        that accepts wins; a snapshot nobody accepts waits out a capped
+        exponential backoff before the next attempt; the retry budget
+        bounds total attempts, after which the request permanently fails
+        (and its generated-but-undelivered tokens count as lost)."""
+        from repro.serving.engine import retry_backoff
+        snap.attempts += 1
+        if snap.attempts > self.retry_budget:
+            self.lost_tokens += len(snap.tokens)
+            self.failed.append(snap)
+            return
+        for s in self._order_from(from_site):
+            eng = self.engines[s]
+            if eng is None:
+                continue
+            # duplicated-token check BEFORE resuming: resuming below the
+            # delivered high-water mark would re-emit tokens
+            hwm = self._hwm.get(snap.rid, 0)
+            req = eng.resume(
+                snap, not_before_s=self.now + retry_backoff(snap.attempts))
+            if req is not None:
+                self.duplicated_tokens += max(0, hwm - len(snap.tokens))
+                return
+        # nowhere to land right now — retry after backoff
+        self.pending.append([snap, self.now + retry_backoff(snap.attempts)])
+
+    def _retry_pending(self) -> None:
+        due = [p for p in self.pending if p[1] <= self.now]
+        if not due:
+            return
+        self.pending = [p for p in self.pending if p[1] > self.now]
+        for snap, _ in due:
+            self._place(snap, from_site=-1)
+
+    # ------------------------------------------------------------ stepping
+    def _harvest(self, site: int) -> None:
+        """Pull newly-completed requests into the delivery ledger."""
+        eng = self.engines[site]
+        if eng is None:
+            return
+        done = eng.metrics.completed
+        for req in done[self._ncons[site]:]:
+            n = len(req.tokens)
+            hwm = self._hwm.get(req.rid, 0)
+            self._hwm[req.rid] = max(hwm, n)
+            self._done_rids.add(req.rid)
+            if req.ttft is not None:
+                self.completed_ttft.append(req.ttft)
+            if req.e2e is not None:
+                self.completed_e2e.append(req.e2e)
+        self._ncons[site] = len(done)
+
+    def step_tick(self, faults=(), arrivals=()) -> None:
+        """One cluster tick: faults land, pending failovers retry, this
+        tick's arrivals submit, every live site steps once (unless
+        delayed), the delivery ledger harvests completions, the virtual
+        clock advances."""
+        self._delayed.clear()
+        self._dropping.clear()
+        for f in faults:
+            self.apply_fault(f)
+        self._retry_pending()
+        for site, req in arrivals:
+            req.arrival_s = self.now
+            self.submit(req, site)
+        for s in range(self.num_sites):
+            eng = self.engines[s]
+            if eng is None or s in self._delayed:
+                continue                     # stalled: live requests wait
+            if s in self._dropping:
+                held = eng.waiting           # admission frozen this tick
+                eng.waiting = deque()
+                try:
+                    eng.step()
+                finally:
+                    # held requests keep their queue position; anything an
+                    # error path requeued lands behind them
+                    leftover = eng.waiting
+                    eng.waiting = held
+                    eng.waiting.extend(leftover)
+            else:
+                eng.step()
+            self._harvest(s)
+        self.now += self.tick_seconds
+
+    def drained(self) -> bool:
+        return (not self.pending
+                and all(e is None or (not e.waiting
+                                      and not any(e.active))
+                        for e in self.engines))
+
+    # ------------------------------------------------------------- result
+    def result(self, name: str, ticks: int,
+               faults_record: Optional[dict] = None) -> ChaosResult:
+        for s in range(self.num_sites):
+            self._harvest(s)
+        metrics = list(self._graveyard) + [e.metrics for e in self.engines
+                                           if e is not None]
+        agg = lambda attr: int(sum(getattr(m, attr) for m in metrics))
+        served = int(sum(self._hwm[r] for r in self._done_rids))
+        rec = {"counts": dict(self.fault_counts)}
+        if faults_record:
+            rec.update(faults_record)
+        return ChaosResult(
+            name=name, ticks=ticks,
+            completed=len(self._done_rids),
+            failed=len(self.failed),
+            timed_out=int(sum(len(m.timed_out) for m in metrics)),
+            rejected=int(sum(len(m.rejected) for m in metrics)),
+            preemptions=agg("preemptions"),
+            resumes=agg("resumed"),
+            served_tokens=served,
+            recovered_tokens=agg("recovered_tokens"),
+            lost_tokens=self.lost_tokens + agg("lost_tokens"),
+            duplicated_tokens=self.duplicated_tokens
+            + agg("duplicated_tokens"),
+            p50_ttft=_pctl(self.completed_ttft, 50),
+            p99_ttft=_pctl(self.completed_ttft, 99),
+            p50_e2e=_pctl(self.completed_e2e, 50),
+            p99_e2e=_pctl(self.completed_e2e, 99),
+            faults=rec)
+
+
+def simulate_serving_chaos(num_sites: int, make_engine, requests,
+                           injector=None, *, name: str = "chaos",
+                           policy=None, failover: bool = True,
+                           retry_budget: int = 3, ticks: int = 64,
+                           drain_ticks: int = 512,
+                           tick_seconds: float = 1.0) -> ChaosResult:
+    """Drive live engines through a faulted request timeline.
+
+    ``requests``: [(tick, site, Request)] arrivals; ``injector``: a
+    ``sim.faults.FaultInjector`` (None = fault-free). After ``ticks``
+    scripted ticks the cluster keeps stepping (fault-free) up to
+    ``drain_ticks`` more to let surviving work finish — goodput then
+    reflects what the fleet actually delivered, not where the horizon
+    happened to fall.
+    """
+    cluster = ServingCluster(num_sites, make_engine, policy=policy,
+                             failover=failover, retry_budget=retry_budget,
+                             tick_seconds=tick_seconds)
+    by_tick: dict[int, list] = {}
+    for tick, site, req in requests:
+        by_tick.setdefault(int(tick), []).append((site, req))
+    for t in range(ticks):
+        faults = injector.faults_at(t) if injector is not None else ()
+        cluster.step_tick(faults=faults, arrivals=by_tick.get(t, ()))
+    for _ in range(drain_ticks):
+        if cluster.drained():
+            break
+        cluster.step_tick()
+    return cluster.result(
+        name, ticks,
+        faults_record=(injector.to_json() if injector is not None else None))

@@ -22,7 +22,19 @@ new baselines: ``register_policy("mine", my_factory)`` and every driver,
 benchmark, and example picks it up. Factories receive
 ``(table, sites, **kwargs)`` where kwargs are the driver's standard knobs
 (``r_frac``, ``time_limit``, ``planner_method``, ``planner_workers``,
-``packing``) — ignore what does not apply.
+``packing``, and the Heron straggler knobs ``straggler_alpha`` /
+``straggler_threshold`` / ``straggler_min_haircut``) — ignore what does
+not apply.
+
+Failover (optional extension): a policy may additionally expose
+``failover_order(site) -> list[int]`` — the preferred landing order for
+in-flight work drained off a dying ``site``. ``sim.cluster.
+ServingCluster`` consults it when carrying preempted transcripts to
+surviving sites; policies without it (both baselines) get
+alive-sites-by-index failover. It is deliberately NOT part of the
+Protocol body: the contract's required surface stays the five lifecycle
+methods above, and ``isinstance`` checks keep working for minimal
+policies.
 """
 from __future__ import annotations
 
@@ -89,11 +101,18 @@ def _heron_factory(objective: str) -> PolicyFactory:
              r_frac: float = 0.03, time_limit: float = 20.0,
              planner_method: str = "auto",
              planner_workers: Optional[int] = None,
-             packing: bool = False, **_ignored) -> HeronRouter:
+             packing: bool = False,
+             straggler_alpha: float = 0.2,
+             straggler_threshold: float = 2.0,
+             straggler_min_haircut: float = 0.25,
+             **_ignored) -> HeronRouter:
         return HeronRouter(table=table, sites=sites, objective=objective,
                            r_frac=r_frac, time_limit_l=time_limit,
                            planner_method=planner_method,
-                           planner_workers=planner_workers, packing=packing)
+                           planner_workers=planner_workers, packing=packing,
+                           straggler_alpha=straggler_alpha,
+                           straggler_threshold=straggler_threshold,
+                           straggler_min_haircut=straggler_min_haircut)
     return make
 
 

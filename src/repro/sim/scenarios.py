@@ -44,6 +44,8 @@ SITE_DOWN = "site_down"
 SITE_UP = "site_up"
 CURTAILMENT = "curtailment"
 CURTAILMENT_LIFTED = "curtailment_lifted"
+GRID_TRIP = "grid_trip"             # value = trip depth (fraction lost)
+GRID_RESTORED = "grid_restored"
 
 
 @dataclass(frozen=True)
@@ -103,6 +105,37 @@ class CompiledScenario:
                 and (self.known_arrival_factor == 1.0).all()
                 and (self.latency_factor == 1.0).all())
 
+    # ---- serialization: a compiled scenario is a record (chaos runs
+    # archive the exact disturbance they replayed) ----
+    def to_json(self) -> dict:
+        return {"num_sites": int(self.num_sites),
+                "ticks": int(self.ticks),
+                "power_factor": self.power_factor.tolist(),
+                "known_power_factor": self.known_power_factor.tolist(),
+                "pred_noise": self.pred_noise.tolist(),
+                "arrival_factor": self.arrival_factor.tolist(),
+                "known_arrival_factor": self.known_arrival_factor.tolist(),
+                "latency_factor": self.latency_factor.tolist(),
+                "controls": [{"kind": ev.kind, "site": ev.site,
+                              "value": ev.value, "tick": ev.tick}
+                             for tk in sorted(self.controls)
+                             for ev in self.controls[tk]]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CompiledScenario":
+        c = cls(num_sites=int(d["num_sites"]), ticks=int(d["ticks"]),
+                power_factor=np.asarray(d["power_factor"], float),
+                known_power_factor=np.asarray(d["known_power_factor"], float),
+                pred_noise=np.asarray(d["pred_noise"], float),
+                arrival_factor=np.asarray(d["arrival_factor"], float),
+                known_arrival_factor=np.asarray(d["known_arrival_factor"],
+                                                float),
+                latency_factor=np.asarray(d["latency_factor"], float))
+        for ev in d.get("controls", []):
+            c.add_control(int(ev["tick"]), ev["kind"], int(ev["site"]),
+                          float(ev["value"]))
+        return c
+
 
 def _window(start: int, duration: Optional[int], T: int) -> slice:
     a = max(int(start), 0)
@@ -157,11 +190,21 @@ class GridTrip:
 
     def apply(self, c: CompiledScenario, rng: np.random.Generator) -> None:
         w = _window(self.start, self.duration, c.ticks)
+        if w.stop <= w.start:
+            return                  # trip entirely outside the horizon
         keep = 1.0 - float(self.depth)
         c.power_factor[self.site, w] *= keep
         wk = _window(self.start + self.detect_ticks,
                      max(self.duration - self.detect_ticks, 0), c.ticks)
         c.known_power_factor[self.site, wk] *= keep
+        # the health signal fires when the trip is *detected* (same lag
+        # as the forecast pipeline) and clears at restoration; the policy
+        # decides whether depth means "site dark" (HeronRouter treats
+        # depth >= 0.999 as down) or a brownout it already absorbs
+        detect = max(self.start + self.detect_ticks, 0)
+        if detect < w.stop:
+            c.add_control(detect, GRID_TRIP, self.site, float(self.depth))
+            c.add_control(w.stop, GRID_RESTORED, self.site)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,298 @@
+"""Fault-tolerance tests (ISSUE 6): preempt/resume bit-identity, the
+FaultInjector's determinism, and chaos runs against live engines.
+
+The pinned anchor of the PR: a request preempted mid-decode and resumed
+on a DIFFERENT engine (different engine seed) produces the exact token
+stream an uninterrupted ``admit_mode="serial"`` run produces — the
+snapshot carries the origin seed and the per-(rid, token-index) sampling
+keys make the draw independent of which engine, slot, or batch serves
+each step. Checked across 2 seeds x 2 cache families (GQA + pure
+recurrent), so both replayed-KV and replayed-state resume paths are
+covered.
+
+Chaos tiers: the seeded kill/restore smoke (``chaos`` marker) runs in
+the fast tier; the multi-scenario failover-vs-blind sweep is also
+``slow``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.api import build
+from repro.serving.engine import Request, ServingEngine, retry_backoff
+from repro.sim.cluster import (ChaosResult, ServingCluster,
+                               simulate_serving_chaos)
+from repro.sim.faults import (KILL, RESTORE, Fault, FaultInjector)
+from repro.sim.scenarios import GridTrip, ScenarioEngine, SiteFailure
+
+# one GQA-family cache + one recurrent-state cache: resume replays
+# prefill-from-cache through structurally different cache families
+ARCHS = ["llama3.2-1b", "rwkv6-1.6b"]
+
+_BUILT: dict = {}
+
+
+def _build(arch):
+    if arch not in _BUILT:
+        cfg = smoke_config(arch)
+        model = build(cfg)
+        _BUILT[arch] = (cfg, model, model.init_params(jax.random.key(0)))
+    return _BUILT[arch]
+
+
+def _requests(cfg, n_new=10, seed=3):
+    """Five requests (one past max_batch=4, so drain also evicts a
+    queued one), mixed greedy/sampled rows."""
+    rng = np.random.default_rng(seed)
+    lengths = (7, 12, 5, 9, 6)
+    temps = (0.0, 0.9, 1.3, 0.0, 0.7)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=n)
+                    .astype(np.int32),
+                    max_new_tokens=n_new, temperature=t)
+            for i, (n, t) in enumerate(zip(lengths, temps))]
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(model, params, **kw)
+
+
+def _run(eng, max_steps=400):
+    for _ in range(max_steps):
+        if not eng.waiting and not any(r is not None for r in eng.active):
+            break
+        eng.step()
+    return {r.rid: list(r.tokens) for r in eng.metrics.completed}
+
+
+# ------------------------------------------------- preempt/resume anchor
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_preempt_resume_bit_identical_cross_engine(arch, seed):
+    """Preempt mid-decode, resume on an engine with a DIFFERENT seed:
+    streams are exactly the uninterrupted serial reference's."""
+    cfg, model, params = _build(arch)
+
+    ref_eng = _engine(model, params, admit_mode="serial", seed=seed)
+    for r in _requests(cfg):
+        assert ref_eng.submit(r)
+    ref = _run(ref_eng)
+    assert len(ref) == 5
+
+    e1 = _engine(model, params, admit_mode="batched", seed=seed)
+    for r in _requests(cfg):
+        assert e1.submit(r)
+    for _ in range(3):                      # mid-decode, nothing finished
+        e1.step()
+    snaps = e1.drain()
+    assert len(snaps) == 5                  # 4 live slots + 1 queued
+    mid = [s for s in snaps if 0 < len(s.tokens) < 10]
+    assert len(mid) >= 4                    # genuinely mid-stream
+    assert all(s.seed == seed for s in snaps)
+    assert not any(r is not None for r in e1.active) and not e1.waiting
+    assert e1.reconcile()["balanced"]
+
+    # a different engine seed would produce different streams for its own
+    # requests — carried seeds must shield the resumed ones from it
+    e2 = _engine(model, params, admit_mode="batched", seed=seed + 91)
+    for s in snaps:
+        assert e2.resume(s) is not None
+    got = _run(e2)
+    assert e2.reconcile()["balanced"]
+    assert e2.metrics.recovered_tokens == sum(len(s.tokens) for s in snaps)
+
+    assert set(got) == set(ref)
+    for rid in ref:
+        assert got[rid] == ref[rid], f"rid {rid} diverged after resume"
+
+
+def test_resume_is_preempt_idempotent():
+    """A transcript preempted twice (resume, preempt again, resume again)
+    still lands on the reference stream — snapshots compose."""
+    cfg, model, params = _build("llama3.2-1b")
+    ref_eng = _engine(model, params, admit_mode="serial", seed=0)
+    for r in _requests(cfg):
+        ref_eng.submit(r)
+    ref = _run(ref_eng)
+
+    eng = _engine(model, params, admit_mode="batched", seed=0)
+    for r in _requests(cfg):
+        eng.submit(r)
+    got = {}
+    for hop, nsteps in enumerate((2, 3)):   # two interruptions
+        for _ in range(nsteps):
+            eng.step()
+        snaps = eng.drain()
+        got.update({r.rid: list(r.tokens) for r in eng.metrics.completed})
+        eng = _engine(model, params, admit_mode="batched", seed=17 + hop)
+        for s in snaps:
+            assert eng.resume(s) is not None
+    got.update(_run(eng))
+    assert got == ref
+
+
+# --------------------------------------------------------- FaultInjector
+def test_fault_injector_deterministic_and_tick_independent():
+    kw = dict(num_sites=3, seed=5, p_delay=0.5, p_drop=0.3, p_corrupt=0.4)
+    a, b = FaultInjector(**kw), FaultInjector(**kw)
+    for t in (0, 3, 17, 64):
+        assert a.faults_at(t) == b.faults_at(t)
+    # per-tick substreams: querying tick 17 cold equals querying it after
+    # a full sweep (resume/replay cannot shift the random plane)
+    c = FaultInjector(**kw)
+    assert c.faults_at(17) == a.faults_at(17)
+    d = FaultInjector(**{**kw, "seed": 6})
+    assert any(d.faults_at(t) != a.faults_at(t) for t in range(20))
+    # round-trip preserves both schedule and random plane
+    e = FaultInjector.from_json(FaultInjector(
+        **kw, schedule=[Fault(2, KILL, 1), Fault(5, RESTORE, 1)]).to_json())
+    assert [f for f in e.faults_at(2) if f.kind == KILL] == [Fault(2, KILL, 1)]
+    assert e.faults_at(9) == a.faults_at(9)
+
+
+def test_fault_injector_from_scenario_truth_edges():
+    """Kills/restores come from the TRUTH power plane (engines die when
+    power actually drops), not the detection-lagged control stream."""
+    sc = ScenarioEngine([SiteFailure(site=1, start=4, duration=3,
+                                     detect_ticks=2)], seed=0).compile(3, 16)
+    inj = FaultInjector.from_scenario(sc)
+    assert [f for f in inj.schedule if f.kind == KILL] == [Fault(4, KILL, 1)]
+    assert [f for f in inj.schedule
+            if f.kind == RESTORE] == [Fault(7, RESTORE, 1)]
+    # the control stream still carries the lag — the policy's plane
+    assert any(ev.kind == "site_down" for ev in sc.controls_at(6))
+    # partial-depth trip: power never hits zero, no kill derived
+    sc2 = ScenarioEngine([GridTrip(site=0, start=2, duration=4, depth=0.9,
+                                   detect_ticks=0)], seed=0).compile(2, 12)
+    assert FaultInjector.from_scenario(sc2).schedule == []
+    # full-depth trip kills on truth start, restores at window end
+    sc3 = ScenarioEngine([GridTrip(site=0, start=2, duration=4, depth=1.0,
+                                   detect_ticks=1)], seed=0).compile(2, 12)
+    inj3 = FaultInjector.from_scenario(sc3)
+    assert Fault(2, KILL, 0) in inj3.schedule
+    assert Fault(6, RESTORE, 0) in inj3.schedule
+
+
+def test_retry_backoff_capped_exponential():
+    assert retry_backoff(1) == pytest.approx(0.05)
+    assert retry_backoff(2) == pytest.approx(0.10)
+    assert retry_backoff(3) == pytest.approx(0.20)
+    assert retry_backoff(20) == pytest.approx(2.0)     # capped
+
+
+# ------------------------------------------------------------ chaos runs
+@pytest.mark.chaos
+def test_chaos_kill_restore_stream_identity():
+    """Fast smoke: one kill/restore cycle mid-decode. Every request that
+    completes anywhere in the cluster matches the fault-free single-engine
+    stream, and the delivery ledger proves zero duplicated tokens."""
+    cfg, model, params = _build("llama3.2-1b")
+
+    def make_engine(site, clock):
+        return _engine(model, params, seed=site, clock=clock)
+
+    # fault-free reference: all requests on one engine with seed 0 —
+    # exactly the stream site 0 owes its arrivals
+    ref_eng = _engine(model, params, seed=0)
+    for r in _requests(cfg):
+        ref_eng.submit(r)
+    ref = _run(ref_eng)
+
+    cluster = ServingCluster(3, make_engine, failover=True)
+    arrivals = [(0, r) for r in _requests(cfg)]
+    faults = {2: [Fault(2, KILL, 0)], 6: [Fault(6, RESTORE, 0)]}
+    cluster.step_tick(arrivals=arrivals)
+    for t in range(1, 80):
+        cluster.step_tick(faults=faults.get(t, ()))
+        if t > 6 and cluster.drained():
+            break
+    assert cluster.drained()
+
+    got = {}
+    for m in cluster._graveyard + [e.metrics for e in cluster.engines
+                                   if e is not None]:
+        got.update({r.rid: list(r.tokens) for r in m.completed})
+    assert got == ref
+
+    res = cluster.result("smoke", 80)
+    assert res.duplicated_tokens == 0
+    assert res.resumes >= 4                 # the kill actually preempted
+    assert res.completed == 5 and res.failed == 0
+    assert res.served_tokens == sum(len(t) for t in ref.values())
+    assert res.recovered_tokens > 0
+    # the scorecard is a record
+    back = ChaosResult.from_json(res.to_json())
+    assert back == res
+
+
+@pytest.mark.chaos
+def test_chaos_blind_loses_what_failover_recovers():
+    cfg, model, params = _build("llama3.2-1b")
+
+    def make_engine(site, clock):
+        return _engine(model, params, seed=site, clock=clock)
+
+    inj = FaultInjector(num_sites=2, schedule=[Fault(2, KILL, 0)])
+    kw = dict(ticks=8, drain_ticks=200)
+    fo = simulate_serving_chaos(2, make_engine,
+                                [(0, 0, r) for r in _requests(cfg)],
+                                inj, name="fo", failover=True, **kw)
+    bl = simulate_serving_chaos(2, make_engine,
+                                [(0, 0, r) for r in _requests(cfg)],
+                                inj, name="bl", failover=False, **kw)
+    assert fo.served_tokens > bl.served_tokens
+    assert fo.duplicated_tokens == 0 and bl.duplicated_tokens == 0
+    assert fo.completed == 5
+    assert bl.lost_tokens > 0
+    assert fo.faults["counts"]["kill"] == 1
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_chaos_multi_scenario_sweep():
+    """Scenario-derived injectors + a random fault plane, failover vs
+    blind: failover never serves fewer tokens and never duplicates."""
+    cfg, model, params = _build("llama3.2-1b")
+
+    def make_engine(site, clock):
+        return _engine(model, params, seed=site, clock=clock)
+
+    def workload(n=10, ticks=16):
+        rng = np.random.default_rng(1)
+        return [(i % (ticks // 2), i % 3,
+                 Request(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             size=int(rng.integers(4, 9)))
+                         .astype(np.int32),
+                         max_new_tokens=10,
+                         temperature=0.8 if i % 2 else 0.0))
+                for i in range(n)]
+
+    scenarios = {
+        "site_failure": ScenarioEngine(
+            [SiteFailure(site=0, start=4, duration=6)], seed=0),
+        "grid_trip": ScenarioEngine(
+            [GridTrip(site=1, start=4, duration=6, depth=1.0,
+                      detect_ticks=1)], seed=0),
+    }
+    for name, engine in scenarios.items():
+        sc = engine.compile(3, 16)
+        inj = FaultInjector.from_scenario(sc, seed=3, p_delay=0.1,
+                                          p_drop=0.1, p_corrupt=0.05)
+        fo = simulate_serving_chaos(3, make_engine, workload(), inj,
+                                    name=f"{name}_fo", failover=True,
+                                    ticks=16)
+        bl = simulate_serving_chaos(3, make_engine, workload(), inj,
+                                    name=f"{name}_bl", failover=False,
+                                    ticks=16)
+        assert fo.duplicated_tokens == 0 and bl.duplicated_tokens == 0
+        assert fo.served_tokens >= bl.served_tokens, name
+        assert fo.completed >= bl.completed, name
+        # the scripted kill landed and the record archives the injector
+        assert fo.faults["counts"].get("kill", 0) >= 1
+        assert fo.faults["schedule"] == [f.to_json() for f in inj.schedule]

@@ -231,3 +231,141 @@ def test_release_slot_on_admission_error(monkeypatch):
     monkeypatch.undo()
     m = eng.run()
     assert m.summary()["num_completed"] == 2
+
+
+# ------------------------------------------------- lifecycle (ISSUE 6)
+def test_release_slot_error_paths():
+    """release_slot is idempotent for free/never-admitted slots and
+    raises on out-of-range ids; the engine stays serviceable."""
+    cfg, model, params = _build("llama3.2-1b")
+    eng = _engine(model, params, "batched")
+    eng.release_slot(2)                      # never admitted: no-op
+    rng = np.random.default_rng(4)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2))
+    eng.run()
+    eng.release_slot(0)                      # already retired on finish
+    eng.release_slot(0)                      # double release: no-op
+    with pytest.raises(ValueError):
+        eng.release_slot(eng.max_batch)
+    with pytest.raises(ValueError):
+        eng.release_slot(-1)
+    eng.submit(Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2))
+    m = eng.run()
+    assert m.summary()["num_completed"] == 2
+    assert eng.reconcile()["balanced"]
+
+
+def test_reject_then_resubmit_same_rid():
+    """An oversize rejection leaves no residue keyed on the rid: the
+    same rid resubmitted at a legal size admits and completes."""
+    cfg, model, params = _build("llama3.2-1b")
+    eng = _engine(model, params, "batched", max_seq=16)
+    rng = np.random.default_rng(4)
+    eng.submit(Request(rid=7, prompt=rng.integers(        # 14 + 8 - 1 > 16
+        0, cfg.vocab_size, size=14).astype(np.int32), max_new_tokens=8))
+    m = eng.run()
+    assert [r.rid for r in m.rejected] == [7]
+    eng.submit(Request(rid=7, prompt=rng.integers(        # 6 + 3 - 1 <= 16
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=3))
+    m = eng.run()
+    assert [r.rid for r in m.completed] == [7]
+    assert len(m.completed[0].tokens) == 3
+    assert eng.reconcile()["balanced"]
+
+
+def test_deadline_timeout_queued_and_active():
+    """Absolute deadlines: a queued request past its deadline is swept
+    before burning prefill; an in-flight one is evicted mid-decode and
+    its generated tokens count as lost."""
+    cfg, model, params = _build("llama3.2-1b")
+    clk = [0.0]
+    eng = _engine(model, params, "batched", clock=lambda: clk[0])
+    rng = np.random.default_rng(4)
+    mk = lambda rid, dl: Request(
+        rid=rid, prompt=rng.integers(0, cfg.vocab_size, size=6)
+        .astype(np.int32), max_new_tokens=20, deadline_s=dl)
+    eng.submit(mk(0, 1.0))                   # dead before admission
+    eng.submit(mk(1, 50.0))                  # dies mid-decode
+    clk[0] = 2.0
+    eng.step()
+    assert [r.rid for r in eng.metrics.timed_out] == [0]
+    assert eng.active[0] is not None and eng.active[0].rid == 1
+    eng.step()                               # a couple of live tokens
+    clk[0] = 60.0
+    eng.step()
+    assert [r.rid for r in eng.metrics.timed_out] == [0, 1]
+    assert eng.metrics.lost_tokens >= 2      # rid 1's generated tokens
+    assert all(r is None for r in eng.active)
+    assert eng.reconcile()["balanced"]
+
+
+def test_backoff_hold_does_not_starve_queue():
+    """A backoff-gated request (not_before_s in the future) holds its
+    queue position without blocking requests behind it."""
+    cfg, model, params = _build("llama3.2-1b")
+    clk = [0.0]
+    eng = _engine(model, params, "batched", clock=lambda: clk[0])
+    rng = np.random.default_rng(4)
+    held = Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2,
+        not_before_s=10.0)
+    eng.submit(held)
+    eng.submit(Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2))
+    eng.step()                               # rid 1 jumps the gate
+    assert any(r is not None and r.rid == 1 for r in eng.active) \
+        or any(r.rid == 1 for r in eng.metrics.completed)
+    assert [r.rid for r in eng.waiting] == [0]
+    clk[0] = 10.0                            # gate opens (now >= not_before)
+    m = eng.run()
+    assert sorted(r.rid for r in m.completed) == [0, 1]
+    assert eng.reconcile()["balanced"]
+
+
+def test_queue_watermark_backpressure():
+    """Past the watermark, submit() fails fast and records the
+    rejection instead of letting the queue grow unboundedly."""
+    cfg, model, params = _build("llama3.2-1b")
+    eng = _engine(model, params, "batched", queue_watermark=2)
+    rng = np.random.default_rng(4)
+    oks = [eng.submit(Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=2))
+        for i in range(4)]
+    assert oks == [True, True, False, False]
+    m = eng.run()
+    assert sorted(r.rid for r in m.completed) == [0, 1]
+    assert sorted(r.rid for r in m.rejected) == [2, 3]
+    assert eng.reconcile()["balanced"]
+
+
+def test_brownout_sheds_fresh_requests_only():
+    """Brownout sheds a fresh request's max_new_tokens to
+    ceil(frac * requested); resumed transcripts keep their contract
+    (shedding them would break the bit-identity anchor)."""
+    cfg, model, params = _build("llama3.2-1b")
+    rng = np.random.default_rng(4)
+    src = _engine(model, params, "batched", seed=0)
+    src.submit(Request(rid=5, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=8,
+        temperature=0.9))
+    for _ in range(3):
+        src.step()
+    snap, = src.preempt()
+    assert len(snap.tokens) == 4             # 1 at admission + 3 decode steps
+
+    eng = _engine(model, params, "batched", seed=1)
+    eng.set_brownout(0.5)
+    assert eng.brownout == 0.5
+    eng.submit(Request(rid=9, prompt=rng.integers(
+        0, cfg.vocab_size, size=6).astype(np.int32), max_new_tokens=8))
+    assert eng.resume(snap) is not None
+    m = eng.run()
+    got = {r.rid: len(r.tokens) for r in m.completed}
+    assert got == {9: 4, 5: 8}               # fresh shed, resumed intact
+    assert eng.metrics.shed_tokens == 4
+    eng.set_brownout(1.5)                    # clamped
+    assert eng.brownout == 1.0
+    eng.set_brownout(-0.5)
+    assert eng.brownout == 0.0

@@ -229,3 +229,61 @@ def test_router_straggler_haircut_recovers(setup):
     # monotone relaxation as the EWMA recovers
     assert all(b >= a - 1e-12 for a, b in zip(fracs, fracs[1:]))
     assert fracs[-1] == 1.0                    # fully recovered
+
+
+def test_router_straggler_knob_defaults_and_factory(setup):
+    """The straggler knobs are constructor parameters with pinned
+    defaults (0.2 / 2.0 / 0.25); explicit defaults are bit-identical to
+    the implicit ones, changed knobs change the haircut, and the policy
+    factory threads all three through ``make_policy``."""
+    table, sites, power, arrivals = setup
+    pw = power[:, 0] * 1e6
+    r_def = HeronRouter(table=table, sites=sites, time_limit_l=20)
+    assert (r_def.straggler_alpha, r_def.straggler_threshold,
+            r_def.straggler_min_haircut) == (0.2, 2.0, 0.25)
+    r_exp = HeronRouter(table=table, sites=sites, time_limit_l=20,
+                        straggler_alpha=0.2, straggler_threshold=2.0,
+                        straggler_min_haircut=0.25)
+    r_knb = HeronRouter(table=table, sites=sites, time_limit_l=20,
+                        straggler_alpha=0.5, straggler_threshold=1.5,
+                        straggler_min_haircut=0.6)
+    for _ in range(40):                     # site 0 pathologically slow
+        for r in (r_def, r_exp, r_knb):
+            r.observe_latency(0, 25.0)
+            for s in range(1, len(sites)):
+                r.observe_latency(s, 0.5)
+    assert (r_def._effective_power(pw) == r_exp._effective_power(pw)).all()
+    assert r_def._effective_power(pw)[0] == pytest.approx(pw[0] * 0.25)
+    assert r_knb._effective_power(pw)[0] == pytest.approx(pw[0] * 0.6)
+
+    from repro.sim.policy import make_policy
+    p = make_policy("heron", table, sites, straggler_alpha=0.5,
+                    straggler_threshold=1.5, straggler_min_haircut=0.6)
+    assert (p.straggler_alpha, p.straggler_threshold,
+            p.straggler_min_haircut) == (0.5, 1.5, 0.6)
+
+
+def test_router_failover_order_ranks_by_plan_weight(setup):
+    """failover_order: alive-by-index before any plan; WRR-weight-ranked
+    under a solved plan; health events (full grid trips included)
+    add/remove sites."""
+    from repro.sim.scenarios import ControlEvent
+    table, sites, power, arrivals = setup
+    S = len(sites)
+    router = HeronRouter(table=table, sites=sites, time_limit_l=20)
+    assert router.failover_order(0) == list(range(1, S))
+    router.plan_slot(power[:, 200] * 1e6, arrivals[:, 200])
+    order = router.failover_order(0)
+    assert sorted(order) == list(range(1, S))
+    agg = np.zeros(S)
+    for rows in (router._plan_s or router._plan_l).wrr_weights().values():
+        for s, _row, w in rows:
+            agg[s] += w
+    assert order == sorted(order, key=lambda s: (-agg[s], s))
+    # a full-depth grid trip is a death; partial depth is a brownout
+    router.on_event(ControlEvent(kind="grid_trip", site=order[0], value=1.0))
+    assert order[0] not in router.failover_order(0)
+    router.on_event(ControlEvent(kind="grid_restored", site=order[0]))
+    assert order[0] in router.failover_order(0)
+    router.on_event(ControlEvent(kind="grid_trip", site=order[0], value=0.5))
+    assert order[0] in router.failover_order(0)
