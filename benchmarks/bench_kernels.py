@@ -2,6 +2,14 @@
 wall clock. CPU wall-times are NOT TPU predictions — the roofline bench is
 the perf story; this bench pins correctness deltas and the XLA fallback
 cost of each kernel's shape regime.
+
+Paged-vs-dense decode sweep: at overprovisioning ratio R = max_seq /
+mean-live-length, dense decode streams the whole max_seq cache row while
+paged decode streams only the live pages (block table sliced to the
+pow-2 cover, as the serving engine does). The sweep times the XLA paths
+at R in {1, 2, 4, 8} next to the roofline-projected byte ratio
+(``analysis.roofline.paged_decode_memory_s``) — the committed
+``BENCH_kernels.json`` pins that paged wins from R >= 4.
 """
 from __future__ import annotations
 
@@ -11,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Timer, row, save
+from benchmarks.common import Timer, row, save_tracker
 from repro.kernels import ops, ref
 
 
@@ -84,13 +92,89 @@ def run(fast: bool = True):
     rows.append(row("kernel_wkv6", us_ref,
                     f"S={S} chunked max|err|={err:.1e} vs token-serial oracle"))
 
-    save("kernels", {r[0]: r[2] for r in rows})
+    # paged vs dense decode sweep (XLA paths — the apples-to-apples CPU
+    # measurement; interpret-mode Pallas timing is not meaningful)
+    sweep = _paged_sweep(fast=fast)
+    for R, cell in sorted(sweep.items()):
+        rows.append(row(f"kernel_paged_decode_r{R}", cell["paged_us"],
+                        (f"ratio={R}x dense={cell['dense_us']:.0f}us "
+                         f"speedup={cell['speedup']:.2f}x "
+                         f"roofline={cell['roofline_speedup']:.2f}x "
+                         f"max|err|={cell['err']:.1e}")))
+
+    payload = {r[0]: r[2] for r in rows}
+    payload["paged_decode_sweep"] = {str(k): v for k, v in sorted(sweep.items())}
+    save_tracker("kernels", payload)
     return rows
 
 
+def _paged_sweep(fast: bool = True) -> dict:
+    """Time dense vs paged decode at overprovisioning ratios R = S/mean_len.
+
+    The paged call slices the block table to the pow-2 page cover of the
+    live length (exactly what ServingEngine._decode_width does), so the
+    gathered view — and the bytes streamed — shrink with the live length
+    while dense always walks the full max_seq row.
+    """
+    from repro.analysis.roofline import paged_decode_memory_s
+    from repro.configs import get_config
+
+    B, S, page, KVH, H, hd = 4, (2048 if fast else 4096), 16, 2, 8, 64
+    maxP = S // page
+    P = B * maxP
+    cfg = get_config("llama3.2-1b")
+    rng = np.random.default_rng(0)
+    kd = rng.standard_normal((B, S, KVH, hd)).astype(np.float32)
+    vd = rng.standard_normal((B, S, KVH, hd)).astype(np.float32)
+    # identity-permutation page layout: slot b owns pages [b*maxP, (b+1)*maxP)
+    table = np.arange(P, dtype=np.int32).reshape(B, maxP)
+    k_pool = jnp.asarray(kd.reshape(P, page, KVH, hd))
+    v_pool = jnp.asarray(vd.reshape(P, page, KVH, hd))
+    kd, vd = jnp.asarray(kd), jnp.asarray(vd)
+    q = jnp.asarray(rng.standard_normal((B, H, hd)).astype(np.float32))
+
+    out = {}
+    for R in (1, 2, 4, 8):
+        mean_len = S // R
+        lens = jnp.full((B,), mean_len, jnp.int32)
+        pw = maxP // R                       # pow-2 page cover of mean_len
+        tab = jnp.asarray(table[:, :pw])
+        dense_us = _time(
+            lambda a, b, c, d: ops.decode_attention(a, b, c, d,
+                                                    use_pallas=False),
+            q, kd, vd, lens)
+        paged_us = _time(
+            lambda a, b, c, d, e: ops.paged_decode_attention(
+                a, b, c, d, e, use_pallas=False),
+            q, k_pool, v_pool, tab, lens)
+        err = float(jnp.abs(
+            ops.paged_decode_attention(q, k_pool, v_pool, tab, lens,
+                                       use_pallas=False)
+            - ref.decode_attention_ref(q, kd, vd, lens)).max())
+        d_s, p_s = paged_decode_memory_s(cfg, mean_len, B, S, chips=1,
+                                         model_axis=16)
+        out[R] = {
+            "mean_len": mean_len, "max_seq": S,
+            "dense_us": dense_us, "paged_us": paged_us,
+            "speedup": dense_us / paged_us,
+            "roofline_speedup": d_s / p_s,
+            "err": err,
+        }
+    return out
+
+
 def main():
+    import argparse
+
+    from benchmarks import common
     from benchmarks.common import emit
-    emit(run(fast=True))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    emit(run(fast=not args.full))
 
 
 if __name__ == "__main__":

@@ -1,14 +1,25 @@
 """Serving-engine benchmark: burst admission latency + steady-state decode.
 
-Times a 32-request burst into one ServingEngine under both admission modes
+Times a 32-request burst into one ServingEngine under the admission modes
 (``serial`` — the old one-request-at-a-time path with a B=1 decode tail —
-vs ``batched`` — grouped pow-2 prefills + chunked prefill-from-cache
-tails), plus the steady-state decode rate, and verifies the two modes'
-token streams are identical on every run. ``admit_s`` times the FIRST
-max_batch-sized admission wave (all of its prefill work + one shared
-decode step); ``drain_s`` is the whole burst including the decode drain
-that later waves interleave with. Acceptance (ISSUE 4): the burst admits
-with >= 4x fewer compiled dispatches and lower admission wall time.
+``batched`` — grouped pow-2 prefills + chunked prefill-from-cache tails —
+and the ISSUE 7 configs: ``paged`` riding the batched pipeline on the
+shared page pool, and ``paged_async`` with a 32-slot paged engine whose
+page pool holds the whole burst in HALF the HBM bytes the 8-slot dense
+cache reserves), plus the steady-state decode rate. Every config's token
+stream is asserted identical to the serial anchor on every run — the
+per-(seed, rid, token-index) sampling keys make streams independent of
+admission interleaving, slot count, and cache layout.
+
+``admit_s`` times the FIRST admission wave (all of its prefill work + one
+shared decode step); ``drain_s`` is the whole burst including the decode
+drain. Acceptance (ISSUE 7): paged_async p99 burst TTFT >= 2x better
+than the PR 4 batched anchor (136 ms).
+
+``_continuous`` drives Poisson arrivals at a sustained rate and reports
+p99 TBT: batched admission does a whole wave's prefill inside one step
+(stalling in-flight decodes), while async spends a bounded
+``admit_token_budget`` per step — bounded p99 TBT is the claim.
 
 Writes ``BENCH_serving.json`` at the repo root under the
 ``--update-tracker`` discipline (artifacts/bench/serving.json always).
@@ -30,6 +41,14 @@ BURST = 32
 MAX_BATCH = 8
 MAX_SEQ = 64
 LENGTHS = [5, 9, 13, 17, 21, 25, 29, 30] * 4     # pow-2 buckets 4/8/16
+PAGE = 16
+
+# paged_async burst config: every request's full contract is
+# ceil((len + 4 - 1)/16) pages -> 56 pages for the 32-request burst; a
+# 64-page pool (1024 cache tokens) admits the whole herd at once where
+# a dense 32-slot cache would reserve 32*64 = 2048 tokens.
+WIDE_BATCH = BURST
+WIDE_PAGES = 64
 
 
 def _requests(cfg, seed=0, n_new=4):
@@ -40,13 +59,14 @@ def _requests(cfg, seed=0, n_new=4):
             for i, n in enumerate(LENGTHS[:BURST])]
 
 
-def _burst(model, params, mode: str, *, reps: int) -> dict:
+def _burst(model, params, mode: str, *, reps: int,
+           max_batch: int = MAX_BATCH, **eng_kw) -> dict:
     """Admission wall time for a BURST-request thundering herd. One engine
     per mode: rep 0 pays all compilations (the serving steady state), the
     timed reps measure the admission pipeline itself."""
     cfg = model.cfg
-    eng = ServingEngine(model, params, max_batch=MAX_BATCH,
-                        max_seq=MAX_SEQ, admit_mode=mode)
+    eng = ServingEngine(model, params, max_batch=max_batch,
+                        max_seq=MAX_SEQ, admit_mode=mode, **eng_kw)
     admit_s, drain_s, calls, steps = [], [], 0, 0
     ttfts, tbts = [], []
     for rep in range(reps + 1):                     # rep 0 warms compiles
@@ -83,6 +103,55 @@ def _burst(model, params, mode: str, *, reps: int) -> dict:
             "streams": last}
 
 
+def _continuous(model, params, *, reps: int, n_req: int, rate_hz: float,
+                mode: str, max_batch: int = MAX_BATCH, **eng_kw) -> dict:
+    """Sustained Poisson arrivals: submit each request at its drawn arrival
+    time, step the engine continuously, report tail latencies. One engine
+    per config; rep 0 warms compiles and is excluded from the stats."""
+    cfg = model.cfg
+    eng = ServingEngine(model, params, max_batch=max_batch,
+                        max_seq=MAX_SEQ, admit_mode=mode, **eng_kw)
+    ttfts, tbts, makespans = [], [], []
+    streams = {}
+    for rep in range(reps + 1):
+        rng = np.random.default_rng(100)            # same draw every rep
+        lens = rng.integers(5, 31, size=n_req)
+        gaps = rng.exponential(1.0 / rate_hz, size=n_req)
+        arrivals = np.cumsum(gaps)
+        reqs = [Request(rid=i, prompt=rng.integers(
+                    0, cfg.vocab_size, size=int(n)).astype(np.int32),
+                    max_new_tokens=8)
+                for i, n in enumerate(lens)]
+        t0 = time.perf_counter()
+        nxt = 0
+        while True:
+            now = time.perf_counter() - t0
+            while nxt < n_req and arrivals[nxt] <= now:
+                reqs[nxt].arrival_s = t0 + arrivals[nxt]
+                eng.submit(reqs[nxt])
+                nxt += 1
+            live = eng.step()
+            if (live == 0 and not eng.waiting and not eng._pend
+                    and nxt >= n_req):
+                break
+            if live == 0 and nxt < n_req:           # idle until next arrival
+                time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter()
+                                                     - t0)))
+        jax.block_until_ready(eng.cache["pos"])
+        assert all(len(r.tokens) == r.max_new_tokens for r in reqs)
+        if rep:
+            ttfts += [r.ttft for r in reqs]
+            tbts += [r.tbt for r in reqs if r.tbt is not None]
+            makespans.append(time.perf_counter() - t0)
+        streams = {r.rid: list(r.tokens) for r in reqs}
+    return {"p50_ttft_s": float(np.percentile(ttfts, 50)),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)),
+            "p50_tbt_s": float(np.percentile(tbts, 50)),
+            "p99_tbt_s": float(np.percentile(tbts, 99)),
+            "makespan_s": float(np.median(makespans)),
+            "streams": streams}
+
+
 def _steady_tokens_per_s(model, params) -> float:
     """Decode throughput with all slots live (no admission in the loop)."""
     cfg = model.cfg
@@ -109,22 +178,51 @@ def run(fast: bool = True):
     model = build(cfg)
     params = model.init_params(jax.random.key(0))
 
-    res = {mode: _burst(model, params, mode, reps=reps)
-           for mode in ("serial", "batched")}
-    # equivalence is part of the bench contract, not just the test suite
-    assert res["serial"]["streams"] == res["batched"]["streams"], \
-        "serial vs batched token streams diverged"
-    for m in res.values():
-        m.pop("streams")
+    res = {
+        "serial": _burst(model, params, "serial", reps=reps),
+        "batched": _burst(model, params, "batched", reps=reps),
+        "paged": _burst(model, params, "batched", reps=reps,
+                        paged=True, page_size=PAGE),
+        "paged_async": _burst(model, params, "async", reps=reps,
+                              paged=True, page_size=PAGE,
+                              max_batch=WIDE_BATCH, num_pages=WIDE_PAGES,
+                              admit_token_budget=10 ** 6),
+    }
+    # equivalence is part of the bench contract, not just the test suite:
+    # every config must reproduce the serial anchor's streams bit-exactly
+    anchor = res["serial"].pop("streams")
+    for name in ("batched", "paged", "paged_async"):
+        assert res[name].pop("streams") == anchor, \
+            f"{name} token streams diverged from the serial anchor"
     tok_s = _steady_tokens_per_s(model, params)
 
-    sr, br = res["serial"], res["batched"]
+    cont = {
+        "batched": _continuous(model, params, reps=reps, n_req=48,
+                               rate_hz=40.0, mode="batched"),
+        "async_paged": _continuous(model, params, reps=reps, n_req=48,
+                                   rate_hz=40.0, mode="async",
+                                   paged=True, page_size=PAGE,
+                                   admit_token_budget=16),
+    }
+    assert cont["batched"].pop("streams") == cont["async_paged"].pop(
+        "streams"), "continuous batched vs async_paged streams diverged"
+
+    sr, br, pa = res["serial"], res["batched"], res["paged_async"]
     payload = {
         "arch": ARCH, "burst": BURST, "max_batch": MAX_BATCH,
         "max_seq": MAX_SEQ, "reps": reps,
         "serial": sr, "batched": br,
+        "paged": res["paged"], "paged_async": pa,
+        "paged_async_config": {
+            "max_batch": WIDE_BATCH, "num_pages": WIDE_PAGES,
+            "page_size": PAGE, "pool_tokens": WIDE_PAGES * PAGE,
+            "dense_equiv_tokens": WIDE_BATCH * MAX_SEQ,
+        },
         "admit_speedup": sr["admit_s"] / max(br["admit_s"], 1e-9),
         "dispatch_ratio": sr["prefill_calls"] / max(br["prefill_calls"], 1),
+        "paged_ttft_speedup": (br["p99_ttft_s"]
+                               / max(pa["p99_ttft_s"], 1e-9)),
+        "continuous": cont,
         "steady_tokens_per_s": tok_s,
     }
     save_tracker("serving", payload)
@@ -139,6 +237,22 @@ def run(fast: bool = True):
             f"{br['prefill_calls']} dispatches/burst "
             f"({payload['dispatch_ratio']:.1f}x fewer), "
             f"p99 TTFT {br['p99_ttft_s']*1e3:.0f} ms"),
+        row("serve_admit_paged", res["paged"]["admit_s"] * 1e6,
+            f"batched pipeline on the page pool, p99 TTFT "
+            f"{res['paged']['p99_ttft_s']*1e3:.0f} ms"),
+        row("serve_admit_paged_async", pa["admit_s"] * 1e6,
+            f"{WIDE_BATCH} slots / {WIDE_PAGES * PAGE} pool tokens "
+            f"({WIDE_PAGES * PAGE / (WIDE_BATCH * MAX_SEQ):.0%} of dense), "
+            f"p99 TTFT {pa['p99_ttft_s']*1e3:.0f} ms "
+            f"({payload['paged_ttft_speedup']:.1f}x vs batched)"),
+        row("serve_continuous_batched", cont["batched"]["p99_tbt_s"] * 1e6,
+            f"Poisson 40/s: p99 TBT {cont['batched']['p99_tbt_s']*1e3:.1f} "
+            f"ms, p99 TTFT {cont['batched']['p99_ttft_s']*1e3:.0f} ms"),
+        row("serve_continuous_async", cont["async_paged"]["p99_tbt_s"] * 1e6,
+            f"Poisson 40/s: p99 TBT "
+            f"{cont['async_paged']['p99_tbt_s']*1e3:.1f} ms "
+            f"({cont['batched']['p99_tbt_s']/max(cont['async_paged']['p99_tbt_s'], 1e-9):.1f}x vs batched), "
+            f"p99 TTFT {cont['async_paged']['p99_ttft_s']*1e3:.0f} ms"),
         row("serve_steady_decode", 1e6 / max(tok_s, 1e-9),
             f"{tok_s:.0f} tok/s steady-state at B={MAX_BATCH}"),
     ]

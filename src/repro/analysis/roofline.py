@@ -114,6 +114,26 @@ def analytic_memory_floor(cfg: ModelConfig, shape: ShapeConfig,
     return w_dev + cache_dev
 
 
+def paged_decode_memory_s(cfg: ModelConfig, mean_len: float, batch: int,
+                          max_seq: int, *, chips: int = 1,
+                          model_axis: int = 16,
+                          kv_bytes_per_el: int = 2) -> tuple[float, float]:
+    """Projected per-step decode memory time (dense, paged) in seconds.
+
+    Dense decode streams the full ``max_seq`` cache row per slot; paged
+    decode streams only the live pages — bytes scale with ``mean_len``
+    (rounded up to whole pages is a second-order term at page 16). The
+    ratio dense/paged is the roofline ceiling on the paged decode win at
+    a given ``max_seq / mean_len`` overprovisioning ratio; the measured
+    sweep in benchmarks/bench_kernels.py sits under it.
+    """
+    w_dev = cfg.param_count() * BYTES_PARAM / max(model_axis, 1)
+    per_tok = cfg.kv_bytes_per_token(kv_bytes_per_el)
+    dense = w_dev + per_tok * max_seq * batch / max(chips, 1)
+    paged = w_dev + per_tok * mean_len * batch / max(chips, 1)
+    return dense / HBM_BW, paged / HBM_BW
+
+
 def load_cell(path: str) -> dict:
     with open(path) as f:
         return json.load(f)

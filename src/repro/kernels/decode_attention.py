@@ -15,6 +15,18 @@ cache. TPU-native split-K design:
 
 VMEM: k,v chunks 2·256·128·2B = 128 KB + q/acc ≈ negligible — far under
 budget, leaving room for the pipeline's double buffering.
+
+Paged variant (``paged_decode_attention``): the cache is a shared pool of
+``[P, page, KVH, hd]`` physical pages addressed through a per-sequence
+block table ``[B, maxP]`` (sentinel ``P`` = unmapped). The table rides the
+grid as a SCALAR-PREFETCH argument (``pltpu.PrefetchScalarGridSpec``), so
+the k/v BlockSpec index_maps translate (sequence, logical page) ->
+physical page BEFORE the DMA is issued — the kernel streams exactly the
+pages the sequence owns, never the dead tail of a dense max_seq row. One
+grid split per logical page; splits past the valid length skip via
+``pl.when`` exactly like the dense tail masking, so the HBM bytes scale
+with the LIVE cache, not the allocation. The int8 twin fuses per-token
+dequant in VMEM like the dense path.
 """
 from __future__ import annotations
 
@@ -178,4 +190,130 @@ def decode_attention_int8(q, k_cache, v_cache, k_scale, v_scale, lengths, *,
         ],
         interpret=interpret,
     )(lens, qr, kr, ksr, vr, vsr)
+    return out.reshape(B, H, hd)
+
+
+def _paged_specs(P, page, KVH, G, hd, *, scales: bool):
+    """BlockSpecs for the paged pools: the block-table scalar-prefetch ref
+    feeds each index_map, translating (sequence bh, logical page j) to the
+    PHYSICAL page the DMA streams. Sentinel entries clamp to P-1 — they
+    only occur past the valid length, where ``pl.when`` skips the split
+    anyway."""
+    def page_idx(bh, j, tab):
+        return (jnp.minimum(tab[bh // KVH, j], P - 1), bh % KVH, 0, 0)
+
+    def scale_idx(bh, j, tab):
+        return (jnp.minimum(tab[bh // KVH, j], P - 1), bh % KVH, 0)
+
+    specs = [
+        pl.BlockSpec((1,), lambda bh, j, tab: (bh,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, G, hd), lambda bh, j, tab: (bh, 0, 0)),
+        pl.BlockSpec((1, 1, page, hd), page_idx),
+        pl.BlockSpec((1, 1, page, hd), page_idx),
+    ]
+    if scales:
+        specs.insert(3, pl.BlockSpec((1, 1, page), scale_idx))
+        specs.append(pl.BlockSpec((1, 1, page), scale_idx))
+    return specs
+
+
+def _paged_dec_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                      num_pages_logical: int, ks_ref=None, vs_ref=None):
+    """One (bh, logical-page) grid step. k/v_ref: [1, 1, page, hd] — the
+    physical page the index_map resolved through the block table."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = j * page
+
+    @pl.when(k_start < length)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [page, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0][:, None]                 # fused dequant
+            v = v * vs_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, page]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(j == num_pages_logical - 1)
+    def _fin():
+        o_ref[0, ...] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, lengths, *,
+                           interpret: bool = True,
+                           k_scale=None, v_scale=None):
+    """Single-token attention over a PAGED KV cache.
+
+    q: [B, H, hd]; k/v_pool: [P, page, KVH, hd]; table: [B, maxP] int32
+    block table (sentinel ``P`` = unmapped); lengths: [B] valid tokens.
+    Optional ``k_scale``/``v_scale`` [P, page, KVH] turn on the fused
+    int8-dequant path. Returns [B, H, hd] in q.dtype.
+    """
+    B, H, hd = q.shape
+    P, page, KVH = k_pool.shape[:3]
+    nP = table.shape[1]
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    int8 = k_scale is not None
+
+    qr = q.reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
+    kr = k_pool.transpose(0, 2, 1, 3)                  # [P, KVH, page, hd]
+    vr = v_pool.transpose(0, 2, 1, 3)
+    lens = jnp.repeat(lengths.astype(jnp.int32), KVH)  # [B*KVH]
+
+    if int8:
+        ksr = k_scale.transpose(0, 2, 1)               # [P, KVH, page]
+        vsr = v_scale.transpose(0, 2, 1)
+
+        def kernel(tab_ref, len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                   o_ref, m_scr, l_scr, acc_scr):
+            _paged_dec_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                              m_scr, l_scr, acc_scr, scale=scale, page=page,
+                              num_pages_logical=nP, ks_ref=ks_ref,
+                              vs_ref=vs_ref)
+        args = (table.astype(jnp.int32), lens, qr, kr, ksr, vr, vsr)
+    else:
+        kernel = functools.partial(_paged_dec_kernel, scale=scale,
+                                   page=page, num_pages_logical=nP)
+        args = (table.astype(jnp.int32), lens, qr, kr, vr)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * KVH, nP),
+        in_specs=_paged_specs(P, page, KVH, G, hd, scales=int8),
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, j, tab: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(*args)
     return out.reshape(B, H, hd)

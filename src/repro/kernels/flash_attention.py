@@ -151,3 +151,121 @@ def flash_attention(q, k, v, *, causal: bool = True, prefix_len: int = 0,
     out = (out.reshape(B, KVH, nq, G, block_q, hd).transpose(0, 2, 4, 1, 3, 5)
            .reshape(B, Sq, H, hd))
     return out
+
+
+def _paged_ext_kernel(tab_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                      o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                      page: int, num_pages_logical: int, chunk: int):
+    """One (bh, kv-step) grid step of the paged extend (chunked prefill
+    continued from a paged cache).
+
+    Steps ``j < nP`` stream physical page ``table[b, j]`` ([1,1,page,hd])
+    masked to the row's cached length ``pos[b]``; the LAST step folds the
+    chunk's own K/V ([1,chunk,hd]) under the causal triangle. q_ref:
+    [1, G*chunk, hd] (grouped heads stacked into rows, as in the dense
+    flash kernel)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+
+    def _fold(s, v):
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(jnp.logical_and(j < num_pages_logical, j * page < pos))
+    def _page_step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [G*C, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [page, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G*C, page]
+        k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _fold(jnp.where(k_pos < pos, s, NEG_INF), v)
+
+    @pl.when(j == num_pages_logical)
+    def _chunk_step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [G*C, hd]
+        k = kn_ref[0].astype(jnp.float32)                 # [C, hd]
+        v = vn_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G*C, C]
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % chunk
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _fold(jnp.where(cols <= rows, s, NEG_INF), v)
+        o_ref[0, ...] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_extend_attention(q, k_pool, v_pool, k_new, v_new, table, pos, *,
+                           interpret: bool = True):
+    """Chunked-prefill attention continued from a PAGED cache.
+
+    q: [B, C, H, hd] (the chunk's queries at ragged per-row offsets
+    ``pos``); k/v_pool: [P, page, KVH, hd]; k/v_new: [B, C, KVH, hd] (the
+    chunk's own K/V, NOT yet in the pool); table: [B, maxP] int32 block
+    table (sentinel ``P``); pos: [B] cached tokens per row. Each q row i
+    sees the row's whole cached prefix plus chunk columns <= i. Returns
+    [B, C, H, hd].
+
+    Grid = (B*KVH, maxP + 1): one split per logical page (scalar-prefetch
+    block-table translation, skipped past ``pos``) plus one final split
+    for the chunk's causal triangle.
+    """
+    B, C, H, hd = q.shape
+    P, page, KVH = k_pool.shape[:3]
+    nP = table.shape[1]
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = (q.reshape(B, C, KVH, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(B * KVH, G * C, hd))
+    kr = k_pool.transpose(0, 2, 1, 3)                  # [P, KVH, page, hd]
+    vr = v_pool.transpose(0, 2, 1, 3)
+    knr = k_new.transpose(0, 2, 1, 3).reshape(B * KVH, C, hd)
+    vnr = v_new.transpose(0, 2, 1, 3).reshape(B * KVH, C, hd)
+    posr = jnp.repeat(pos.astype(jnp.int32), KVH)      # [B*KVH]
+
+    def page_idx(bh, j, tab):
+        jj = jnp.minimum(j, nP - 1)   # chunk step: any mapped page (unused)
+        return (jnp.minimum(tab[bh // KVH, jj], P - 1), bh % KVH, 0, 0)
+
+    kernel = functools.partial(_paged_ext_kernel, scale=scale, page=page,
+                               num_pages_logical=nP, chunk=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * KVH, nP + 1),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, j, tab: (bh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G * C, hd), lambda bh, j, tab: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd), page_idx),
+            pl.BlockSpec((1, 1, page, hd), page_idx),
+            pl.BlockSpec((1, C, hd), lambda bh, j, tab: (bh, 0, 0)),
+            pl.BlockSpec((1, C, hd), lambda bh, j, tab: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G * C, hd), lambda bh, j, tab: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G * C, 1), jnp.float32),
+            pltpu.VMEM((G * C, 1), jnp.float32),
+            pltpu.VMEM((G * C, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G * C, hd), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), posr, qr, kr, vr, knr, vnr)
+    return (out.reshape(B, KVH, G, C, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(B, C, H, hd))

@@ -15,7 +15,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.flash_attention import (
+    paged_extend_attention as _paged_extend_pallas,
+)
 from repro.kernels.grouped_matmul import expert_matmul as _gmm_pallas
 from repro.kernels.wkv6 import wkv6 as _wkv6_pallas
 
@@ -54,6 +60,46 @@ def decode_attention(q, k_cache, v_cache, lengths, *, use_pallas: bool = True,
         return _decode_pallas(q, k_cache, v_cache, lengths, block_k=bk,
                               interpret=interpret)
     return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, table, lengths, *,
+                           k_scale=None, v_scale=None,
+                           use_pallas: bool = True, interpret: bool = True):
+    """[B,H,hd] against a paged cache: pools [P,page,KVH,hd] + block table
+    [B,maxP] (sentinel P) + valid ``lengths`` [B] -> [B,H,hd]. Optional
+    [P,page,KVH] scales switch on the fused int8-dequant path."""
+    page, hd = k_pool.shape[1], q.shape[-1]
+    ok = use_pallas and page % 8 == 0 and hd % 8 == 0
+    if ok:
+        return _paged_decode_pallas(q, k_pool, v_pool, table, lengths,
+                                    k_scale=k_scale, v_scale=v_scale,
+                                    interpret=interpret)
+    if k_scale is not None:
+        # XLA fallback dequantises the gathered view before attending
+        kd = (ref.paged_gather_ref(k_pool, table).astype(jnp.float32)
+              * ref.paged_gather_ref(k_scale, table)[..., None])
+        vd = (ref.paged_gather_ref(v_pool, table).astype(jnp.float32)
+              * ref.paged_gather_ref(v_scale, table)[..., None])
+        return ref.decode_attention_ref(q, kd, vd, lengths)
+    return ref.paged_decode_attention_ref(q, k_pool, v_pool, table, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_extend_attention(q, k_pool, v_pool, k_new, v_new, table, pos, *,
+                           use_pallas: bool = True, interpret: bool = True):
+    """Chunked prefill [B,C,H,hd] continued from a paged cache at per-row
+    offsets ``pos`` [B] -> [B,C,H,hd]. The chunk's own K/V ride along
+    (not yet in the pool); the kernel folds them under the causal
+    triangle after streaming the cached pages."""
+    page, hd, C = k_pool.shape[1], q.shape[-1], q.shape[1]
+    ok = (use_pallas and page % 8 == 0 and hd % 8 == 0
+          and C % 8 == 0)
+    if ok:
+        return _paged_extend_pallas(q, k_pool, v_pool, k_new, v_new,
+                                    table, pos, interpret=interpret)
+    return ref.paged_extend_attention_ref(q, k_pool, v_pool, k_new, v_new,
+                                          table, pos)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -47,6 +47,51 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_gather_ref(pool, table):
+    """Materialise a paged pool ([P, page, ...]) as dense per-sequence rows
+    via the block table ([B, maxP] int32, sentinel >= P clamped — the junk
+    it gathers sits past each row's valid length and is masked by the
+    caller). Returns [B, maxP*page, ...]."""
+    P = pool.shape[0]
+    v = pool[jnp.clip(table, 0, P - 1)]          # [B, maxP, page, ...]
+    B, nP, page = v.shape[:3]
+    return v.reshape(B, nP * page, *pool.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, table, lengths):
+    """Paged twin of ``decode_attention_ref``: gather the pages dense,
+    attend over the valid prefix."""
+    return decode_attention_ref(q, paged_gather_ref(k_pool, table),
+                                paged_gather_ref(v_pool, table), lengths)
+
+
+def paged_extend_attention_ref(q, k_pool, v_pool, k_new, v_new, table, pos):
+    """Chunked prefill continued from a paged cache, dense math.
+
+    q: [B,C,H,hd] at per-row offsets ``pos`` [B]; pools [P,page,KVH,hd];
+    k/v_new: [B,C,KVH,hd] (the chunk's own K/V). Row i of the chunk sees
+    cache positions < pos[b] plus chunk columns <= i.
+    """
+    B, C, H, hd = q.shape
+    kc = paged_gather_ref(k_pool, table).astype(jnp.float32)
+    vc = paged_gather_ref(v_pool, table).astype(jnp.float32)
+    S = kc.shape[1]
+    KVH = kc.shape[2]
+    G = H // KVH
+    qg = (q.reshape(B, C, KVH, G, hd) / math.sqrt(hd)).astype(jnp.float32)
+    s_c = jnp.einsum("bikgd,bskd->bkgis", qg, kc)
+    s_c = jnp.where((jnp.arange(S)[None, :] < pos[:, None])
+                    [:, None, None, None, :], s_c, -1e30)
+    s_n = jnp.einsum("bikgd,bjkd->bkgij", qg, k_new.astype(jnp.float32))
+    tri = jnp.arange(C)[None, :] <= jnp.arange(C)[:, None]      # [i, j]
+    s_n = jnp.where(tri[None, None, None], s_n, -1e30)
+    p = jax.nn.softmax(jnp.concatenate([s_c, s_n], axis=-1), axis=-1)
+    o = (jnp.einsum("bkgis,bskd->bkgid", p[..., :S], vc)
+         + jnp.einsum("bkgij,bjkd->bkgid", p[..., S:],
+                      v_new.astype(jnp.float32)))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
+
+
 def grouped_matmul_ref(x, w, group_sizes):
     """x: [T, D]; w: [E, D, F]; group_sizes: [E] with sum == T.
 

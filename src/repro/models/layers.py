@@ -180,7 +180,8 @@ def flash_attention_xla(q, k, v, *, causal: bool, q_offset=0, prefix_len: int = 
     return o.astype(q.dtype)
 
 
-def extend_attention(q, k_cache, v_cache, k_new, v_new, pos):
+def extend_attention(q, k_cache, v_cache, k_new, v_new, pos, *,
+                     pad_sum_to: Optional[int] = None):
     """Chunk attention against a [B,S,KVH,hd] cache (prefill continuation).
 
     q: [B,C,H,hd]; k_new/v_new: [B,C,KVH,hd] — the chunk's own K/V;
@@ -189,6 +190,15 @@ def extend_attention(q, k_cache, v_cache, k_new, v_new, pos):
     The C=1 case is ``decode_attention``'s math with an explicit chunk axis;
     C>1 is what lets the serving engine admit a prompt tail in O(log S)
     compiled calls instead of S serial decodes.
+
+    ``pad_sum_to``: when the cache arg is a *paged view* narrower than the
+    logical max_seq, the softmax denominator must still reduce over the full
+    width or its reduction tree (and hence its low-order bits) drifts from
+    the dense path. Padding the probability tensor with exact zeros up to
+    ``pad_sum_to`` before the sum restores bitwise identity: masked entries
+    underflow to exact 0.0 and IEEE addition of 0.0 is the identity, while
+    XLA sees the same reduction shape as the dense call. ``None`` keeps the
+    original (dense-anchor) HLO byte-for-byte.
     """
     B, C, H, hd = q.shape
     S, KVH = k_cache.shape[1], k_cache.shape[2]
@@ -204,7 +214,11 @@ def extend_attention(q, k_cache, v_cache, k_new, v_new, pos):
     m = jnp.maximum(s.max(axis=-1), s_new.max(axis=-1))            # [B,KVH,G,C]
     p = jnp.exp(s - m[..., None])
     p_new = jnp.exp(s_new - m[..., None])
-    l = p.sum(axis=-1) + p_new.sum(axis=-1)
+    if pad_sum_to is not None and pad_sum_to > S:
+        p_sum = jnp.pad(p, ((0, 0),) * 4 + ((0, pad_sum_to - S),)).sum(axis=-1)
+    else:
+        p_sum = p.sum(axis=-1)
+    l = p_sum + p_new.sum(axis=-1)
     o = jnp.einsum("bkgqs,bskd->bkgqd", p, v_cache.astype(jnp.float32))
     o = o + jnp.einsum("bkgqj,bjkd->bkgqd", p_new, v_new.astype(jnp.float32))
     o = o / l[..., None]
@@ -212,13 +226,15 @@ def extend_attention(q, k_cache, v_cache, k_new, v_new, pos):
     return o.astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, k_new, v_new, pos):
+def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *,
+                     pad_sum_to: Optional[int] = None):
     """Single-token attention against a [B,S,KVH,hd] cache.
 
     ``pos``: [B] int32 — number of valid cached tokens per sequence; the new
     token's K/V participate via explicit concat-free accumulation. Softmax
     reductions over a sharded cache-sequence dim lower to all-reduces
-    (flash-decoding across the mesh).
+    (flash-decoding across the mesh). ``pad_sum_to``: see
+    ``extend_attention`` — bitwise parity for narrowed paged views.
     """
     B, _, H, hd = q.shape
     S, KVH = k_cache.shape[1], k_cache.shape[2]
@@ -232,7 +248,11 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, pos):
     m = jnp.maximum(s.max(axis=-1), s_new)
     p = jnp.exp(s - m[..., None])
     p_new = jnp.exp(s_new - m)
-    l = p.sum(axis=-1) + p_new
+    if pad_sum_to is not None and pad_sum_to > S:
+        p_sum = jnp.pad(p, ((0, 0),) * 3 + ((0, pad_sum_to - S),)).sum(axis=-1)
+    else:
+        p_sum = p.sum(axis=-1)
+    l = p_sum + p_new
     o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     o = o + p_new[..., None] * v_new.astype(jnp.float32)[:, :, None, :]
     o = (o / l[..., None]).reshape(B, 1, H, hd)
@@ -248,7 +268,8 @@ def attend(q, k, v, *, causal=True, q_offset=0, prefix_len=0):
 
 
 def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
-                    cache=None, pos=None, cross_kv=None, qkv_delta=None):
+                    cache=None, pos=None, cross_kv=None, qkv_delta=None,
+                    table=None, full_seq=0):
     """Full attention sub-block: projections + rope + attend (+ cache update).
 
     Returns (out, new_cache). ``cache`` is a dict(k=[B,S,KVH,hd], v=...) for
@@ -261,6 +282,13 @@ def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
     prefix plus itself causally, and its K/V are scattered in at
     pos..pos+Sq-1. ``pos is None`` with a cache is the fresh-prefill path
     (emit K/V, ignore the placeholder cache content).
+
+    ``table is not None`` switches the continuation paths to the paged
+    layout: cache leaves are page pools ``[P, page, KVH, ...]`` addressed
+    through the block table (see ``paged_view``). The attention math runs
+    over the gathered ``table.shape[1] * page``-token view with the softmax
+    denominator padded to ``full_seq`` — bitwise identical to the dense
+    path while touching only the pages the table names.
     """
     hd = cfg.resolved_head_dim
     H, KVH = cfg.num_heads, cfg.num_kv_heads
@@ -268,6 +296,7 @@ def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
     cont = cache is not None and pos is not None
     decode = cont and Sq == 1
     extend = cont and Sq > 1
+    paged = cont and table is not None
 
     q_p, k_p, v_p = x @ p["wq"], None, None
     if cross_kv is None:
@@ -306,6 +335,34 @@ def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
     if decode:
         if cross_kv is not None:
             o = attend_cross_decode(q, k, v, cfg)
+        elif paged:
+            if "k_scale" in cache:
+                kc = paged_view(cache["k"], table)
+                vc = paged_view(cache["v"], table)
+                ks_ = paged_view(cache["k_scale"], table)
+                vs_ = paged_view(cache["v_scale"], table)
+                kd = kc.astype(jnp.float32) * ks_[..., None]
+                vd = vc.astype(jnp.float32) * vs_[..., None]
+                o = decode_attention(q, kd.astype(q.dtype), vd.astype(q.dtype),
+                                     k[:, 0], v[:, 0], pos,
+                                     pad_sum_to=full_seq)
+                kq, ksc = quantize_kv(k[:, 0])
+                vq, vsc = quantize_kv(v[:, 0])
+                new_cache = {
+                    "k": _paged_cache_insert(cache["k"], kq, table, pos),
+                    "k_scale": _paged_cache_insert(cache["k_scale"], ksc,
+                                                   table, pos),
+                    "v": _paged_cache_insert(cache["v"], vq, table, pos),
+                    "v_scale": _paged_cache_insert(cache["v_scale"], vsc,
+                                                   table, pos)}
+            else:
+                kc = paged_view(cache["k"], table)
+                vc = paged_view(cache["v"], table)
+                o = decode_attention(q, kc, vc, k[:, 0], v[:, 0], pos,
+                                     pad_sum_to=full_seq)
+                new_cache = {
+                    "k": _paged_cache_insert(cache["k"], k[:, 0], table, pos),
+                    "v": _paged_cache_insert(cache["v"], v[:, 0], table, pos)}
         elif "k_scale" in cache:
             # int8 cache (§Perf H3): dequantize for the attention math (the
             # Pallas decode kernel fuses this into the HBM->VMEM stream on
@@ -334,7 +391,34 @@ def attention_block(cfg, p, x, *, positions, causal=True, prefix_len=0,
             new_cache = {"k": shard(kc, "batch", "cache_seq", "cache_kv_heads", None),
                          "v": shard(vc, "batch", "cache_seq", "cache_kv_heads", None)}
     elif extend:
-        if "k_scale" in cache:
+        if paged:
+            if "k_scale" in cache:
+                kc = paged_view(cache["k"], table)
+                vc = paged_view(cache["v"], table)
+                ks_ = paged_view(cache["k_scale"], table)
+                vs_ = paged_view(cache["v_scale"], table)
+                kd = kc.astype(jnp.float32) * ks_[..., None]
+                vd = vc.astype(jnp.float32) * vs_[..., None]
+                o = extend_attention(q, kd.astype(q.dtype), vd.astype(q.dtype),
+                                     k, v, pos, pad_sum_to=full_seq)
+                kq, ksc = quantize_kv(k)
+                vq, vsc = quantize_kv(v)
+                new_cache = {
+                    "k": _paged_cache_insert_chunk(cache["k"], kq, table, pos),
+                    "k_scale": _paged_cache_insert_chunk(cache["k_scale"],
+                                                         ksc, table, pos),
+                    "v": _paged_cache_insert_chunk(cache["v"], vq, table, pos),
+                    "v_scale": _paged_cache_insert_chunk(cache["v_scale"],
+                                                         vsc, table, pos)}
+            else:
+                kc = paged_view(cache["k"], table)
+                vc = paged_view(cache["v"], table)
+                o = extend_attention(q, kc, vc, k, v, pos,
+                                     pad_sum_to=full_seq)
+                new_cache = {
+                    "k": _paged_cache_insert_chunk(cache["k"], k, table, pos),
+                    "v": _paged_cache_insert_chunk(cache["v"], v, table, pos)}
+        elif "k_scale" in cache:
             ks_ = shard(cache["k_scale"], "batch", "cache_seq", None)
             vs_ = shard(cache["v_scale"], "batch", "cache_seq", None)
             kc = shard(cache["k"], "batch", "cache_seq", "cache_kv_heads", None)
@@ -391,6 +475,60 @@ def _cache_insert_chunk(cache, new, pos):
     rows = jnp.arange(B)[:, None]
     cols = pos[:, None] + jnp.arange(C)[None, :]
     return cache.at[rows, cols].set(new.astype(cache.dtype))
+
+
+# --------------------------------------------------- paged (block-table) KV
+# Page-pool layout: a cache leaf is a shared pool ``[P, page, KVH, ...]`` of
+# P physical pages of ``page`` tokens each (page a power of two), owned by
+# sequences through a block table ``[B, maxP]`` of physical page ids. The
+# sentinel id ``P`` (== pool size, one past the last page) marks unmapped
+# table entries: scatters with ``mode="drop"`` discard writes through it,
+# and gathers clamp it to P-1 — junk that the ``pos`` validity mask already
+# hides, exactly as the dense path hides its own stale rows. Logical token
+# position t of row b lives at ``pool[table[b, t // page], t % page]``.
+# Freed pages return to the allocator (host side, serving.engine) and are
+# re-mapped to other rows — attention only ever reads the pages a table
+# names, so a short sequence stops paying for the dead tail of max_seq.
+
+def paged_view(pool, table):
+    """Gather a dense [B, W, ...] view of the pages ``table`` names.
+
+    pool: [P, page, KVH, ...]; table: [B, p] int32 -> view [B, p*page, ...].
+    W = p*page is the *narrowed* width the caller sliced the table to;
+    sentinel/junk entries clamp to real pages and rely on the ``pos`` mask.
+    The gathered live bits are identical to the dense cache's, so running
+    the dense attention math over this view (with ``pad_sum_to``) is
+    bitwise the dense result.
+    """
+    B, p = table.shape
+    idx = jnp.minimum(table, pool.shape[0] - 1)
+    v = pool[idx]                                  # [B, p, page, ...]
+    return v.reshape(B, p * pool.shape[1], *pool.shape[2:])
+
+
+def _paged_cache_insert(pool, new, table, pos):
+    """Paged counterpart of ``_cache_insert``: one token per row.
+
+    pool: [P, page, ...]; new: [B, ...]; table: [B, p]; pos: [B] logical
+    offsets. Rows whose table entry is the sentinel (or whose pos falls
+    outside the sliced table width) drop their write — that is how masked
+    rows and freed slots stay untouched without a select over the pool.
+    """
+    page = pool.shape[1]
+    pidx = jnp.clip(pos // page, 0, table.shape[1] - 1)
+    phys = jnp.take_along_axis(table, pidx[:, None], axis=1)[:, 0]
+    return pool.at[phys, pos % page].set(new.astype(pool.dtype), mode="drop")
+
+
+def _paged_cache_insert_chunk(pool, new, table, pos):
+    """Paged counterpart of ``_cache_insert_chunk``: a C-token chunk per row
+    at logical offsets pos..pos+C-1 (chunks may straddle page boundaries)."""
+    C = new.shape[1]
+    page = pool.shape[1]
+    cols = pos[:, None] + jnp.arange(C)[None, :]          # [B, C] logical
+    pidx = jnp.clip(cols // page, 0, table.shape[1] - 1)
+    phys = jnp.take_along_axis(table, pidx, axis=1)       # [B, C] physical
+    return pool.at[phys, cols % page].set(new.astype(pool.dtype), mode="drop")
 
 
 def quantize_kv(x):

@@ -122,7 +122,8 @@ def _zamba_grouping(cfg) -> tuple[int, int, int]:
 # attention-trunk forward (dense / moe / encdec / vlm)
 # =====================================================================
 def _trunk_layer(cfg, parallel, p, x, positions, *, prefix_len=0, cache=None,
-                 pos=None, cross=None, enc_out=None, causal=True):
+                 pos=None, cross=None, enc_out=None, causal=True,
+                 table=None, full_seq=0):
     """One decoder layer. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm({"scale": p["ln1"]}, x, cfg.norm_eps)
@@ -138,7 +139,8 @@ def _trunk_layer(cfg, parallel, p, x, positions, *, prefix_len=0, cache=None,
     else:
         o, new_cache = Lyr.attention_block(
             cfg, p["attn"], h, positions=positions, causal=causal,
-            prefix_len=prefix_len, cache=cache, pos=pos)
+            prefix_len=prefix_len, cache=cache, pos=pos,
+            table=table, full_seq=full_seq)
     x = x + o
     if cross is not None:
         h = rmsnorm({"scale": cross["ln"]}, x, cfg.norm_eps)
@@ -155,14 +157,20 @@ def _trunk_layer(cfg, parallel, p, x, positions, *, prefix_len=0, cache=None,
 
 def _scan_trunk(cfg, parallel, trunk, x, positions, *, prefix_len=0,
                 caches=None, pos=None, cross=None, enc_kv=None, causal=True,
-                remat=False):
-    """Scan the L-stacked trunk. ``caches``/``enc_kv`` carry a leading L dim."""
+                remat=False, table=None, full_seq=0):
+    """Scan the L-stacked trunk. ``caches``/``enc_kv`` carry a leading L dim.
+
+    ``table`` (paged mode) is shared by every layer — the block table maps a
+    slot's logical positions to physical pages once, while each layer owns
+    its own page pool slice of the scanned cache — so it rides the closure,
+    not the scan carry."""
     def body(carry, xs):
         x, aux = carry
         p_l, cache_l, cross_l, enc_l = xs
         x, new_cache, aux_l = _trunk_layer(
             cfg, parallel, p_l, x, positions, prefix_len=prefix_len,
-            cache=cache_l, pos=pos, cross=cross_l, enc_out=enc_l, causal=causal)
+            cache=cache_l, pos=pos, cross=cross_l, enc_out=enc_l,
+            causal=causal, table=table, full_seq=full_seq)
         return (x, aux + aux_l), new_cache
 
     if remat:
@@ -428,6 +436,9 @@ def extend_fn(cfg: ModelConfig, parallel: Optional[ParallelConfig], params,
     tokens = inputs["tokens"]          # [B, C] int32
     B, C = tokens.shape
     pos = cache["pos"]                 # [B] valid lengths (per-row)
+    table = cache.get("table")         # paged mode: [B, p] block table
+    span = cache.get("span")           # paged mode: static max_seq marker
+    full_seq = span.shape[0] if span is not None else 0
     x = Lyr.embed(params["embed"], tokens, cfg)
     positions = pos[:, None] + jnp.arange(C)[None, :]   # [B, C]
 
@@ -443,14 +454,18 @@ def extend_fn(cfg: ModelConfig, parallel: Optional[ParallelConfig], params,
         cross = {"ln": params["cross"]["ln"], "attn": params["cross"]["attn"]}
         x, new_kv, _ = _scan_trunk(cfg, parallel, params["layers"], x,
                                    positions, caches=cache["kv"], pos=pos,
-                                   cross=cross, enc_kv=cache["enc_kv"])
+                                   cross=cross, enc_kv=cache["enc_kv"],
+                                   table=table, full_seq=full_seq)
         new_cache = {"kv": new_kv, "enc_kv": cache["enc_kv"], "pos": pos + C}
     else:
         # dense / moe / vlm: any prefix (VLM patches, prior prompt chunks)
         # is already in the cache; the chunk itself is text-only.
         x, new_kv, _ = _scan_trunk(cfg, parallel, params["layers"], x,
-                                   positions, caches=cache["kv"], pos=pos)
+                                   positions, caches=cache["kv"], pos=pos,
+                                   table=table, full_seq=full_seq)
         new_cache = {"kv": new_kv, "pos": pos + C}
+    if table is not None:
+        new_cache["table"], new_cache["span"] = table, span
 
     x = rmsnorm({"scale": params["final_norm"]}, x[:, -1:], cfg.norm_eps)
     logit = Lyr.logits(params["embed"], x, cfg)
@@ -463,6 +478,9 @@ def decode_fn(cfg: ModelConfig, parallel: Optional[ParallelConfig], params,
     token = inputs["token"]            # [B] int32
     B = token.shape[0]
     pos = cache["pos"]                 # [B] valid lengths
+    table = cache.get("table")         # paged mode: [B, p] block table
+    span = cache.get("span")           # paged mode: static max_seq marker
+    full_seq = span.shape[0] if span is not None else 0
     x = Lyr.embed(params["embed"], token[:, None], cfg)
     positions = pos[:, None]
 
@@ -478,12 +496,16 @@ def decode_fn(cfg: ModelConfig, parallel: Optional[ParallelConfig], params,
         cross = {"ln": params["cross"]["ln"], "attn": params["cross"]["attn"]}
         x, new_kv, _ = _scan_trunk(cfg, parallel, params["layers"], x,
                                    positions, caches=cache["kv"], pos=pos,
-                                   cross=cross, enc_kv=cache["enc_kv"])
+                                   cross=cross, enc_kv=cache["enc_kv"],
+                                   table=table, full_seq=full_seq)
         new_cache = {"kv": new_kv, "enc_kv": cache["enc_kv"], "pos": pos + 1}
     else:
         x, new_kv, _ = _scan_trunk(cfg, parallel, params["layers"], x,
-                                   positions, caches=cache["kv"], pos=pos)
+                                   positions, caches=cache["kv"], pos=pos,
+                                   table=table, full_seq=full_seq)
         new_cache = {"kv": new_kv, "pos": pos + 1}
+    if table is not None:
+        new_cache["table"], new_cache["span"] = table, span
 
     x = rmsnorm({"scale": params["final_norm"]}, x, cfg.norm_eps)
     logit = Lyr.logits(params["embed"], x, cfg)
@@ -504,9 +526,16 @@ def quantize_decode_cache(cache: dict) -> dict:
         qv, sv = jax.vmap(jax.vmap(quantize_kv, in_axes=1, out_axes=1))(v)
         return {"k": qk, "k_scale": sk, "v": qv, "v_scale": sv}
 
+    def q_pool(kv):
+        # paged pools: [L, P, page, KVH, hd] — quantize_kv is shape-generic
+        # over leading dims, so pages quantize exactly like token rows
+        qk, sk = quantize_kv(kv["k"])
+        qv, sv = quantize_kv(kv["v"])
+        return {"k": qk, "k_scale": sk, "v": qv, "v_scale": sv}
+
     out = dict(cache)
     if "kv" in cache and cache["kv"] is not None and "k" in cache["kv"]:
-        out["kv"] = q_tree(cache["kv"])
+        out["kv"] = (q_pool if "table" in cache else q_tree)(cache["kv"])
     return out
 
 
@@ -529,3 +558,61 @@ def make_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
         return {"kv": _stacked_cache(cfg, cfg.num_layers, B, S, dtype),
                 "enc_kv": enc_kv, "pos": pos}
     return {"kv": _stacked_cache(cfg, cfg.num_layers, B, S, dtype), "pos": pos}
+
+
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Paged KV applies to the GQA attention-trunk families (dense / moe /
+    vlm / encdec self-attention, incl. the int8 cache). MLA latents and the
+    recurrent families (ssm / hybrid) carry O(1)-per-token state, not a
+    max_seq cache — there is nothing dead to stop attending over, so they
+    pass through on the dense layout untouched."""
+    return cfg.family not in ("ssm", "hybrid") and not cfg.use_mla
+
+
+def make_paged_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                            page_size: int = 16,
+                            num_pages: Optional[int] = None, dtype=None):
+    """Paged (block-table) decode cache for the GQA attention-trunk families.
+
+    Layout (see ``layers.paged_view``): each layer's K/V leaf is a shared
+    pool ``[L, P, page, KVH, hd]`` of ``P = num_pages`` physical pages;
+    one block table ``[B, maxP]`` (shared by all layers — every layer
+    stores the same logical positions) maps a slot's logical pages to
+    physical ones, sentinel ``P`` marking unmapped entries. ``span`` is a
+    zero-length-S marker leaf whose *shape* carries the static logical
+    max_seq into jit (the paged softmax pads its denominator to it for
+    bitwise parity with the dense layout). ``num_pages`` defaults to the
+    dense equivalent capacity ``batch * max_seq / page_size``; giving an
+    engine the same byte budget but more slots than the dense layout could
+    hold is the paged throughput story.
+    """
+    if page_size & (page_size - 1) or page_size <= 0:
+        raise ValueError(f"page_size {page_size} must be a power of two")
+    if max_seq % page_size:
+        raise ValueError(f"max_seq {max_seq} not a multiple of page_size")
+    if not supports_paged_cache(cfg):
+        raise ValueError(f"family {cfg.family!r} (use_mla={cfg.use_mla}) "
+                         "has no paged layout — use make_decode_cache")
+    dtype = dtype or cfg.dtype
+    B, L = batch, cfg.num_layers
+    hd, KVH = cfg.resolved_head_dim, cfg.num_kv_heads
+    maxP = max_seq // page_size
+    P = num_pages if num_pages is not None else B * maxP
+    if str(dtype) == "int8":
+        kv = {"k": jnp.zeros((L, P, page_size, KVH, hd), jnp.int8),
+              "k_scale": jnp.zeros((L, P, page_size, KVH), jnp.float32),
+              "v": jnp.zeros((L, P, page_size, KVH, hd), jnp.int8),
+              "v_scale": jnp.zeros((L, P, page_size, KVH), jnp.float32)}
+    else:
+        kv = {"k": jnp.zeros((L, P, page_size, KVH, hd), jnp.dtype(dtype)),
+              "v": jnp.zeros((L, P, page_size, KVH, hd), jnp.dtype(dtype))}
+    cache = {"kv": kv,
+             "table": jnp.full((B, maxP), P, jnp.int32),
+             "span": jnp.zeros((max_seq,), jnp.int8),
+             "pos": jnp.zeros((B,), jnp.int32)}
+    if cfg.family == "encdec":
+        Se = cfg.num_prefix_embeddings
+        cache["enc_kv"] = (
+            jnp.zeros((L, B, Se, KVH, hd), jnp.dtype(dtype)),
+            jnp.zeros((L, B, Se, KVH, hd), jnp.dtype(dtype)))
+    return cache

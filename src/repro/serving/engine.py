@@ -40,6 +40,72 @@ not used. ``admit_mode="serial"`` keeps the old one-request-at-a-time
 path (pow2-prefix prefill + B=1 decode tail) as the equivalence
 reference.
 
+Paged KV cache (``paged=True``)
+-------------------------------
+The dense layout burns a full ``max_seq`` cache row per slot and every
+attention call streams all of it, live or dead. The paged layout
+(``models.transformer.make_paged_decode_cache``; GQA attention-trunk
+families — dense / moe / vlm / enc-dec self-attention, incl. int8; MLA
+and recurrent families silently stay dense, their state is O(1) per
+token) replaces rows with a shared pool of ``num_pages`` pages of
+``page_size`` tokens addressed through a per-slot block table:
+
+  * pages for a request's whole contract (prompt + max_new_tokens - 1)
+    are reserved at admission from a host-side free list — admission
+    REJECTS a request that could never fit the pool and simply *waits*
+    when the pool is temporarily exhausted; nothing live is ever evicted
+    to make room, and the admission error path returns every reserved
+    page (no leak);
+  * freed pages (``release_slot``, preempt, finish) recycle to any later
+    request — fragmentation is impossible by construction since pages
+    are interchangeable;
+  * decode runs over the block table SLICED to the smallest power-of-2
+    page count covering the live slots, so short sequences stop paying
+    attention bandwidth for the dead tail of ``max_seq`` — the compile
+    cache stays O(log max_seq/page_size) decode variants (admission
+    extends run at the full table width, keyed only by chunk length,
+    exactly like the dense path);
+  * ``num_pages`` defaults to dense-equivalent capacity
+    (``max_batch * max_seq / page_size``) but the two knobs decouple:
+    the same byte budget can back far more *slots* than the dense
+    layout could hold when typical sequences are short — that is where
+    the paged burst-TTFT win comes from;
+  * the paged attention math is BITWISE the dense math (the gathered
+    page view carries identical live bits; the softmax denominator pads
+    to max_seq — see ``models.layers.paged_view``), so token streams
+    are bit-identical across ``paged`` on/off and every ``admit_mode``.
+
+Async admission (``admit_mode="async"``)
+----------------------------------------
+"batched" still runs a whole admission wave to completion before the
+step's decode — a burst stalls in-flight decodes for the full wave.
+"async" splits admission across steps and interleaves it with decode:
+
+  1. a persistent pending set carries each admitted-but-unfinished
+     prompt tail (slot -> consumed offset) across steps, its slot's
+     pages already reserved (the allocation buffer) while its cache
+     fills chunk by chunk (the insertion buffer) — double-buffered in
+     the JAX async-dispatch sense: the host schedules the next chunk's
+     pages and inserts while the device still runs the previous
+     dispatch, and the decode for live slots queues behind them without
+     a host sync;
+  2. a token-budget arbiter (``admit_token_budget``, default
+     ``max_seq`` tokens per step) spends each step's budget on, in
+     order: one guaranteed descending-pow-2 extend chunk for the oldest
+     tails (no starvation), new-request bucket prefills, then leftover
+     budget on more tail chunks — so fresh bursts never stall in-flight
+     decodes for more than a bounded slice of work;
+  3. the step's decode then runs over live slots with pending slots
+     row-masked (dense: cache select; paged: their table rows sentinel
+     out, so their in-flight pages are untouched).
+
+``admit_mode="serial"`` still guarantees: exact one-request-at-a-time
+admission order, one prefill + B=1 decode tail per request, and the
+pinned reference token stream — "batched" and "async" are REQUIRED to
+reproduce it bit-identically (per-(seed, rid, token-index) sampling keys
+make streams independent of admission interleaving), which is what the
+equivalence tests pin.
+
 Sampling policy: every token draw uses a key derived from (engine seed,
 request id, token index) — see ``serving.sampling.fold_keys`` — so a
 request's token stream is bit-identical regardless of admission order,
@@ -191,6 +257,29 @@ def insert_cache_rows(engine_cache, group_cache, slots):
     return jax.tree.map(ins, engine_cache, group_cache)
 
 
+@jax.jit
+def insert_cache_pages(pool_kv, group_kv, page_map):
+    """Scatter a batched DENSE prefill's kv cache ([L, kb, S, ...] leaves)
+    into the engine's paged pools ([L, P, page, ...] leaves): row ``r``'s
+    tokens land in physical pages ``page_map[r]`` ([kb, npages] int32,
+    with ``npages = ceil(S / page)``). Sentinel entries (>= P) drop their
+    page — how pow2 padding rows AND table entries beyond a slot's
+    reservation are discarded. One compiled call per (bucket, batch)
+    shape, exactly like the dense ``insert_cache_rows``."""
+    def ins(pool, g):
+        g = g.astype(pool.dtype)
+        page = pool.shape[2]
+        L, kb, S = g.shape[:3]
+        npr = page_map.shape[1]
+        if npr * page > S:
+            g = jnp.pad(g, ((0, 0), (0, 0), (0, npr * page - S))
+                        + ((0, 0),) * (g.ndim - 3))
+        g = g.reshape(L, kb, npr, page, *g.shape[3:])
+        return pool.at[:, page_map].set(g, mode="drop")
+
+    return jax.tree.map(ins, pool_kv, group_kv)
+
+
 def _pct(xs, q):
     return float(np.percentile(xs, q)) if xs else 0.0
 
@@ -214,6 +303,13 @@ class EngineMetrics:
     #                            mark — MUST stay 0; nonzero means a request
     #                            was resumed behind its own stream
     shed_tokens: int = 0       # max_new_tokens haircut under brownout
+    # decode-utilization counters (async admission overlap accounting)
+    decode_steps: int = 0      # decode dispatches with >= 1 live row
+    extend_chunks: int = 0     # masked extend-chunk dispatches (admission
+    #                            tails interleaved between decode steps)
+    admit_stall_steps: int = 0 # steps that did admission work with ZERO
+    #                            live decode rows — pure stalls the async
+    #                            pipeline exists to shrink
 
     def summary(self) -> dict:
         ttfts = [r.ttft for r in self.completed if r.ttft is not None]
@@ -232,6 +328,9 @@ class EngineMetrics:
                "lost_tokens": self.lost_tokens,
                "duplicated_tokens": self.duplicated_tokens,
                "shed_tokens": self.shed_tokens,
+               "decode_steps": self.decode_steps,
+               "extend_chunks": self.extend_chunks,
+               "admit_stall_steps": self.admit_stall_steps,
                "mean_ttft": f(ttfts), "mean_tbt": f(tbts), "mean_e2e": f(e2es)}
         # tail percentiles: what the goodput accounting and the serving
         # bench consume — burst admission shows up in p99, not the mean
@@ -245,21 +344,31 @@ class ServingEngine:
     """Continuous-batching engine over one model replica.
 
     ``admit_mode``: "batched" (default — grouped prefill + chunked extend
-    tails) or "serial" (the reference: one request at a time, B=1 decode
-    tail). Token streams are bit-identical between the two.
+    tails), "serial" (the reference: one request at a time, B=1 decode
+    tail) or "async" (admission split across steps and interleaved with
+    decode under a token-budget arbiter). Token streams are bit-identical
+    across all three.
     ``admit_token_budget``: max prompt tokens admitted per step (None =
-    unlimited); bounds TBT inflation for live slots under bursts.
+    unlimited for batched/serial, ``max_seq`` for async); bounds TBT
+    inflation for live slots under bursts.
     ``queue_watermark``: max waiting-queue depth before ``submit`` rejects
     (None = unbounded) — the fail-fast half of backpressure; the
     shed-to-shorter half is ``set_brownout``.
+    ``paged=True`` swaps the dense per-slot cache rows for the shared
+    page pool + block tables (see module docstring); ``page_size`` tokens
+    per page, ``num_pages`` pool size (default: dense-equivalent
+    capacity). Families without a paged layout (MLA, recurrent) silently
+    stay dense.
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, eos_token: int = -1, seed: int = 0,
                  clock=None, admit_mode: str = "batched",
                  admit_token_budget: Optional[int] = None,
-                 queue_watermark: Optional[int] = None):
-        if admit_mode not in ("batched", "serial"):
+                 queue_watermark: Optional[int] = None,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if admit_mode not in ("batched", "serial", "async"):
             raise ValueError(f"admit_mode {admit_mode!r}")
         self.model = model
         self.cfg: ModelConfig = model.cfg
@@ -277,7 +386,35 @@ class ServingEngine:
         self._has_deadlines = False
 
         from repro.models import transformer as T
-        self.cache = T.make_decode_cache(self.cfg, max_batch, max_seq)
+        self.paged = bool(paged) and T.supports_paged_cache(self.cfg)
+        if self.paged:
+            if page_size < 1 or page_size & (page_size - 1):
+                raise ValueError(f"page_size {page_size} not a power of 2")
+            if max_seq % page_size:
+                raise ValueError("max_seq must be a multiple of page_size")
+            self.page_size = page_size
+            self._maxP = max_seq // page_size
+            self.num_pages = (num_pages if num_pages is not None
+                              else max_batch * self._maxP)
+            cache = T.make_paged_decode_cache(
+                self.cfg, max_batch, max_seq, page_size=page_size,
+                num_pages=self.num_pages)
+            # the block table lives HOST-side (allocation is host work);
+            # the span marker is injected per call — the device cache
+            # carries only the pools + pos (+ enc_kv)
+            self._span = cache.pop("span")
+            cache.pop("table")
+            self.cache = cache
+            self._tbl = np.full((max_batch, self._maxP), self.num_pages,
+                                np.int32)
+            self._free_pages = list(range(self.num_pages - 1, -1, -1))
+            self.slot_pages: list[list[int]] = [[] for _ in range(max_batch)]
+            self._slot_len = np.zeros((max_batch,), np.int64)
+        else:
+            self.page_size = 0
+            self.num_pages = 0
+            self._maxP = 0
+            self.cache = T.make_decode_cache(self.cfg, max_batch, max_seq)
         self.active: list[Optional[Request]] = [None] * max_batch
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
         self.new_counts = [0] * max_batch
@@ -290,9 +427,15 @@ class ServingEngine:
                                     jnp.zeros((max_batch,), jnp.int32))
         self.waiting: deque[Request] = deque()
         self.metrics = EngineMetrics(completed=[])
+        # async mode: admitted-but-unfinished prompt tails carried across
+        # steps (slot -> [req, full_prompt, consumed]); the slot's pages /
+        # cache row are already reserved while the arbiter fills them
+        self._pend: dict[int, list] = {}
         self._decode = jax.jit(model.decode_fn)
         self._prefill = jax.jit(model.prefill_fn)
         self._extend = jax.jit(self._masked_extend)
+        self._extend_paged = jax.jit(self._masked_extend_paged)
+        self._decode_masked = jax.jit(self._masked_decode)
         # zeros template for the serial-mode B=1 prompt-tail continuation;
         # built lazily — batched mode (the default) never needs it
         self._b1_cache = None
@@ -345,6 +488,119 @@ class ServingEngine:
             return jnp.where(m, new, old)
 
         return logits, jax.tree.map(sel, new_cache, cache)
+
+    def _masked_extend_paged(self, params, tokens, mask, cache):
+        """Paged twin of ``_masked_extend``: masked rows' block-table rows
+        are swapped for the sentinel INSIDE the jit, so their page writes
+        drop at the scatter (no post-hoc cache select over the shared
+        pools — a pool page belongs to exactly one slot) and their ``pos``
+        is restored. Runs at the FULL table width so the compile cache is
+        keyed only by chunk length, like the dense path."""
+        tbl = jnp.where(mask[:, None], cache["table"], self.num_pages)
+        logits, new_cache = self.model.extend_fn(
+            params, {"tokens": tokens}, {**cache, "table": tbl})
+        new_cache["pos"] = jnp.where(mask, new_cache["pos"], cache["pos"])
+        new_cache["table"] = cache["table"]
+        return logits, new_cache
+
+    def _masked_decode(self, params, inputs, mask, cache):
+        """Async-mode decode with pending-admission rows masked out. Dense:
+        masked rows keep their old cache bits (tree select, same rule as
+        ``_masked_extend``). Paged: masked rows' table rows sentinel out so
+        their in-flight pages are untouched, and their ``pos`` is
+        restored."""
+        if self.paged:
+            tbl = jnp.where(mask[:, None], cache["table"], self.num_pages)
+            logits, new_cache = self.model.decode_fn(
+                params, inputs, {**cache, "table": tbl})
+            new_cache["pos"] = jnp.where(mask, new_cache["pos"],
+                                         cache["pos"])
+            new_cache["table"] = cache["table"]
+            return logits, new_cache
+        logits, new_cache = self.model.decode_fn(params, inputs, cache)
+
+        def sel(new, old):
+            m = mask if new.ndim <= 1 else mask.reshape(
+                (1, new.shape[1]) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+
+        return logits, jax.tree.map(sel, new_cache, cache)
+
+    # --------------------------------------------------------------- pages
+    def _call_cache(self, width: int) -> dict:
+        """Assemble the per-call paged cache: device pools + the host block
+        table sliced to ``width`` pages + the span marker. The table is
+        tiny ([B, width] int32) so re-uploading it per dispatch is noise
+        next to the attention it saves."""
+        return {**self.cache,
+                "table": jnp.asarray(self._tbl[:, :width]),
+                "span": self._span}
+
+    @staticmethod
+    def _strip_table(new_cache: dict) -> dict:
+        """Drop the per-call table/span from a returned cache — the block
+        table is host state; only pools + pos (+ enc_kv) persist."""
+        new_cache.pop("table", None)
+        new_cache.pop("span", None)
+        return new_cache
+
+    def _pages_needed(self, req: Request, prefix: int) -> int:
+        """Pages covering the request's whole contract: prompt + prefix +
+        (max_new_tokens - 1) cache positions — the final sampled token
+        never writes KV. Reserved up front at admission so a request can
+        never strand mid-decode out of pages."""
+        total = prefix + len(req.prompt) + req.max_new_tokens - 1
+        return -(-total // self.page_size)
+
+    def _alloc_pages(self, slot: int, need: int) -> None:
+        """Reserve ``need`` pages for ``slot`` from the free list and point
+        the slot's block-table row at them (rest stays sentinel). Caller
+        has already checked availability."""
+        pages = [self._free_pages.pop() for _ in range(need)]
+        self.slot_pages[slot] = pages
+        self._tbl[slot, :] = self.num_pages
+        self._tbl[slot, :need] = pages
+
+    def _decode_width(self, live: list) -> int:
+        """Smallest power-of-2 page count covering every live row's NEXT
+        token write (undersized widths would clip the write into another
+        slot's page). Dead/pending rows don't count — their table rows are
+        sentinel at decode time. O(log max_seq/page) distinct widths."""
+        need = 1
+        for i in live:
+            need = max(need, int(self._slot_len[i]) + 1)
+        pages = -(-need // self.page_size)
+        pw = 1
+        while pw < pages:
+            pw <<= 1
+        return min(pw, self._maxP)
+
+    def _insert_group_cache(self, gcache: dict, slots: np.ndarray) -> int:
+        """Scatter a batched (or B=1) DENSE prefill cache into engine
+        slots; paged mode routes the kv leaves through the page pools and
+        everything else ([B]-batched pos, enc-dec cross KV) through the
+        row scatter. Returns the per-row kv length inserted (0 when
+        dense — only the paged length mirror needs it)."""
+        if not self.paged:
+            self.cache = insert_cache_rows(self.cache, gcache,
+                                           jnp.asarray(slots))
+            return 0
+        kv_g = gcache["kv"]
+        S_g = int(next(iter(jax.tree.leaves(kv_g))).shape[2])
+        npr = -(-S_g // self.page_size)
+        pm = np.full((len(slots), npr), self.num_pages, np.int32)
+        for r, s in enumerate(slots):
+            if 0 <= s < self.max_batch:
+                # entries past the slot's reservation stay sentinel, so a
+                # serial-tail cache (padded to max_seq) can't write stray
+                # pages
+                pm[r] = self._tbl[s, :npr]
+        kv_new = insert_cache_pages(self.cache["kv"], kv_g, jnp.asarray(pm))
+        rest_e = {k: v for k, v in self.cache.items() if k != "kv"}
+        rest_g = {k: v for k, v in gcache.items() if k != "kv"}
+        rest_new = insert_cache_rows(rest_e, rest_g, jnp.asarray(slots))
+        self.cache = {**rest_new, "kv": kv_new}
+        return S_g
 
     def _prefill_inputs(self, tokens: np.ndarray) -> dict:
         inputs: dict[str, Any] = {"tokens": jnp.asarray(tokens, jnp.int32)}
@@ -429,7 +685,8 @@ class ServingEngine:
         now = self._clock()
         if self._has_deadlines:
             self._sweep_waiting_deadlines(now)
-        free = [i for i, r in enumerate(self.active) if r is None]
+        free = [i for i, r in enumerate(self.active)
+                if r is None and i not in self._pend]
         admits: list[tuple[int, Request]] = []
         held: list[Request] = []       # backoff-gated, keep queue order
         spent = 0
@@ -458,16 +715,24 @@ class ServingEngine:
                 req.finish_s = self._clock()
                 self.metrics.completed.append(req)
                 continue
+            need = self._pages_needed(req, prefix) if self.paged else 0
             if (len(req.prompt) == 0 or
                     prefix + len(req.prompt) + req.max_new_tokens - 1
-                    > self.max_seq):
-                # can never fit this engine's cache: reject without
-                # consuming a slot (burst-proof: the queue keeps draining)
+                    > self.max_seq or need > self.num_pages):
+                # can never fit this engine's cache (or page pool): reject
+                # without consuming a slot (burst-proof: the queue keeps
+                # draining)
                 self.waiting.popleft()
                 req.finish_s = self._clock()
                 self.metrics.lost_tokens += len(req.tokens)
                 self.metrics.rejected.append(req)
                 continue
+            if self.paged and need > len(self._free_pages):
+                # pool temporarily exhausted: WAIT for live requests to
+                # finish and recycle pages — never evict to make room.
+                # Cannot deadlock: pages are only held by admitted
+                # requests, which retire in bounded steps
+                break
             if (admits and budget is not None and spent + S > budget):
                 break  # budget spent; the rest waits for the next step
             self.waiting.popleft()
@@ -481,7 +746,12 @@ class ServingEngine:
                 if shed_to < want:
                     self.metrics.shed_tokens += want - shed_to
                     req.max_new_tokens = shed_to
-            admits.append((free.pop(0), req))
+            slot = free.pop(0)
+            if self.paged:
+                # recompute after any brownout shed (never more than the
+                # pre-shed `need` the availability check cleared)
+                self._alloc_pages(slot, self._pages_needed(req, prefix))
+            admits.append((slot, req))
             spent += S
         if held:
             self.waiting.extendleft(reversed(held))
@@ -507,16 +777,7 @@ class ServingEngine:
             # ndarray prompts and raise. A resumed request keeps its
             # carried transcript prefix — only tokens sampled during the
             # failed round are rolled back.
-            requeue = []
-            for slot, req in admits:
-                settled = (self.active[slot] is req
-                           or any(r is req for r in self.metrics.completed)
-                           or any(r is req for r in self.metrics.rejected))
-                if not settled:
-                    del req.tokens[req.resumed_from:]
-                    self.release_slot(slot)
-                    requeue.append(req)
-            self.waiting.extendleft(reversed(requeue))
+            self._rollback_admits(admits)
             raise
 
     def _admit_serial(self, slot: int, req: Request) -> None:
@@ -541,7 +802,15 @@ class ServingEngine:
                     req_cache)
                 self.metrics.prefill_calls += 1
         try:
-            self.cache = insert_cache(self.cache, req_cache, slot)
+            if self.paged:
+                self._insert_group_cache(req_cache,
+                                         np.asarray([slot], np.int32))
+                # logical length = the request cache's pos (covers the VLM
+                # patch prefix); NOT the kv length — the serial tail cache
+                # is padded out to max_seq
+                self._slot_len[slot] = int(req_cache["pos"][0])
+            else:
+                self.cache = insert_cache(self.cache, req_cache, slot)
             self._finalize_admits([(slot, req, 0)], logits)
         except Exception:
             self._reject_failed(slot, req)
@@ -560,6 +829,25 @@ class ServingEngine:
             req.prefill_done_s = None
         req.finish_s = self._clock()
         self.metrics.rejected.append(req)
+
+    def _dispatch_extend(self, toks, mask, takers: list, C: int):
+        """One masked extend-chunk dispatch over the full engine batch
+        (dense: cache-select mask; paged: sentinel table rows, full table
+        width). Shared by the batched tail loop and the async arbiter."""
+        if self.paged:
+            logits, new_cache = self._extend_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(mask),
+                self._call_cache(self._maxP))
+            self.cache = self._strip_table(new_cache)
+            for slot in takers:
+                self._slot_len[slot] += C
+        else:
+            logits, self.cache = self._extend(
+                self.params, jnp.asarray(toks), jnp.asarray(mask),
+                self.cache)
+        self.metrics.prefill_calls += 1
+        self.metrics.extend_chunks += 1
+        return logits
 
     def _admit_batched(self, admits: list) -> None:
         """Grouped prefill + shared descending-pow2 extend tails. Operates
@@ -583,8 +871,13 @@ class ServingEngine:
             logits, gcache = self._prefill(self.params,
                                            self._prefill_inputs(toks))
             self.metrics.prefill_calls += 1
-            self.cache = insert_cache_rows(self.cache, gcache,
-                                           jnp.asarray(slots))
+            self._insert_group_cache(gcache, slots)
+            if self.paged:
+                # every row of the bucket group lands at the same logical
+                # length: the group cache's pos (covers the VLM prefix)
+                S_ins = int(gcache["pos"][0])
+                for slot, _req, _full in group:
+                    self._slot_len[slot] = S_ins
             fins = []
             for r, (slot, req, full) in enumerate(group):
                 if bucket == len(full):
@@ -605,9 +898,7 @@ class ServingEngine:
                     toks[slot] = full[cons:cons + C]
                     mask[slot] = True
                     takers.append(slot)
-            logits, self.cache = self._extend(
-                self.params, jnp.asarray(toks), jnp.asarray(mask), self.cache)
-            self.metrics.prefill_calls += 1
+            logits = self._dispatch_extend(toks, mask, takers, C)
             fins = []
             for slot in takers:
                 req, full, cons = pend[slot]
@@ -618,6 +909,168 @@ class ServingEngine:
                 else:
                     pend[slot][2] = cons
             self._finalize_admits(fins, logits)
+
+    # --------------------------------------------------------------- async
+    def _arbiter(self, budget: int, *, force: bool = False) -> int:
+        """Spend up to ``budget`` prompt tokens advancing pending tails in
+        descending-pow-2 chunks (every pending row with at least a full
+        chunk remaining rides each dispatch). ``force`` guarantees one
+        minimal chunk even on an exhausted budget, so tails can never
+        starve behind a continuous arrival stream. Returns tokens spent."""
+        spent = 0
+        while self._pend:
+            remaining = budget - spent
+            if remaining < 1:
+                if not (force and spent == 0):
+                    break
+                remaining = 1
+            max_rem = max(len(full) - cons
+                          for _req, full, cons in self._pend.values())
+            cap = min(max_rem, remaining)
+            C = 1 << (cap.bit_length() - 1)
+            toks = np.zeros((self.max_batch, C), np.int32)
+            mask = np.zeros((self.max_batch,), bool)
+            takers = []
+            for slot, (_req, full, cons) in self._pend.items():
+                if len(full) - cons >= C:
+                    toks[slot] = full[cons:cons + C]
+                    mask[slot] = True
+                    takers.append(slot)
+            logits = self._dispatch_extend(toks, mask, takers, C)
+            fins = []
+            for slot in takers:
+                entry = self._pend[slot]
+                entry[2] += C
+                if entry[2] == len(entry[1]):
+                    del self._pend[slot]
+                    fins.append((slot, entry[0], slot))
+            self._finalize_admits(fins, logits)
+            spent += C * len(takers)
+        return spent
+
+    def _admit_async(self) -> int:
+        """One bounded slice of admission work: a guaranteed arbiter chunk
+        for in-flight tails, new-request bucket prefills with the
+        remaining budget (tails deferred to ``self._pend``), then leftover
+        budget on more tail chunks. Returns prompt tokens spent (the
+        step's admission-stall accounting)."""
+        now = self._clock()
+        if self._has_deadlines:
+            self._sweep_waiting_deadlines(now)
+        budget = self.admit_token_budget or self.max_seq
+        if self.brownout < 1.0:
+            budget = max(1, int(budget * self.brownout))
+        spent = self._arbiter(budget, force=True)
+        free = [i for i, r in enumerate(self.active)
+                if r is None and i not in self._pend]
+        admits: list[tuple[int, Request]] = []
+        held: list[Request] = []
+        prefix = (self.cfg.num_prefix_embeddings
+                  if self.cfg.family == "vlm" else 0)
+        while self.waiting and free:
+            req = self.waiting[0]
+            if req.not_before_s > now:
+                held.append(self.waiting.popleft())
+                continue
+            S = len(req.prompt) + len(req.tokens)
+            if req.max_new_tokens <= len(req.tokens):
+                self.waiting.popleft()
+                req.finish_s = self._clock()
+                self.metrics.completed.append(req)
+                continue
+            need = self._pages_needed(req, prefix) if self.paged else 0
+            if (len(req.prompt) == 0 or
+                    prefix + len(req.prompt) + req.max_new_tokens - 1
+                    > self.max_seq or need > self.num_pages):
+                self.waiting.popleft()
+                req.finish_s = self._clock()
+                self.metrics.lost_tokens += len(req.tokens)
+                self.metrics.rejected.append(req)
+                continue
+            if self.paged and need > len(self._free_pages):
+                break  # wait for pages to recycle — never evict
+            # admission charges only the bucket prefill this step; the
+            # tail is deferred to the arbiter. Admit unconditionally when
+            # the step has done no work yet (no starvation of oversized
+            # prompts)
+            bucket = 1 << (S.bit_length() - 1)
+            if (admits or spent) and spent + bucket > budget:
+                break
+            self.waiting.popleft()
+            if self.brownout < 1.0 and not req.tokens:
+                want = req.max_new_tokens
+                shed_to = max(1, int(math.ceil(want * self.brownout)))
+                if shed_to < want:
+                    self.metrics.shed_tokens += want - shed_to
+                    req.max_new_tokens = shed_to
+            slot = free.pop(0)
+            if self.paged:
+                self._alloc_pages(slot, self._pages_needed(req, prefix))
+            admits.append((slot, req))
+            spent += bucket
+        if held:
+            self.waiting.extendleft(reversed(held))
+        if admits:
+            for slot, req in admits:
+                self._slot_keys = self._slot_keys.at[slot].set(
+                    self._request_base_key(req))
+            try:
+                self._prefill_async(admits)
+            except Exception:
+                self._rollback_admits(admits)
+                raise
+        spent += self._arbiter(budget - spent)
+        return spent
+
+    def _prefill_async(self, admits: list) -> None:
+        """Bucket-group prefills for a fresh async admission wave;
+        full-bucket prompts finalize immediately, everything else lands in
+        ``self._pend`` for the arbiter (pages/rows already reserved)."""
+        groups: dict[int, list] = {}
+        for slot, req in admits:
+            full = self._effective_prompt(req)
+            bucket = 1 << (len(full).bit_length() - 1)
+            groups.setdefault(bucket, []).append((slot, req, full))
+        for bucket in sorted(groups, reverse=True):
+            group = groups[bucket]
+            kp = 1 << (len(group) - 1).bit_length()
+            toks = np.zeros((kp, bucket), np.int32)
+            slots = np.full((kp,), self.max_batch, np.int32)
+            for r, (slot, _req, full) in enumerate(group):
+                toks[r] = full[:bucket]
+                slots[r] = slot
+            logits, gcache = self._prefill(self.params,
+                                           self._prefill_inputs(toks))
+            self.metrics.prefill_calls += 1
+            self._insert_group_cache(gcache, slots)
+            if self.paged:
+                S_ins = int(gcache["pos"][0])
+                for slot, _req, _full in group:
+                    self._slot_len[slot] = S_ins
+            fins = []
+            for r, (slot, req, full) in enumerate(group):
+                if bucket == len(full):
+                    fins.append((slot, req, r))
+                else:
+                    self._pend[slot] = [req, full, bucket]
+            self._finalize_admits(fins, logits)
+
+    def _rollback_admits(self, admits: list) -> None:
+        """Failed-round cleanup shared with ``_admit``: anything not yet
+        settled (live, pending, completed or rejected) goes back to the
+        front of the queue with clean state and its slot/pages released."""
+        requeue = []
+        for slot, req in admits:
+            settled = (self.active[slot] is req
+                       or (slot in self._pend
+                           and self._pend[slot][0] is req)
+                       or any(r is req for r in self.metrics.completed)
+                       or any(r is req for r in self.metrics.rejected))
+            if not settled:
+                del req.tokens[req.resumed_from:]
+                self.release_slot(slot)
+                requeue.append(req)
+        self.waiting.extendleft(reversed(requeue))
 
     # --------------------------------------------------------------- slots
     def release_slot(self, slot: int) -> None:
@@ -631,7 +1084,16 @@ class ServingEngine:
                 f"slot {slot} out of range [0, {self.max_batch})")
         self.active[slot] = None
         self.new_counts[slot] = 0
+        self._pend.pop(slot, None)
         self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        if self.paged and self.slot_pages[slot]:
+            # recycle: the freed pages go back on the free list and the
+            # block-table row goes all-sentinel, so any stale write into
+            # this slot drops instead of corrupting the pages' next owner
+            self._free_pages.extend(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self._tbl[slot, :] = self.num_pages
+            self._slot_len[slot] = 0
 
     # ----------------------------------------------------- preempt / resume
     def preempt(self, slots: Optional[list] = None) -> list[TranscriptSnapshot]:
@@ -643,10 +1105,16 @@ class ServingEngine:
         other engine serving the same model — continues it bit-identically.
         """
         if slots is None:
-            slots = [i for i, r in enumerate(self.active) if r is not None]
+            slots = ([i for i, r in enumerate(self.active) if r is not None]
+                     + list(self._pend))
         snaps = []
         for slot in slots:
             req = self.active[slot]
+            if req is None and slot in self._pend:
+                # an async-pending admission owes its transcript too: the
+                # prefix already inserted is abandoned (pages/rows freed)
+                # and the resume replays it from the prompt
+                req = self._pend[slot][0]
             if req is None:
                 continue
             seed = req.seed if req.seed is not None else self.seed
@@ -711,12 +1179,19 @@ class ServingEngine:
                  "rejected": len(m.rejected),
                  "timed_out": len(m.timed_out),
                  "waiting": len(self.waiting),
-                 "active": sum(r is not None for r in self.active),
+                 "active": (sum(r is not None for r in self.active)
+                            + len(self._pend)),
                  "evicted": m.evicted}
         books["balanced"] = (
             books["submitted"] == books["completed"] + books["rejected"]
             + books["timed_out"] + books["waiting"] + books["active"]
             + books["evicted"])
+        # decode-utilization ledger: how well admission overlapped decode
+        books["decode_utilization"] = {
+            "decode_steps": m.decode_steps,
+            "extend_chunks": m.extend_chunks,
+            "admit_stall_steps": m.admit_stall_steps,
+        }
         return books
 
     # --------------------------------------------------------------- step
@@ -731,12 +1206,52 @@ class ServingEngine:
                     self.metrics.timed_out.append(r)
                     self.metrics.lost_tokens += len(r.tokens)
                     self.release_slot(i)
-        self._admit()
+            for i in list(self._pend):
+                r = self._pend[i][0]
+                if r.deadline_s is not None and now >= r.deadline_s:
+                    r.finish_s = now
+                    self.metrics.timed_out.append(r)
+                    self.metrics.lost_tokens += len(r.tokens)
+                    self.release_slot(i)   # pops the pend entry too
+        pc_before = self.metrics.prefill_calls
+        if self.admit_mode == "async":
+            self._admit_async()
+        else:
+            self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
+            if self.metrics.prefill_calls > pc_before:
+                # admission ran with nothing to decode against — the stall
+                # the async overlap exists to shrink
+                self.metrics.admit_stall_steps += 1
             return 0
-        logits, self.cache = self._decode(
-            self.params, {"token": self.last_token}, self.cache)
+        if self.admit_mode == "async":
+            # pending-admission rows are masked out of the decode (their
+            # half-filled caches must not move)
+            mask = np.zeros((self.max_batch,), bool)
+            mask[live] = True
+            if self.paged:
+                logits, new_cache = self._decode_masked(
+                    self.params, {"token": self.last_token},
+                    jnp.asarray(mask),
+                    self._call_cache(self._decode_width(live)))
+                self.cache = self._strip_table(new_cache)
+            else:
+                logits, self.cache = self._decode_masked(
+                    self.params, {"token": self.last_token},
+                    jnp.asarray(mask), self.cache)
+        elif self.paged:
+            logits, new_cache = self._decode(
+                self.params, {"token": self.last_token},
+                self._call_cache(self._decode_width(live)))
+            self.cache = self._strip_table(new_cache)
+        else:
+            logits, self.cache = self._decode(
+                self.params, {"token": self.last_token}, self.cache)
+        self.metrics.decode_steps += 1
+        if self.paged:
+            for i in live:
+                self._slot_len[i] += 1
         temps = np.zeros(self.max_batch, np.float32)
         idxs = np.zeros(self.max_batch, np.int32)
         for i in live:
@@ -768,6 +1283,6 @@ class ServingEngine:
         """Drain all waiting + active requests."""
         for _ in range(max_steps):
             n = self.step()
-            if n == 0 and not self.waiting:
+            if n == 0 and not self.waiting and not self._pend:
                 break
         return self.metrics

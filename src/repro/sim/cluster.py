@@ -501,6 +501,15 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
         else:
             sc = None
     arr = rng.poisson(lam, size=(9, seconds)).astype(float)
+    # ticks where a control RESTORES a site: event-driven Planner-S
+    # re-solve points. Without these, a site coming back mid-segment sits
+    # idle until the cadence's next multiple-of-period solve — the L+S
+    # recovery lag the goodput regression pins.
+    restore_ticks: list[int] = []
+    if sc is not None:
+        restore_ticks = sorted(
+            tk for tk, evs in sc.controls.items()
+            if any(e.kind in ("site_up", "grid_restored") for e in evs))
 
     def _apply_controls(alive: np.ndarray, tick: int) -> None:
         """Second-granularity site-health edges for the Planner-S view
@@ -550,9 +559,16 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
                     prev_s = p
                     solves.append(p.solve_seconds)
                     statuses.append(p.status)
-                # next re-solve at the next multiple of the period
+                # next re-solve at the next multiple of the period — or at
+                # the next restore edge, whichever lands first: the next
+                # iteration then re-solves AT the restore with ``alive``
+                # freshly updated instead of waiting out the cadence
                 next_solve = (np.floor(t / period) + 1) * period
                 t_end = min(seconds, int(np.ceil(next_solve)))
+                for rt in restore_ticks:
+                    if t < rt < t_end:
+                        t_end = rt
+                        break
             else:
                 t_end = seconds
             # ---- segment [t, t_end): the plan (and shed geometry) is

@@ -457,9 +457,8 @@ def test_fine_midslot_full_trip_second_granularity(setup):
                   objective="latency", time_limit=20)
     big = int(np.argmax(plan.gpu_used()))
     # the trip outlives the horizon: the comparison isolates detection +
-    # replanning around the dark site (recovery-lag dynamics — L snaps
-    # back instantly at restore while L+S waits a re-solve period — are a
-    # separate, cadence-priced effect)
+    # replanning around the dark site (restoration dynamics are pinned
+    # separately by test_fine_event_driven_resolve_at_grid_restore)
     sc = ScenarioEngine([PowerWiggle(),
                          GridTrip(site=big, start=8, duration=30, depth=1.0,
                                   detect_ticks=1)], seed=0)
@@ -468,6 +467,39 @@ def test_fine_midslot_full_trip_second_granularity(setup):
                              variants=("L", "L+S"))
     assert res.dropped["L"] > 0            # the cliff actually bit
     assert res.dropped["L+S"] <= res.dropped["L"]
+
+
+def test_fine_event_driven_resolve_at_grid_restore(setup):
+    """GRID_RESTORED mid-segment triggers an event-driven Planner-S
+    re-solve AT the restore tick instead of waiting out the cadence
+    (the L+S recovery-lag gap): the solve schedule gains exactly the
+    restore-tick solve, and recovery-window goodput is pinned — L+S
+    reuses the restored site immediately, so it drops no more than
+    blind L, which snaps back to the base plan for free."""
+    table, sites, power, arrivals = setup
+    t = 150
+    arr = arrivals[:, t] * 10.0
+    plan = plan_l(table, sites, power[:, t] * 1e6, arr,
+                  objective="latency", time_limit=20)
+    big = int(np.argmax(plan.gpu_used()))
+    # period 15 makes the cadence useless for recovery: without the
+    # event-driven solve the restored site would sit idle (for the L+S
+    # plan) over ticks [7, 15) — the exact regression this test pins
+    sc = ScenarioEngine([GridTrip(site=big, start=2, duration=5, depth=1.0,
+                                  detect_ticks=0)], seed=0)
+    res = simulate_slot_fine(table, sites, plan, power[:, t] * 1e6, arr,
+                             seconds=20, planner_s_period=15.0, seed=4,
+                             scenario=sc, variants=("L", "L+S"))
+    # cadence alone would solve at t=0 and t=15; the grid_restored
+    # control at tick 7 (= start + duration) must add the third
+    assert len(res.planner_s_solves) == 3
+    assert res.dropped["L"] > 0            # the outage actually bit
+    assert res.dropped["L+S"] <= res.dropped["L"] * 1.05 + 1e-9
+    # recovery window [8, 15): with the restored capacity re-planned in,
+    # L+S latency settles back to the post-cadence steady tail instead
+    # of carrying an idle-site backlog until t=15
+    e2e = res.e2e_per_second["L+S"]
+    assert e2e[10:15].mean() <= max(e2e[16:].mean(), 1e-9) * 1.5 + 1e-9
 
 
 def test_fine_latency_factor_inflates_served_seconds(setup):
