@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_dispatch         fast path    (columnar vs loop dispatch)
     bench_serving          engine       (burst admission serial vs batched)
     bench_resilience       ISSUE 6      (failover goodput under site kills)
+    bench_e2e              ISSUE 8      (co-sim SLO-attributed goodput A/B)
     bench_stickiness       §5.2         (R_L sweep)
     bench_kernels          kernels      (Pallas vs oracle)
     bench_roofline         §Roofline    (dry-run artifact table)
@@ -48,6 +49,7 @@ MODULES = [
     "bench_dispatch",
     "bench_serving",
     "bench_resilience",
+    "bench_e2e",
     "bench_stickiness",
     "bench_kernels",
     "bench_roofline",

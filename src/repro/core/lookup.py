@@ -65,14 +65,42 @@ class Row:
     batch: float               # steady-state decode batch
 
 
+@dataclass(frozen=True)
+class ClassSLO:
+    """Per-class deadline references (isolated run at TP_max / f_max).
+
+    ``slo_ttft``/``slo_tbt`` are the absolute wall-clock deadlines the
+    paper uses to filter table rows (5x the isolated reference). The raw
+    references (``t_ref``, ``tbt_ref``) are kept so a consumer on a
+    *virtual* clock — where one engine tick is one nominal token time —
+    can rescale: ttft_deadline_ticks = SLO_MULTIPLIER * t_ref / tbt_ref,
+    tbt_deadline_ticks = SLO_MULTIPLIER.
+    """
+    t_ref: float               # isolated prefill time [s]
+    tbt_ref: float             # isolated per-token decode time [s]
+    slo_ttft: float            # = SLO_MULTIPLIER * t_ref
+    slo_tbt: float             # = SLO_MULTIPLIER * tbt_ref
+
+    def ttft_deadline_ticks(self, tick_tokens: float = 1.0) -> float:
+        """TTFT deadline in virtual-clock ticks (1 tick ≡ ``tick_tokens``
+        nominal token times at the isolated reference)."""
+        return SLO_MULTIPLIER * self.t_ref / (self.tbt_ref * tick_tokens)
+
+    def tbt_deadline_ticks(self, tick_tokens: float = 1.0) -> float:
+        return SLO_MULTIPLIER / tick_tokens
+
+
 class LookupTable:
     """Dense-keyed lookup with the paper's (c, f, t, l) accessors."""
 
-    def __init__(self, arch: str, hw: HardwareModel, classes, rows):
+    def __init__(self, arch: str, hw: HardwareModel, classes, rows,
+                 slos: Optional[list["ClassSLO"]] = None):
         self.arch = arch
         self.hw = hw
         self.classes: list[ClassProfile] = classes
         self.rows: list[Row] = rows
+        # per-class SLO references; absent only for hand-built tables
+        self.slos: list[ClassSLO] = slos or []
         self._by_key = {(r.cls, r.freq, r.tp, r.load): r for r in rows}
         self._by_class: dict[int, list[Row]] = {}
         for r in rows:
@@ -168,19 +196,22 @@ def build_table(cfg: ModelConfig, trace: WorkloadTrace,
     """
     classes = class_profiles(trace)
     rows: list[Row] = []
+    slos: list[ClassSLO] = []
     freqs = tuple(freq_grid) if freq_grid is not None else hw.frequencies
     tp_max, f_max = max(hw.tp_degrees), hw.f_max
     for c_idx, cp in enumerate(classes):
         # isolated reference at TP_max / f_max defines the class SLOs
         t_ref = _prefill_time(cfg, hw, cp.mean_in, tp_max, 1.0)
         W, K = _tbt_coeffs(cfg, hw, cp.mean_in + cp.mean_out / 2, tp_max, 1.0)
-        slo_ttft = SLO_MULTIPLIER * t_ref
-        slo_tbt = SLO_MULTIPLIER * (W + K)
+        slo = ClassSLO(t_ref=t_ref, tbt_ref=W + K,
+                       slo_ttft=SLO_MULTIPLIER * t_ref,
+                       slo_tbt=SLO_MULTIPLIER * (W + K))
+        slos.append(slo)
         for tp in hw.tp_degrees:
             for freq in freqs:
                 for load in load_grid:
                     r = _row(cfg, hw, c_idx, cp, tp, freq, load)
-                    if r is None or r.ttft > slo_ttft or r.tbt > slo_tbt:
+                    if r is None or r.ttft > slo.slo_ttft or r.tbt > slo.slo_tbt:
                         continue
                     rows.append(r)
-    return LookupTable(cfg.name, hw, classes, rows)
+    return LookupTable(cfg.name, hw, classes, rows, slos=slos)

@@ -65,7 +65,8 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
                warm: Optional[np.ndarray] = None,
                warm_accept_gap: float = 0.01,
                warm_split: Optional[np.ndarray] = None,
-               warm_slack_abs: float = 0.0) -> MilpResult:
+               warm_slack_abs: float = 0.0,
+               warm_slack_unit: Optional[np.ndarray] = None) -> MilpResult:
     """min c.x  s.t.  A_ub x <= b_ub,  A_lb x >= b_lb,  0 <= x <= upper.
 
     ``warm``: a previous solution over the same variable layout; accepted
@@ -74,7 +75,14 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
     ``warm_split``: boolean mask of penalty (slack) columns enabling the
     two-part acceptance test (see module docstring); ``warm_slack_abs``
     is the absolute penalty-part allowance granted when the LP itself
-    carries slack.
+    carries slack. ``warm_slack_unit`` refines that allowance to the
+    actual instance granularity: a per-variable array of the penalty cost
+    of rounding that column by one unit (0 for columns that carry none) —
+    the drought allowance becomes the largest unit among the non-penalty
+    columns the LP left *fractional* (the true integer-rounding frontier)
+    instead of a pool-wide worst case, so warm projections cannot
+    over-admit drops on pools that merely *contain* large-instance
+    groups. When given, it supersedes ``warm_slack_abs``.
     """
     t0 = time.perf_counter()
     n = len(c)
@@ -91,7 +99,8 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
             x_lp = _lp_solution(c, A_ub, b_ub, A_lb, b_lb, ub)
             if x_lp is not None and _warm_accept(c, x, x_lp, warm_split,
                                                  warm_accept_gap,
-                                                 warm_slack_abs):
+                                                 warm_slack_abs,
+                                                 warm_slack_unit):
                 return MilpResult(x=x, status="warm", objective=float(c @ x),
                                   solve_seconds=time.perf_counter() - t0)
 
@@ -143,7 +152,8 @@ def _lp_solution(c, A_ub, b_ub, A_lb, b_lb, ub) -> Optional[np.ndarray]:
     return res.x if res.success else None
 
 
-def _warm_accept(c, x, x_lp, split, gap, slack_abs) -> bool:
+def _warm_accept(c, x, x_lp, split, gap, slack_abs,
+                 slack_unit=None) -> bool:
     """LP-bound acceptance: single-part, or two-part when ``split`` set."""
     if split is None:
         bound = float(c @ x_lp)
@@ -158,8 +168,36 @@ def _warm_accept(c, x, x_lp, split, gap, slack_abs) -> bool:
     cost_allow = (float(c[~m].max()) if drought and (~m).any() else 0.0)
     if cost_x > cost_lp + gap * max(1.0, abs(cost_lp)) + cost_allow:
         return False
-    allow = slack_abs if drought else 0.0
+    allow = _drought_allowance(x_lp, m, slack_abs, slack_unit) \
+        if drought else 0.0
     return pen_x <= pen_lp + gap * max(1.0, abs(pen_lp)) + allow
+
+
+def _drought_allowance(x_lp, split, slack_abs, slack_unit) -> float:
+    """Penalty-part absolute allowance granted inside a drought.
+
+    With ``slack_unit`` (per-variable penalty of a one-unit rounding of
+    that column), the allowance tracks the LP's actual integer frontier:
+    the largest unit among non-penalty columns the LP left fractional —
+    those are the columns an integer point must round, and rounding one
+    down sheds at most its own instance of load. Columns the LP holds at
+    integral values need no rounding, so a pool merely *containing* a
+    large-instance group no longer widens acceptance. Falls back to the
+    largest unit among active columns (degenerate LPs can sit on integer
+    vertices while the warm point still re-rounds), then to the scalar
+    ``slack_abs``.
+    """
+    if slack_unit is None:
+        return slack_abs
+    u = np.asarray(slack_unit, float)
+    zi = ~split & (u > 0)
+    frac = zi & (np.abs(x_lp - np.round(x_lp)) > 1e-6)
+    if frac.any():
+        return float(u[frac].max())
+    active = zi & (x_lp > 1e-9)
+    if active.any():
+        return float(u[active].max())
+    return 0.0
 
 
 def _repair_geq(x, c, A_lb, b_lb, integ, ub, allowed=None) -> None:

@@ -142,14 +142,19 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
                        codes, np.asarray(power_w, float), load_per_class)
           if warm is not None else None)
     # two-part warm acceptance: slack terms tested separately from
-    # completion cost, with a one-instance-granularity allowance in
-    # slack-saturated droughts (see core.milp docstring)
+    # completion cost, with a one-instance allowance *at the granularity
+    # of the columns the LP actually leaves fractional* in slack-
+    # saturated droughts (see core.milp docstring) — a pool-wide
+    # load.max() allowance over-admitted drops whenever the pool merely
+    # contained a large-instance group
     split = np.zeros(nv, bool)
     split[iSl] = True
+    slack_unit = np.zeros(nv)
+    slack_unit[iZ] = DROP_PENALTY * pool.load
     res = solve_milp(c_vec, A_ub=A_ub, b_ub=b_ub, A_lb=A_lb, b_lb=b_lb,
                      integrality=integrality, upper=upper,
                      time_limit=time_limit, warm=x0, warm_split=split,
-                     warm_slack_abs=DROP_PENALTY * float(pool.load.max()))
+                     warm_slack_unit=slack_unit)
     return Plan(columns=cols, counts=np.round(res.x[iZ]).astype(int),
                 unserved=np.maximum(res.x[iSl], 0.0), objective=objective,
                 status=res.status, solve_seconds=res.solve_seconds,

@@ -66,6 +66,93 @@ from repro.core.scheduler import Configurator, DispatchResult, RequestScheduler
 
 SLOT_SECONDS = 900.0            # one Planner-L slot (15 min)
 
+# Straggler knobs calibrated against the Azure-trace latency shapes the
+# streamed generator produces (``calibrate_straggler_knobs`` below, seed 0
+# — pinned by tests/test_sim.py::test_router_straggler_knob_defaults_and
+# _factory and the default-drift regression in tests/test_e2e.py). The
+# pre-calibration defaults (2.0 / 0.25) were guesses: 2.0 left ~50% of
+# headroom between the worst healthy-fleet EWMA excursion (~1.08x fleet
+# median) and the trip point unused — real stragglers below 2x rode
+# free — and 0.25 kept deweighting proportionally far beyond the ~2.8x
+# inflation the workload's own p99/mean tail ratio can explain, i.e. it
+# acted on a signal range the latency shapes say carries no information.
+STRAGGLER_ALPHA = 0.2
+STRAGGLER_THRESHOLD = 1.35
+STRAGGLER_MIN_HAIRCUT = 0.47
+
+
+def calibrate_straggler_knobs(traces=None, *, num_users: int = 1_000_000,
+                              num_sites: int = 4,
+                              duration_s: float = 6 * 3600.0,
+                              window_s: float = 60.0,
+                              alpha: float = STRAGGLER_ALPHA,
+                              seed: int = 0, headroom: float = 1.25):
+    """Derive ``(straggler_threshold, straggler_min_haircut)`` from the
+    Azure-trace latency shapes of ``data.workload.stream_requests``.
+
+    The straggler signal the router observes is per-site mean service
+    latency relative to the fleet median. On a *healthy* fleet that ratio
+    is not 1.0: sites differ in class mix (regional diurnal phase) and
+    every window carries lognormal length-sampling noise, so an
+    uncalibrated threshold either trips on mix noise (too low) or lets
+    real stragglers ride free (too high). This replays a streamed window
+    of the generator's traffic, tracks each site's EWMA of mean nominal
+    service time (prefill-discounted ``lin`` + ``lout``, in token-time
+    units) relative to the fleet median, and returns:
+
+      * ``threshold``: ``headroom`` x the worst healthy fleet-relative
+        EWMA excursion — mix noise can never trip the haircut, and
+        everything above is genuine slowdown;
+      * ``min_haircut``: ``threshold / (p99/mean of the per-request
+        service proxy)`` — the haircut stays *proportional* across the
+        whole inflation range the workload itself can explain (a site
+        stuck on tail-heavy requests inflates its window mean toward the
+        proxy's p99), and floors beyond it: deeper inflation is
+        non-workload pathology where the proportional signal model no
+        longer holds, and the floored residual keeps the site absorbing
+        load so its EWMA can recover via ``observe``.
+    """
+    from repro.data.workload import make_trace, stream_requests
+    if traces is None:
+        traces = [make_trace("coding"), make_trace("conversation")]
+    S = num_sites
+    ewma = np.zeros(S)
+    burn_in = int(np.ceil(3.0 / alpha))        # ~95% settled
+    worst_ewma = 0.0
+    proxy_sum = proxy_n = 0.0
+    proxy_sample: list[np.ndarray] = []
+    nwin = 0
+    for ch in stream_requests(traces, num_users=num_users, num_sites=S,
+                              duration_s=duration_s, chunk_s=window_s,
+                              seed=seed):
+        if len(ch) < 2 * S:
+            continue
+        # nominal service proxy in token-time units: decode is one token
+        # time per output token; prefill tokens batch ~an order of
+        # magnitude cheaper (MFU_PREFILL vs memory-bound decode)
+        proxy = ch.lin / 8.0 + ch.lout
+        proxy_sum += float(proxy.sum())
+        proxy_n += len(proxy)
+        proxy_sample.append(proxy[:: max(len(proxy) // 256, 1)])
+        mean = np.full(S, np.nan)
+        for s in range(S):
+            m = ch.site == s
+            if m.any():
+                mean[s] = proxy[m].mean()
+        rel = mean / max(float(np.nanmedian(mean)), 1e-9)
+        ok = np.isfinite(rel)
+        ewma[ok] = (1 - alpha) * ewma[ok] + alpha * rel[ok]
+        nwin += 1
+        if nwin <= burn_in:
+            continue
+        fleet = float(np.median(ewma[ewma > 0])) if (ewma > 0).any() else 1.0
+        worst_ewma = max(worst_ewma, float(np.max(ewma / max(fleet, 1e-9))))
+    threshold = round(headroom * worst_ewma, 2)
+    tail = np.percentile(np.concatenate(proxy_sample), 99)
+    tail_ratio = float(tail) / max(proxy_sum / max(proxy_n, 1.0), 1e-9)
+    min_haircut = round(min(1.0, max(0.1, threshold / tail_ratio)), 2)
+    return threshold, min_haircut
+
 
 @dataclass
 class HeronRouter:
@@ -77,9 +164,11 @@ class HeronRouter:
     packing: bool = True
     time_limit_l: float = 60.0
     time_limit_s: float = 10.0
-    straggler_alpha: float = 0.2          # EWMA coefficient
-    straggler_threshold: float = 2.0      # deweight sites slower than 2x fleet
-    straggler_min_haircut: float = 0.25   # floor of the graded power haircut
+    straggler_alpha: float = STRAGGLER_ALPHA       # EWMA coefficient
+    # deweight sites slower than threshold x fleet median; floor the
+    # graded haircut — both calibrated (calibrate_straggler_knobs)
+    straggler_threshold: float = STRAGGLER_THRESHOLD
+    straggler_min_haircut: float = STRAGGLER_MIN_HAIRCUT
     planner_method: Method = "auto"       # "monolithic" = exact reference
     planner_workers: Optional[int] = None  # site-ILP process pool size
 

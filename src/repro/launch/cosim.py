@@ -1,0 +1,122 @@
+"""Co-sim launcher: streamed million-user trace replay on live engines.
+
+CLI front-end over ``sim.e2e.simulate_fleet_serving`` — the layer where
+the streamed Azure-shaped request population (``data.workload``) drives
+one live ``ServingEngine`` per site under a fleet ``RoutingPolicy``'s
+plan (power truth plane -> admission budgets + brownout), with scenario
+disturbances hitting the live engines. Prints the SLO-attributed
+served-token goodput summary and optionally writes the full
+``E2EResult`` JSON.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.cosim \\
+      --policy heron --scenario grid_trip --ticks 120 \\
+      [--users 150000] [--sites 4] [--arch llama3.2-1b] \\
+      [--depth 0.7] [--seed 0] [--out artifacts/cosim.json]
+
+``--scenario none`` runs a healthy fleet (capacity/queueing baseline);
+``site_failure`` kills the target site for the middle third of the run;
+``grid_trip`` sheds ``--depth`` of its power instead (a partial trip is
+a brownout, not a kill). Any registered policy name works; see
+``repro.sim.policy.list_policies``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _build_scenario(kind: str, site: int, ticks: int, depth: float,
+                    seed: int):
+    from repro.sim.scenarios import GridTrip, ScenarioEngine, SiteFailure
+    q = ticks // 3
+    if kind == "none":
+        return ScenarioEngine(seed=seed)
+    if kind == "site_failure":
+        return ScenarioEngine([SiteFailure(site=site, start=q, duration=q)],
+                              seed=seed)
+    if kind == "grid_trip":
+        return ScenarioEngine([GridTrip(site=site, start=q, duration=q,
+                                        depth=depth, detect_ticks=2)],
+                              seed=seed)
+    raise SystemExit(f"unknown scenario {kind!r} "
+                     "(choose none|site_failure|grid_trip)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="million-user co-sim: streamed trace replay on live "
+                    "per-site serving engines")
+    ap.add_argument("--policy", default="heron")
+    ap.add_argument("--scenario", default="grid_trip",
+                    choices=["none", "site_failure", "grid_trip"])
+    ap.add_argument("--site", type=int, default=1,
+                    help="scenario target site")
+    ap.add_argument("--depth", type=float, default=0.7,
+                    help="grid trip power-loss fraction (1.0 = dark)")
+    ap.add_argument("--ticks", type=int, default=120)
+    ap.add_argument("--users", type=int, default=150_000)
+    ap.add_argument("--sites", type=int, default=4)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-load-scale", type=float, default=30.0)
+    ap.add_argument("--out", default="",
+                    help="write full E2EResult JSON here")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.data.workload import make_trace
+    from repro.models.api import build
+    from repro.serving.engine import ServingEngine
+    from repro.sim.e2e import simulate_fleet_serving
+    from repro.sim.policy import make_policy
+    from repro.sim.testbed import paper_grid
+
+    g = paper_grid("coding", multiplier=60.0)
+    S = args.sites
+    cfg = smoke_config(args.arch)
+    model = build(cfg)
+    params = model.init_params(jax.random.key(args.seed))
+
+    # right-size per-site decode slots to the site's power share (see
+    # benchmarks/bench_e2e.py for the rationale)
+    pshare = g.power_mw[:S, 200:212].mean(axis=1)
+    pshare = pshare / pshare.sum()
+    batches = np.maximum(2, np.round(16 * pshare)).astype(int)
+
+    def make_engine(site, clock):
+        return ServingEngine(model, params, max_batch=int(batches[site]),
+                             max_seq=64, seed=site, clock=clock)
+
+    policy = make_policy(args.policy, g.table, g.sites[:S], time_limit=20)
+    scenario = _build_scenario(args.scenario, args.site, args.ticks,
+                               args.depth, args.seed)
+    res = simulate_fleet_serving(
+        policy, g.table, g.sites[:S], g.power_mw[:S], make_engine,
+        traces=[make_trace("coding"), make_trace("conversation")],
+        num_users=args.users, ticks=args.ticks,
+        plan_load_scale=args.plan_load_scale, scenario=scenario,
+        seed=args.seed, name=f"cosim_{args.policy}_{args.scenario}")
+
+    d = res.to_json()
+    print(f"{d['name']}: offered {d['offered_requests']} reqs "
+          f"({d['offered_tokens']} tok), completed {d['completed']}, "
+          f"slo-goodput {d['slo_goodput_fraction']:.3f} "
+          f"(raw {d['goodput_fraction']:.3f}), "
+          f"p99 ttft {d['p99_ttft']:.0f} / tbt {d['p99_tbt']:.2f} ticks, "
+          f"dup {d['duplicated_tokens']}, "
+          f"preempt {d['preemptions']} resume {d['resumes']}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(d, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -171,6 +171,7 @@ import numpy as np
 
 from repro.checkpoint.store import TranscriptSnapshot
 from repro.configs.base import ModelConfig
+from repro.stats import percentile
 from repro.models.api import Model
 from repro.serving.sampling import fold_idx, fold_keys, sample_batch
 
@@ -280,8 +281,9 @@ def insert_cache_pages(pool_kv, group_kv, page_map):
     return jax.tree.map(ins, pool_kv, group_kv)
 
 
-def _pct(xs, q):
-    return float(np.percentile(xs, q)) if xs else 0.0
+# shared percentile helper (core.stats): empty samples report NaN, not a
+# fake-perfect 0.0 — an engine that completed nothing has no tail
+_pct = percentile
 
 
 @dataclass

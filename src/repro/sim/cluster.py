@@ -91,6 +91,7 @@ from repro.core.planner_l import Method, Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
 from repro.core.scheduler import Configurator, GroupTable, RequestScheduler
+from repro.stats import percentile
 from repro.sim.record import load_record, write_record
 from repro.sim.scenarios import ScenarioEngine
 
@@ -619,8 +620,9 @@ def simulate_slot_fine(table: LookupTable, sites: list[SiteSpec],
 # ------------------------------------------------------------------
 # engine-level chaos: live ServingEngines under a FaultInjector
 # ------------------------------------------------------------------
-def _pctl(xs, q):
-    return float(np.percentile(xs, q)) if xs else 0.0
+# shared percentile helper (core.stats): empty samples report NaN so a
+# site that served nothing during a trip cannot fake a perfect tail
+_pctl = percentile
 
 
 @dataclass

@@ -45,7 +45,8 @@ import numpy as np
 from repro.core.baselines import (GreedyMinLatencyPolicy, WrrDynamoLLMPolicy)
 from repro.core.lookup import LookupTable
 from repro.core.planner_l import Plan, SiteSpec
-from repro.core.router import HeronRouter
+from repro.core.router import (STRAGGLER_ALPHA, STRAGGLER_MIN_HAIRCUT,
+                               STRAGGLER_THRESHOLD, HeronRouter)
 from repro.core.scheduler import DispatchResult
 
 
@@ -102,9 +103,9 @@ def _heron_factory(objective: str) -> PolicyFactory:
              planner_method: str = "auto",
              planner_workers: Optional[int] = None,
              packing: bool = False,
-             straggler_alpha: float = 0.2,
-             straggler_threshold: float = 2.0,
-             straggler_min_haircut: float = 0.25,
+             straggler_alpha: float = STRAGGLER_ALPHA,
+             straggler_threshold: float = STRAGGLER_THRESHOLD,
+             straggler_min_haircut: float = STRAGGLER_MIN_HAIRCUT,
              **_ignored) -> HeronRouter:
         return HeronRouter(table=table, sites=sites, objective=objective,
                            r_frac=r_frac, time_limit_l=time_limit,

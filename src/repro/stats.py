@@ -1,0 +1,49 @@
+"""Shared order-statistics helpers.
+
+One percentile implementation for every layer that reports latency tails
+(``serving.engine`` summaries, ``sim.cluster`` chaos scorecards, the
+workload generator's class edges), with explicit empty-input semantics.
+
+The historical copies (``_pct`` in serving/engine.py, ``_pctl`` in
+sim/cluster.py) silently reported ``0.0`` for an empty sample — so a
+site that served *nothing* during a grid trip looked like it had a
+perfect p99 TTFT and dragged aggregate tails toward zero. The shared
+helper returns NaN for an empty sample by default (callers that need a
+sentinel pass ``empty=``), and every caller shares numpy's default
+linear interpolation between order statistics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Union
+
+import numpy as np
+
+
+def percentile(xs: Union[Iterable, np.ndarray], q: float, *,
+               empty: float = math.nan) -> float:
+    """q-th percentile of ``xs`` (linear interpolation), ``empty`` when
+    the sample has no elements. NaN — the default — propagates honestly
+    through aggregation instead of under-reporting the tail as 0."""
+    arr = np.asarray(list(xs) if not isinstance(xs, np.ndarray) else xs,
+                     dtype=float)
+    if arr.size == 0:
+        return float(empty)
+    return float(np.percentile(arr, q))
+
+
+def percentiles(xs, qs: Iterable[float], *,
+                empty: float = math.nan) -> list[float]:
+    """Several percentiles of one sample (single sort)."""
+    arr = np.asarray(list(xs) if not isinstance(xs, np.ndarray) else xs,
+                     dtype=float)
+    if arr.size == 0:
+        return [float(empty) for _ in qs]
+    return [float(v) for v in np.percentile(arr, list(qs))]
+
+
+def finite_or(x: float, fallback: float = 0.0) -> float:
+    """Map NaN/inf to ``fallback`` — for JSON consumers that cannot carry
+    NaN (strict parsers); keeps the NaN-propagation inside the library
+    honest while records stay loadable everywhere."""
+    return float(x) if math.isfinite(x) else float(fallback)

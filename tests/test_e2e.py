@@ -1,0 +1,212 @@
+"""Million-user co-sim tests (ISSUE 8).
+
+Four layers under test:
+
+  * the streamed workload generator — chunk-size invariance (the stream
+    is a function of (trace, seed), never of how the caller buffers it);
+  * the co-sim smoke — streamed requests driving live per-site engines
+    through a mid-window grid trip: every engine's delivery ledger must
+    balance, zero duplicated tokens, and the rate-plane dispatched
+    fraction must upper-bound the SLO-attributed served-token fraction
+    (the rate plane assumes every dispatched request completes);
+  * the straggler-knob calibration — the committed defaults must equal
+    what the calibration derives from the generator's latency shapes
+    (default-drift regression: retune the constants when the workload
+    model changes, don't let them silently diverge);
+  * the shared percentile helpers — empty samples are NaN, not 0.0.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.data.workload import make_trace, stream_requests
+from repro.stats import finite_or, percentile, percentiles
+
+TRACES = [make_trace("coding"), make_trace("conversation")]
+
+
+# ------------------------------------------------------------------
+# streamed generator: chunk-size invariance
+# ------------------------------------------------------------------
+def _collect(chunk_s):
+    cols = {k: [] for k in ("rid", "arrival_s", "site", "lin", "lout",
+                            "cls", "kind")}
+    n_chunks = 0
+    for ch in stream_requests(TRACES, num_users=50_000, num_sites=4,
+                              duration_s=1800.0, chunk_s=chunk_s, seed=7):
+        n_chunks += 1
+        assert ch.start_s < ch.end_s
+        assert np.all(ch.arrival_s >= ch.start_s)
+        assert np.all(ch.arrival_s < ch.end_s)
+        assert np.all(np.diff(ch.arrival_s) >= 0)       # sorted in-chunk
+        for k in cols:
+            cols[k].append(getattr(ch, k))
+    return {k: np.concatenate(v) for k, v in cols.items()}, n_chunks
+
+
+def test_stream_chunk_size_invariant():
+    """Same (traces, seed) => bit-identical request stream no matter how
+    the caller chunks it — the generator's internal blocks are fixed."""
+    a, na = _collect(37.0)
+    b, nb = _collect(60.0)
+    c, nc = _collect(900.0)
+    assert na > nb > nc >= 2
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+        np.testing.assert_array_equal(a[k], c[k], err_msg=k)
+    n = len(a["rid"])
+    assert n > 100
+    np.testing.assert_array_equal(np.sort(a["rid"]), np.arange(n))
+    assert np.all((a["site"] >= 0) & (a["site"] < 4))
+    assert np.all((a["cls"] >= 0) & (a["cls"] < 9))
+    assert np.all(a["lin"] >= 1) and np.all(a["lout"] >= 1)
+
+
+def test_stream_seed_sensitivity():
+    def arrivals(seed):
+        return np.concatenate([
+            ch.arrival_s for ch in stream_requests(
+                TRACES, num_users=50_000, num_sites=4, duration_s=1800.0,
+                chunk_s=300.0, seed=seed)])
+    a, b = arrivals(7), arrivals(8)
+    assert len(a) != len(b) or not np.array_equal(a, b)
+
+
+# ------------------------------------------------------------------
+# shared percentile helpers (the three divergent copies collapsed here)
+# ------------------------------------------------------------------
+def test_percentile_empty_is_nan_not_zero():
+    assert math.isnan(percentile([], 99))
+    assert percentile([], 99, empty=-1.0) == -1.0
+    p50, p99 = percentiles([], (50, 99))
+    assert math.isnan(p50) and math.isnan(p99)
+
+
+def test_percentile_matches_numpy():
+    xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+    for q in (0, 25, 50, 90, 99, 100):
+        assert percentile(xs, q) == pytest.approx(np.percentile(xs, q))
+    np.testing.assert_allclose(percentiles(xs, (50, 99)),
+                               np.percentile(xs, [50, 99]))
+
+
+def test_finite_or():
+    assert finite_or(1.5) == 1.5
+    assert finite_or(float("nan")) == 0.0
+    assert finite_or(float("inf"), -2.0) == -2.0
+
+
+# ------------------------------------------------------------------
+# straggler calibration: default-drift regression
+# ------------------------------------------------------------------
+def test_straggler_defaults_match_calibration():
+    """The committed knobs are *derived*, not hand-picked: re-deriving
+    them from the workload generator must reproduce the constants. If
+    this fails, the generator's latency shapes changed — re-run
+    ``calibrate_straggler_knobs()`` and update the constants (and the
+    pinned values in tests/test_sim.py) together."""
+    from repro.core.router import (STRAGGLER_MIN_HAIRCUT,
+                                   STRAGGLER_THRESHOLD, HeronRouter,
+                                   calibrate_straggler_knobs)
+    thr, floor = calibrate_straggler_knobs()
+    assert (thr, floor) == (STRAGGLER_THRESHOLD, STRAGGLER_MIN_HAIRCUT)
+    assert (thr, floor) == (1.35, 0.47)
+    r = HeronRouter(table=None, sites=[])
+    assert r.straggler_threshold == thr
+    assert r.straggler_min_haircut == floor
+
+
+# ------------------------------------------------------------------
+# co-sim smoke: streamed requests on live engines through a grid trip
+# ------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cosim():
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.core.router import HeronRouter
+    from repro.models.api import build
+    from repro.serving.engine import ServingEngine
+    from repro.sim.e2e import simulate_fleet_serving
+    from repro.sim.scenarios import GridTrip, ScenarioEngine
+    from repro.sim.testbed import paper_grid
+
+    g = paper_grid("coding", multiplier=60.0)
+    cfg = smoke_config("llama3.2-1b")
+    model = build(cfg)
+    params = model.init_params(jax.random.key(0))
+
+    def make_engine(site, clock):
+        return ServingEngine(model, params, max_batch=4, max_seq=64,
+                             seed=site, clock=clock)
+
+    ticks = 120
+    scenario = ScenarioEngine(
+        [GridTrip(site=0, start=40, duration=40, depth=1.0,
+                  detect_ticks=2)], seed=0)
+    policy = HeronRouter(table=g.table, sites=g.sites[:4], time_limit_l=10)
+    res, fleet = simulate_fleet_serving(
+        policy, g.table, g.sites[:4], g.power_mw[:4], make_engine,
+        traces=TRACES, num_users=150_000, ticks=ticks,
+        plan_load_scale=30.0, scenario=scenario, seed=0,
+        name="smoke", return_fleet=True)
+    return res, fleet, g
+
+
+def test_cosim_ledger_balances_fleet_wide(cosim):
+    res, fleet, _g = cosim
+    # a few hundred streamed requests actually hit the engines
+    assert 100 < res.offered_requests < 1000
+    # every live engine's books balance (killed engines' work was
+    # preempted and re-routed; the fleet ledger owns those tokens)
+    for eng in fleet.engines:
+        if eng is not None:
+            books = eng.reconcile()
+            assert books["balanced"], books
+    # fleet-wide request conservation after drain
+    assert (res.completed + res.rejected + res.timed_out + res.failed
+            == res.offered_requests)
+    assert res.completed > 0
+
+
+def test_cosim_no_duplicated_tokens(cosim):
+    res, _fleet, _g = cosim
+    assert res.duplicated_tokens == 0
+    # the trip actually happened and work was carried across it
+    assert res.preemptions > 0
+    assert res.resumes > 0
+    assert res.faults, "fault record missing"
+
+
+def test_cosim_slo_attribution(cosim):
+    res, _fleet, _g = cosim
+    assert 0 < res.slo_served_tokens <= res.served_tokens
+    assert res.slo_hits + res.slo_misses == res.completed
+    assert 0.0 < res.slo_goodput_fraction <= res.goodput_fraction <= 1.0
+    assert np.isfinite(res.p99_ttft) and res.p99_ttft >= res.p50_ttft
+    assert np.isfinite(res.p99_tbt) and res.p99_tbt >= res.p50_tbt
+
+
+def test_cosim_rate_plane_upper_bounds_served(cosim):
+    """simulate_week's dispatched-rps goodput assumes every dispatched
+    request completes instantly — it must upper-bound what the live
+    engines could actually serve within SLO."""
+    from repro.sim.cluster import simulate_week
+    from repro.sim.scenarios import GridTrip, ScenarioEngine
+
+    res, _fleet, g = cosim
+    slots = 9
+    wk = simulate_week(
+        "heron", g.table, g.sites[:4], g.power_mw[:4, 200:200 + slots],
+        g.arrivals_rps[:, 200:200 + slots],
+        scenario=ScenarioEngine([GridTrip(site=0, start=3, duration=3,
+                                          depth=1.0, detect_ticks=1)],
+                                seed=0),
+        time_limit=10)
+    served = sum(s.total_served for s in wk.slots)
+    offered = served + sum(s.total_dropped for s in wk.slots)
+    dispatched_fraction = served / max(offered, 1e-9)
+    assert dispatched_fraction >= res.slo_goodput_fraction

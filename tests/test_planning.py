@@ -428,3 +428,37 @@ def test_plan_s_warm_hits_survive_drought(table, sites):
                 <= cold.unserved.sum() + max_row_load + 1e-6)
         prev = warm
     assert hits >= 5, f"warm hits collapsed in drought: {hits}/8"
+
+
+def test_drought_allowance_tracks_lp_frontier():
+    """Warm-accept slack in a drought is proportional to the *fractional*
+    columns' own instance penalty — a pool merely containing a large
+    instance group must not widen acceptance (the old pool-wide
+    ``DROP_PENALTY * load.max()`` bound did exactly that)."""
+    from repro.core.milp import _drought_allowance
+
+    split = np.array([True, False, False, False])
+    unit = np.array([0.0, 10.0, 500.0, 40.0])
+    # LP fractional only on the 10- and 40-unit columns; the 500-unit
+    # column sits integral -> allowance is 40, NOT 500
+    x_lp = np.array([0.3, 1.5, 2.0, 0.5])
+    assert _drought_allowance(x_lp, split, 0.0, unit) == 40.0
+    # all integral -> fall back to the largest *active* unit
+    x_int = np.array([0.3, 1.0, 0.0, 2.0])
+    assert _drought_allowance(x_int, split, 0.0, unit) == 40.0
+    # nothing active -> no allowance at all
+    x_zero = np.array([0.3, 0.0, 0.0, 0.0])
+    assert _drought_allowance(x_zero, split, 0.0, unit) == 0.0
+    # legacy scalar path unchanged when no per-variable units are given
+    assert _drought_allowance(x_lp, split, 123.0, None) == 123.0
+
+
+def test_plan_s_warm_slack_tighter_than_pool_max(table, sites):
+    """The proportional allowance is never looser than the old pool-wide
+    bound: every per-variable unit is <= DROP_PENALTY * load.max()."""
+    from repro.core.planning import ColumnPool
+
+    pool = ColumnPool.dense(table, len(sites))
+    unit = DROP_PENALTY * pool.load
+    assert unit.max() <= DROP_PENALTY * pool.load.max() + 1e-9
+    assert unit.min() < unit.max()          # heterogeneity is real

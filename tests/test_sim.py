@@ -233,17 +233,19 @@ def test_router_straggler_haircut_recovers(setup):
 
 def test_router_straggler_knob_defaults_and_factory(setup):
     """The straggler knobs are constructor parameters with pinned
-    defaults (0.2 / 2.0 / 0.25); explicit defaults are bit-identical to
-    the implicit ones, changed knobs change the haircut, and the policy
-    factory threads all three through ``make_policy``."""
+    *calibrated* defaults (0.2 / 1.35 / 0.47 — derived from the streamed
+    Azure-trace latency shapes by ``calibrate_straggler_knobs``, see the
+    default-drift regression in tests/test_e2e.py); explicit defaults are
+    bit-identical to the implicit ones, changed knobs change the haircut,
+    and the policy factory threads all three through ``make_policy``."""
     table, sites, power, arrivals = setup
     pw = power[:, 0] * 1e6
     r_def = HeronRouter(table=table, sites=sites, time_limit_l=20)
     assert (r_def.straggler_alpha, r_def.straggler_threshold,
-            r_def.straggler_min_haircut) == (0.2, 2.0, 0.25)
+            r_def.straggler_min_haircut) == (0.2, 1.35, 0.47)
     r_exp = HeronRouter(table=table, sites=sites, time_limit_l=20,
-                        straggler_alpha=0.2, straggler_threshold=2.0,
-                        straggler_min_haircut=0.25)
+                        straggler_alpha=0.2, straggler_threshold=1.35,
+                        straggler_min_haircut=0.47)
     r_knb = HeronRouter(table=table, sites=sites, time_limit_l=20,
                         straggler_alpha=0.5, straggler_threshold=1.5,
                         straggler_min_haircut=0.6)
@@ -253,7 +255,7 @@ def test_router_straggler_knob_defaults_and_factory(setup):
             for s in range(1, len(sites)):
                 r.observe_latency(s, 0.5)
     assert (r_def._effective_power(pw) == r_exp._effective_power(pw)).all()
-    assert r_def._effective_power(pw)[0] == pytest.approx(pw[0] * 0.25)
+    assert r_def._effective_power(pw)[0] == pytest.approx(pw[0] * 0.47)
     assert r_knb._effective_power(pw)[0] == pytest.approx(pw[0] * 0.6)
 
     from repro.sim.policy import make_policy
