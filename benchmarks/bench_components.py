@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
@@ -38,7 +39,7 @@ def run(fast: bool = True, trace_name: str = "coding"):
     # safe-sided forecast) — the regime where Planner-S's upclock-on-actual
     # and the packing heuristic have headroom to win (Fig 17's setting)
     slot = 520
-    seconds = 120 if fast else 900
+    seconds = 20 if common.SMOKE else (120 if fast else 900)
 
     with t():
         # Planner-L plans on the safe-sided 15-min power forecast (10%

@@ -13,6 +13,7 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, save_tracker
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
@@ -78,6 +79,8 @@ def run(fast: bool = True):
     table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
     counts = (16, 64, 256) if fast else (16, 64, 256, 1024)
     reps = 30 if fast else 50
+    if common.SMOKE:
+        counts, reps = (16, 64), 3
     results = {str(n): bench_sites(table, n, reps) for n in counts}
 
     save_tracker("dispatch", results)

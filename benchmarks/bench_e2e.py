@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save_tracker
 
 SEED = 0
@@ -91,6 +92,8 @@ def run(fast: bool = True):
     t = Timer()
     ticks = 120 if fast else 360
     slots = 9 if fast else 18
+    if common.SMOKE:
+        ticks, slots = 24, 3
 
     g = paper_grid("coding", multiplier=60.0)
     traces = [make_trace("coding"), make_trace("conversation")]

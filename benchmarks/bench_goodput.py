@@ -17,6 +17,7 @@ import os
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import REPO_ROOT, Timer, row, save
 from repro.sim.cluster import (goodput_improvement, load_week_result,
                                simulate_week)
@@ -45,6 +46,8 @@ def run(fast: bool = True, trace_name: str = None):
     # fast mode: the 24 h window around the week's deep drought (UK ~0,
     # Iceland ~4% of threshold near slot 500-560 — the Fig 8 scenario)
     sl = slice(500, 500 + 96) if fast else slice(0, power.shape[1])
+    if common.SMOKE:
+        sl = slice(500, 500 + 12)
     power_w = power[:, sl]
 
     # Fig 14 left: drop slots across volumes (top-volume runs recorded

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save_tracker
 from repro.kernels import ops, ref
 
@@ -38,7 +39,7 @@ def run(fast: bool = True):
     ks = jax.random.split(key, 8)
 
     # flash attention (prefill regime)
-    B, S, H, KVH, hd = 1, 1024, 8, 2, 64
+    B, S, H, KVH, hd = 1, (256 if common.SMOKE else 1024), 8, 2, 64
     q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32)
@@ -49,7 +50,7 @@ def run(fast: bool = True):
                     f"S={S} GQA4 max|err|={err:.1e} vs oracle"))
 
     # decode attention (ragged cache)
-    S = 4096
+    S = 512 if common.SMOKE else 4096
     q1 = jax.random.normal(ks[3], (4, H, hd), jnp.float32)
     kc = jax.random.normal(ks[4], (4, S, KVH, hd), jnp.float32)
     vc = jax.random.normal(ks[5], (4, S, KVH, hd), jnp.float32)
@@ -119,7 +120,8 @@ def _paged_sweep(fast: bool = True) -> dict:
     from repro.analysis.roofline import paged_decode_memory_s
     from repro.configs import get_config
 
-    B, S, page, KVH, H, hd = 4, (2048 if fast else 4096), 16, 2, 8, 64
+    B, S, page, KVH, H, hd = 4, (512 if common.SMOKE else
+                                  (2048 if fast else 4096)), 16, 2, 8, 64
     maxP = S // page
     P = B * maxP
     cfg = get_config("llama3.2-1b")

@@ -14,13 +14,19 @@ the monolithic Fig. 10 ILP walls out):
   * ``plan_s`` cold vs warm-started re-solve time (the per-second
     Planner-S loop) with warm acceptance rates;
   * ``simulate_slot_fine`` end-to-end slot wall time with warm starts
-    on and off.
+    on and off;
+  * mega-fleet ``PlannerLSession`` curves (4096/10240 synthetic sites):
+    cold solve, drain-active full re-plan, and the incremental
+    dirty-set path A/B'd against a full warm re-plan on identical
+    inputs at 5% and 10% dirty fractions.
 
 Refreshes the ``BENCH_planning.json`` tracker at the repo root when
 ``--update-tracker`` is passed (artifacts/bench/planning.json always).
 Acceptance: decomposed 256-site plan in < 5 s within 1% of the
-monolith wherever it completes, and the drain-active 256-site solve
->= 2x faster than the PR 2-style sequential loop.
+monolith wherever it completes, the drain-active 256-site solve
+>= 2x faster than the PR 2-style sequential loop, the 10240-site
+drain-active re-plan < 1 s, and the incremental path >= 5x faster
+than full at <= 10% dirty with objective ratio >= 0.99.
 """
 from __future__ import annotations
 
@@ -29,14 +35,15 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, save_tracker
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
-from repro.core.planner_l import (DROP_PENALTY, SiteSpec, drain_limit,
-                                  fleet_drains, plan_l)
+from repro.core.planner_l import (DROP_PENALTY, PlannerLSession, SiteSpec,
+                                  drain_limit, fleet_drains, plan_l)
 from repro.core.planner_s import plan_s
 from repro.core.planning import plan_objective
-from repro.data.wind import make_site_population
+from repro.data.wind import make_site_population, make_synthetic_population
 from repro.data.workload import make_trace
 from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
 
@@ -131,6 +138,69 @@ def bench_drain_parallel(table, pop, counts):
     return out
 
 
+def bench_mega_incremental(table, counts, dirty_fracs):
+    """Mega-fleet session curves: cold, drain-active re-plan, inc-vs-full.
+
+    Populations are synthetic (``make_synthetic_population`` resamples
+    the measured wind archetypes; generation is vectorized — the
+    real-trace builder walls out past ~1k sites). Slot sequence per
+    fleet: cold plan -> fleet-wide 10% curtailment (the drain budget
+    binds, ``mode="full"``) -> further per-site curtailment on a
+    ``frac`` subset (``mode="auto"`` routes through the dirty-set
+    incremental path). The full side of the A/B replays the identical
+    cold+drain prefix in a twin session so both sides price the third
+    slot from the same warm state and the ratio isolates the
+    incremental machinery, not session history.
+    """
+    out = {}
+    for n in counts:
+        pop = make_synthetic_population(n, seed=13)
+        sites, power, load = make_fleet(pop, n)
+        rec = {"sites": n, "gpus": int(sum(s.num_gpus for s in sites))}
+        sess = PlannerLSession(table, sites, workers=1)
+        t0 = time.perf_counter()
+        sess.plan(power, load, mode="cold")
+        rec["cold_s"] = time.perf_counter() - t0
+        pw1 = power * 0.9
+        t0 = time.perf_counter()
+        p_dr = sess.plan(pw1, load, mode="full")
+        rec["drain_replan_s"] = time.perf_counter() - t0
+        rec["drain_master_rounds"] = int(p_dr.meta.get("master_rounds", -1))
+        rec["drain_status"] = p_dr.status
+        ab = {}
+        for frac in dirty_fracs:
+            nd = max(1, int(n * frac))
+            rng = np.random.default_rng(5)
+            sel = rng.choice(n, nd, replace=False)
+            pw2 = pw1.copy()
+            pw2[sel] *= rng.uniform(0.7, 0.95, nd)
+            s_inc = PlannerLSession(table, sites, workers=1)
+            s_inc.plan(power, load, mode="cold")
+            s_inc.plan(pw1, load, mode="full")
+            s_ful = PlannerLSession(table, sites, workers=1)
+            s_ful.plan(power, load, mode="cold")
+            s_ful.plan(pw1, load, mode="full")
+            t0 = time.perf_counter()
+            p_inc = s_inc.plan(pw2, load)               # mode="auto"
+            t_inc = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            p_ful = s_ful.plan(pw2, load, mode="full")
+            t_ful = time.perf_counter() - t0
+            oi = plan_objective(p_inc, DROP_PENALTY)
+            of = plan_objective(p_ful, DROP_PENALTY)
+            ab[f"{frac:g}"] = {
+                "dirty_frac": frac,
+                "dirty_sites": int(p_inc.meta.get("dirty_sites", -1)),
+                "mode": p_inc.meta.get("mode"),
+                "incremental_s": t_inc, "full_s": t_ful,
+                "speedup": t_ful / max(t_inc, 1e-12),
+                "obj_ratio": min(oi, of) / max(oi, of),
+            }
+        rec["incremental_ab"] = ab
+        out[str(n)] = rec
+    return out
+
+
 def bench_plan_s_warm(table, pop, counts, reps: int):
     out = {}
     for n in counts:
@@ -185,14 +255,21 @@ def bench_fine_sim_warm(table, pop, n: int, seconds: int):
 def run(fast: bool = True):
     trace = make_trace("coding", base_rps=1.0, seed=11)
     table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
-    if fast:
+    if common.SMOKE:
+        counts, mono_counts, mono_limit = (4, 16), (4,), 30.0
+        warm_counts, reps, fine_sites, fine_seconds = (16,), 2, 4, 10
+        drain_counts = (16,)
+        mega_counts, dirty_fracs = (64,), (0.10,)
+    elif fast:
         counts, mono_counts, mono_limit = (4, 16, 64, 256), (4, 16), 60.0
         warm_counts, reps, fine_sites, fine_seconds = (16, 64), 8, 16, 30
         drain_counts = (64, 256)
+        mega_counts, dirty_fracs = (4096, 10240), (0.05, 0.10)
     else:
         counts, mono_counts, mono_limit = (4, 16, 64, 256), (4, 16, 64), 300.0
         warm_counts, reps, fine_sites, fine_seconds = (16, 64, 256), 10, 64, 60
         drain_counts = (64, 256, 1024)
+        mega_counts, dirty_fracs = (4096, 10240), (0.05, 0.10)
     pop = make_site_population(max(counts + drain_counts), seed=13)
 
     results = {
@@ -201,6 +278,8 @@ def run(fast: bool = True):
         "plan_s_warm": bench_plan_s_warm(table, pop, warm_counts, reps),
         "fine_sim_warm": bench_fine_sim_warm(table, pop, fine_sites,
                                              fine_seconds),
+        "mega_incremental": bench_mega_incremental(table, mega_counts,
+                                                   dirty_fracs),
     }
     save_tracker("planning", results)
 
@@ -233,26 +312,51 @@ def run(fast: bool = True):
             f"{r['workers_par']}w pool {r['par_s']:.2f}s "
             f"({r['speedup_vs_pr2']:.1f}x vs PR2, obj "
             f"x{r['obj_ratio_vs_pr2']:.4f}, bit-identical)"))
-    r256 = results["plan_l"]["256"]
-    rows.append(row("plan_l_256site_budget", 0.0,
-                    f"{r256['decomposed_s']:.2f}s per slot "
-                    f"(target < 5s, unserved {r256['decomposed_unserved']:.1f})"))
-    d256 = results["drain_parallel"]["256"]
-    rows.append(row("plan_l_drain_speedup_budget", 0.0,
-                    f"{d256['speedup_vs_pr2']:.1f}x over PR2 sequential at "
-                    f"256 sites with drains active (target >= 2x)"))
+    for n, r in results["mega_incremental"].items():
+        rows.append(row(f"plan_l_mega_{n}sites", r["drain_replan_s"] * 1e6,
+                        f"{r['gpus']} GPUs: cold {r['cold_s']:.2f}s, "
+                        f"drain-active full re-plan {r['drain_replan_s']:.3f}s"
+                        f" ({r['drain_master_rounds']} master rounds)"))
+        for a in r["incremental_ab"].values():
+            rows.append(row(
+                f"plan_l_incremental_{n}sites_"
+                f"{int(round(a['dirty_frac'] * 100))}pct",
+                a["incremental_s"] * 1e6,
+                f"{a['dirty_sites']} dirty ({a['mode']}): "
+                f"{a['incremental_s']:.3f}s vs full {a['full_s']:.3f}s "
+                f"({a['speedup']:.1f}x, obj x{a['obj_ratio']:.5f})"))
+    if "256" in results["plan_l"]:
+        r256 = results["plan_l"]["256"]
+        rows.append(row("plan_l_256site_budget", 0.0,
+                        f"{r256['decomposed_s']:.2f}s per slot "
+                        f"(target < 5s, unserved "
+                        f"{r256['decomposed_unserved']:.1f})"))
+    if "256" in results["drain_parallel"]:
+        d256 = results["drain_parallel"]["256"]
+        rows.append(row("plan_l_drain_speedup_budget", 0.0,
+                        f"{d256['speedup_vs_pr2']:.1f}x over PR2 sequential "
+                        f"at 256 sites with drains active (target >= 2x)"))
+    if "10240" in results["mega_incremental"]:
+        m10 = results["mega_incremental"]["10240"]
+        best = max(a["speedup"] for a in m10["incremental_ab"].values())
+        rows.append(row("plan_l_10240_replan_budget", 0.0,
+                        f"drain-active full re-plan "
+                        f"{m10['drain_replan_s']:.3f}s (target < 1s); "
+                        f"incremental up to {best:.1f}x vs full at <= 10% "
+                        f"dirty (target >= 5x)"))
     return rows
 
 
 def main():
     import argparse
 
-    from benchmarks import common
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--update-tracker", action="store_true")
     args = ap.parse_args()
-    common.UPDATE_TRACKER = args.update_tracker
+    common.SMOKE = args.smoke
+    common.UPDATE_TRACKER = args.update_tracker and not args.smoke
     common.emit(run(fast=not args.full))
 
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save_tracker
 
 SEED = 0
@@ -87,6 +88,8 @@ def run(fast: bool = True):
     num_sites = 3
     ticks = 24 if fast else 48
     n_requests = 12 if fast else 36
+    if common.SMOKE:
+        ticks, n_requests = 12, 6
 
     cfg = smoke_config(ARCH)
     model = build(cfg)

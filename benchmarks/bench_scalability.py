@@ -11,6 +11,7 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
@@ -28,7 +29,8 @@ def run(fast: bool = True):
     rows = []
     trace = make_trace("coding", base_rps=1.0, seed=11)
     table = build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
-    counts = (4, 8, 16) if fast else (4, 8, 16, 32, 64)
+    counts = (4, 8) if common.SMOKE else ((4, 8, 16) if fast
+                                            else (4, 8, 16, 32, 64))
     pop = make_site_population(max(counts), seed=13)
 
     results = {}

@@ -17,6 +17,7 @@ Writes ``BENCH_scenarios.json`` at the repo root under the
 """
 from __future__ import annotations
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save_tracker
 from repro.sim.cluster import simulate_week
 from repro.sim.scenarios import (Curtailment, DemandSurge, GridTrip,
@@ -49,7 +50,7 @@ def _families(slots: int) -> dict[str, list]:
 def run(fast: bool = True):
     rows = []
     t = Timer()
-    slots = 10 if fast else 24
+    slots = 4 if common.SMOKE else (10 if fast else 24)
     g = paper_grid("coding", multiplier=VOLUME)
     table, sites = g.table, g.sites
     pw = g.power_mw[:, START:START + slots]

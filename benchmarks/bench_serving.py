@@ -31,6 +31,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, save_tracker
 from repro.configs import smoke_config
 from repro.models.api import build
@@ -173,7 +174,7 @@ def _steady_tokens_per_s(model, params) -> float:
 
 
 def run(fast: bool = True):
-    reps = 3 if fast else 10
+    reps = 1 if common.SMOKE else (3 if fast else 10)
     cfg = smoke_config(ARCH)
     model = build(cfg)
     params = model.init_params(jax.random.key(0))

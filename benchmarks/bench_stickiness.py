@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
@@ -32,7 +33,7 @@ def run(fast: bool = True, trace_name: str = "coding"):
         sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
         thr.append(s.percentile_mw(20.0))
     power = np.minimum(fleet.week(), np.array(thr)[:, None])
-    sl = slice(480, 480 + (48 if fast else 672))
+    sl = slice(480, 480 + (12 if common.SMOKE else (48 if fast else 672)))
     arr = trace.class_arrivals(multiplier=600.0)[:, sl] / (15 * 60)
     pw = power[:, sl]
 

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, row, save
 from repro.configs import PAPER_MODEL
 from repro.core.lookup import build_table
@@ -29,7 +30,7 @@ def run(fast: bool = True, trace_name: str = "coding"):
     mult = 600.0
     arr = trace.class_arrivals(multiplier=mult) / (15 * 60)
 
-    n_slots = 16 if fast else 96
+    n_slots = 3 if common.SMOKE else (16 if fast else 96)
     pts = []
     with t():
         for i in range(n_slots):

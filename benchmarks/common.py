@@ -23,6 +23,11 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ARTIFACTS = os.path.join(REPO_ROOT, "artifacts", "bench")
 
 UPDATE_TRACKER = False      # set by --update-tracker in run.py / module mains
+# --smoke tier: every module clamps to toy sizes (seconds, not minutes)
+# and committed root trackers are NEVER written — run.py forces
+# UPDATE_TRACKER off when SMOKE is on, so a smoke pass can be used as a
+# does-everything-still-run gate without perturbing perf baselines.
+SMOKE = False
 
 
 def save(name: str, payload: dict) -> None:

@@ -20,11 +20,17 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_kernels          kernels      (Pallas vs oracle)
     bench_roofline         §Roofline    (dry-run artifact table)
 
-``python -m benchmarks.run [--full] [--only mod1,mod2] [--update-tracker]``
+``python -m benchmarks.run [--full|--smoke] [--only mod1,mod2]
+[--update-tracker]``
 
 ``--update-tracker`` lets modules refresh their committed repo-root
 ``BENCH_*.json`` trackers; without it every run writes only the
 artifacts/bench/ copies (see benchmarks.common.save_tracker).
+
+``--smoke`` runs every module at toy sizes (a does-everything-import-
+and-run gate, seconds per module) and force-disables tracker updates —
+``--update-tracker`` is ignored with a warning, so a smoke pass can
+never dirty the committed perf baselines.
 """
 from __future__ import annotations
 
@@ -61,12 +67,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="full-week / full-grid runs (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes for every module; never touches the "
+                         "committed BENCH_*.json trackers")
     ap.add_argument("--only", default="",
                     help="comma-separated module subset")
     ap.add_argument("--update-tracker", action="store_true",
                     help="refresh committed repo-root BENCH_*.json trackers")
     args = ap.parse_args(argv)
-    common.UPDATE_TRACKER = args.update_tracker
+    common.SMOKE = args.smoke
+    if args.smoke and args.update_tracker:
+        print("# --smoke forces --update-tracker off "
+              "(trackers are full-size baselines)", file=sys.stderr)
+    common.UPDATE_TRACKER = args.update_tracker and not args.smoke
     mods = [m.strip() for m in args.only.split(",") if m.strip()] or MODULES
 
     print("name,us_per_call,derived")

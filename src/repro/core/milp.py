@@ -66,7 +66,8 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
                warm_accept_gap: float = 0.01,
                warm_split: Optional[np.ndarray] = None,
                warm_slack_abs: float = 0.0,
-               warm_slack_unit: Optional[np.ndarray] = None) -> MilpResult:
+               warm_slack_unit: Optional[np.ndarray] = None,
+               warm_class: Optional[np.ndarray] = None) -> MilpResult:
     """min c.x  s.t.  A_ub x <= b_ub,  A_lb x >= b_lb,  0 <= x <= upper.
 
     ``warm``: a previous solution over the same variable layout; accepted
@@ -83,6 +84,10 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
     instead of a pool-wide worst case, so warm projections cannot
     over-admit drops on pools that merely *contain* large-instance
     groups. When given, it supersedes ``warm_slack_abs``.
+    ``warm_class``: per-variable class ids partitioning the penalty test
+    — the slack of each class is tested against its *own* class's
+    fractional frontier, so a mixed pool no longer hands every class the
+    allowance of whichever class carries the largest instances.
     """
     t0 = time.perf_counter()
     n = len(c)
@@ -100,7 +105,8 @@ def solve_milp(c, A_ub=None, b_ub=None, A_lb=None, b_lb=None,
             if x_lp is not None and _warm_accept(c, x, x_lp, warm_split,
                                                  warm_accept_gap,
                                                  warm_slack_abs,
-                                                 warm_slack_unit):
+                                                 warm_slack_unit,
+                                                 warm_class):
                 return MilpResult(x=x, status="warm", objective=float(c @ x),
                                   solve_seconds=time.perf_counter() - t0)
 
@@ -153,14 +159,14 @@ def _lp_solution(c, A_ub, b_ub, A_lb, b_lb, ub) -> Optional[np.ndarray]:
 
 
 def _warm_accept(c, x, x_lp, split, gap, slack_abs,
-                 slack_unit=None) -> bool:
+                 slack_unit=None, cls=None) -> bool:
     """LP-bound acceptance: single-part, or two-part when ``split`` set."""
     if split is None:
         bound = float(c @ x_lp)
         return float(c @ x) <= bound + gap * max(1.0, abs(bound))
     m = np.asarray(split, bool)
     cost_x, cost_lp = float(c[~m] @ x[~m]), float(c[~m] @ x_lp[~m])
-    pen_x, pen_lp = float(c[m] @ x[m]), float(c[m] @ x_lp[m])
+    pen_lp = float(c[m] @ x_lp[m])
     # absolute (one-instance-granularity) allowances only when the LP
     # itself is slack-saturated — outside droughts a warm point must
     # serve everything the LP serves, and the cost test stays relative
@@ -168,12 +174,29 @@ def _warm_accept(c, x, x_lp, split, gap, slack_abs,
     cost_allow = (float(c[~m].max()) if drought and (~m).any() else 0.0)
     if cost_x > cost_lp + gap * max(1.0, abs(cost_lp)) + cost_allow:
         return False
-    allow = _drought_allowance(x_lp, m, slack_abs, slack_unit) \
-        if drought else 0.0
-    return pen_x <= pen_lp + gap * max(1.0, abs(pen_lp)) + allow
+    if cls is None:
+        pen_x = float(c[m] @ x[m])
+        allow = _drought_allowance(x_lp, m, slack_abs, slack_unit) \
+            if drought else 0.0
+        return pen_x <= pen_lp + gap * max(1.0, abs(pen_lp)) + allow
+    cl = np.asarray(cls)
+    for k in np.unique(cl[m]):
+        mk = m & (cl == k)
+        pen_x_k = float(c[mk] @ x[mk])
+        pen_lp_k = float(c[mk] @ x_lp[mk])
+        # per-class drought test: a class only earns the one-instance
+        # rounding allowance when the LP drops *its* load, and only at
+        # the granularity of its own fractional columns
+        allow_k = (_drought_allowance(x_lp, m, slack_abs, slack_unit,
+                                      sel=cl == k)
+                   if pen_lp_k > 1e-9 else 0.0)
+        if pen_x_k > pen_lp_k + gap * max(1.0, abs(pen_lp_k)) + allow_k:
+            return False
+    return True
 
 
-def _drought_allowance(x_lp, split, slack_abs, slack_unit) -> float:
+def _drought_allowance(x_lp, split, slack_abs, slack_unit,
+                       sel=None) -> float:
     """Penalty-part absolute allowance granted inside a drought.
 
     With ``slack_unit`` (per-variable penalty of a one-unit rounding of
@@ -185,15 +208,23 @@ def _drought_allowance(x_lp, split, slack_abs, slack_unit) -> float:
     large-instance group no longer widens acceptance. Falls back to the
     largest unit among active columns (degenerate LPs can sit on integer
     vertices while the warm point still re-rounds), then to the scalar
-    ``slack_abs``.
+    ``slack_abs``. ``sel`` restricts the candidate columns to one class
+    (the per-class acceptance passes each class's own column mask) and
+    switches the fractional frontier from the largest unit to the *sum*
+    of the class's fractional units — an integer point rounds each
+    fractional variable down at most once, so the class can shed up to
+    that sum, and with few classes sharing a pool several of its columns
+    are routinely left fractional at the LP vertex.
     """
     if slack_unit is None:
         return slack_abs
     u = np.asarray(slack_unit, float)
     zi = ~split & (u > 0)
+    if sel is not None:
+        zi = zi & np.asarray(sel, bool)
     frac = zi & (np.abs(x_lp - np.round(x_lp)) > 1e-6)
     if frac.any():
-        return float(u[frac].max())
+        return float(u[frac].sum() if sel is not None else u[frac].max())
     active = zi & (x_lp > 1e-9)
     if active.any():
         return float(u[active].max())

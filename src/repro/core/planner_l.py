@@ -60,6 +60,52 @@ reach. ``plan_l`` therefore has two paths:
 ``method="auto"`` (the default) is an alias for ``decomposed``: the
 two-regime site-count split is gone now that the decomposition enforces
 the full Fig. 10 constraint set, R_L included.
+
+Interactive-rate re-plans at 10k sites (``PlannerLSession``)
+------------------------------------------------------------
+Consecutive 15-min slots differ by a handful of forecast deltas, not a
+new fleet — so the stateless cold solve is the wrong unit of work for
+the steady state. ``PlannerLSession`` keeps per-slot state and layers
+three reuse mechanisms on the decomposition:
+
+  * **Restricted master with warm support** — the aggregate LP is
+    solved over the previous slot's support columns plus a per-site
+    deduplicated capacity seed (one column per (site, class); a site's
+    class-c columns share its GPU/power headroom, so seeding more of
+    them only bloats the LP). Negative-reduced-cost columns are priced
+    in over at most ``max_rounds=2`` rounds of ``batch=8192`` — the
+    large batch captures nearly all of the omitted rounds' columns in
+    one cheaper resolve (objective within ~0.5% of full convergence).
+    CSR constraint assembly is cached across slots; the support handed
+    to the next slot is pruned back to LP-active ∪ integer-active
+    columns so restricted LPs cannot compound across a week.
+  * **Incremental dirty-site re-plans** — a site is *dirty* when its
+    power or its load-weighted forecast moved by more than
+    ``dirty_tol`` (relative); clean sites keep the previous slot's
+    accepted quota ILP solutions verbatim while a compact sub-master
+    (rows and columns restricted to the dirty sites, clean capacity
+    folded into the class balances) re-prices only the dirty set —
+    O(dirty) work per slot. The session falls back to a full warm
+    re-plan when the dirty fraction exceeds ``max_dirty_frac`` (default
+    0.5), when the fleet load vector itself moved, or on the first
+    slot; ``plan.meta["fallback"]`` names the reason. With every site
+    dirty the incremental path is bit-identical to the full warm path
+    (tests/test_planner_session.py).
+  * **λ_R subgradient refinement** — when the fleet drain constraint
+    is tight, per-site drain sub-budgets are seeded from the master's
+    fractional drains and λ_R is refined by a few subgradient steps so
+    the independent site ILPs price drains near the true fleet
+    marginal instead of over/under-draining and leaning on repair.
+
+The session's non-cold modes also relax the cross-site 1-swap polish
+with a relative-gain cutoff (``swap_rel_tol``, default 1e-3): polishing
+stops once a full round's improvement falls under 0.1% of plan cost.
+``mode="cold"`` keeps every knob at the stateless setting and is
+bit-identical to ``plan_l`` — the session is an optimization layer,
+not a different planner. Measured on synthetic fleets
+(BENCH_planning.json): 10240-site drain-active full re-plan < 1 s;
+incremental re-plans ≥ 5x faster than full at ≤ 10% dirty with
+objective ratio ≥ 0.99.
 """
 from __future__ import annotations
 
@@ -111,6 +157,10 @@ class Plan:
     _gtable: object = field(default=None, repr=False, compare=False)
     _pool: object = field(default=None, repr=False, compare=False)
     _bpool: object = field(default=None, repr=False, compare=False)
+    #: solver diagnostics (mode, dirty-set size, master/pricing rounds,
+    #: per-stage seconds) — populated by ``PlannerLSession``; excluded
+    #: from equality so metered plans compare equal to unmetered ones
+    meta: Optional[dict] = field(default=None, repr=False, compare=False)
 
     def column_arrays(self) -> tuple:
         """(site, cls, tp, load, power, e2e) parallel arrays, cached."""
@@ -351,10 +401,16 @@ def drain_limit(old: Plan, power_w: np.ndarray, r_frac: float) -> float:
 def _live_old_agg(old: Plan, power_w: np.ndarray,
                   pool: ColumnPool) -> np.ndarray:
     """Old live instance counts per current (s,c,t) group, power-scaled."""
-    _, g_site, g_cls, g_tp = pool.sct()
+    codes, g_site, g_cls, g_tp = pool.sct()
+    scale = _live_scale(old, power_w)
+    if getattr(old, "_pool", None) is pool and len(pool):
+        # same pool (chained session re-plans): each old column's group
+        # is its own pool code — same weights, same accumulation order
+        # as the searchsorted path below, so bit-identical
+        return np.bincount(codes, weights=np.asarray(old.counts, float)
+                           * scale[pool.site], minlength=len(g_site))
     g_key = sct_key(g_site, g_cls, g_tp)
     old_site, old_cls, old_tp, _, _, _ = old.column_arrays()
-    scale = _live_scale(old, power_w)
     old_key = sct_key(old_site, old_cls, old_tp.astype(np.intp))
     pos_idx = np.searchsorted(g_key, old_key)
     pos_idx = np.clip(pos_idx, 0, len(g_key) - 1)
@@ -635,11 +691,13 @@ def _drain_exchange(st: FleetState, load: np.ndarray, deadline: float,
             return
         i = int(np.argmin(st.cost[js]))
         j_r, g_r = int(js[i]), int(gr[i])
-        # evictable: live-old instances whose class stays covered
-        ev = ((st.counts > 0)
-              & (st.cap[p.cls] - p.load >= load[p.cls] - 1e-9)
-              & (st.cost > st.cost[j_r] + 1e-9))
-        cand = np.nonzero(ev)[0]
+        # evictable: live-old instances whose class stays covered —
+        # one O(columns) nonzero for the active set, every other mask
+        # over that (small) subset; same candidates in the same order
+        act = np.nonzero(st.counts > 0)[0]
+        ev = ((st.cap[p.cls[act]] - p.load[act] >= load[p.cls[act]] - 1e-9)
+              & (st.cost[act] > st.cost[j_r] + 1e-9))
+        cand = act[ev]
         g = st.codes[cand]                  # vectorized removal_drain(j, 1)
         dgain = (np.maximum(st.old_group[g] - (st.group_count[g] - 1), 0.0)
                  - st.drains[g])
@@ -662,7 +720,8 @@ def _drain_exchange(st: FleetState, load: np.ndarray, deadline: float,
 
 
 def _swap_improve(st: FleetState, load: np.ndarray, deadline: float,
-                  max_rounds: int = 8) -> None:
+                  max_rounds: int = 8, exact: bool = True,
+                  rel_tol: float = 0.0) -> None:
     """Cross-site 1-swap polish (in place on ``st``).
 
     The per-site quota ILPs cannot mix load points inside one (s, c, t)
@@ -673,32 +732,200 @@ def _swap_improve(st: FleetState, load: np.ndarray, deadline: float,
     columns; the swap commits only when it strictly lowers cost, and an
     eviction that would spend drain budget the fleet no longer has is
     skipped outright.
+
+    ``exact=True`` rolls a rejected swap back through the historical
+    ``counts.copy()`` + ``rebuild()`` pair (canonical bincount state —
+    the byte-for-byte ``plan_l`` behavior the anchors pin).
+    ``exact=False`` rolls back through the O(ops) op log instead: same
+    decisions, ULP-level float-headroom drift possible, an order of
+    magnitude cheaper at 10k sites — the session re-plan path uses it.
+
+    ``rel_tol > 0`` stops polishing once a whole round's cost saving
+    falls below ``rel_tol`` of the current plan cost — at 10k sites the
+    late rounds each cost a fleet-wide ``cover`` scan per class to
+    recover a vanishing fraction of the objective. The canonical
+    ``plan_l`` path keeps ``rel_tol=0`` (run until no strict improvement).
     """
     pool, counts, cost = st.pool, st.counts, st.cost
     for _ in range(max_rounds):
         improved = False
+        round_gain = 0.0
         for c in range(9):
-            act = np.nonzero((pool.cls == c) & (counts > 0))[0]
+            idx_c = pool.cls_index(c)
+            act = idx_c[counts[idx_c] > 0]
             if len(act) == 0:
                 continue
             j = int(act[np.argmax(cost[act])])
             if st.removal_drain(j, 1) > st.drain_headroom() + 1e-9:
                 continue
             saved = cost[j]
-            before = counts.copy()
+            before = counts.copy() if exact else None
+            if not exact:
+                st.log_begin()
             st.remove(j, 1)
             deficit = load[c] - st.cap[c]
             added = (st.cover(c, deficit, budget=saved - 1e-9)
                      if deficit > 1e-9 else 0.0)
             if added is not None and added < saved - 1e-9:
                 improved = True
-            else:
+                round_gain += saved - added
+                if not exact:
+                    st.log_commit()
+            elif exact:
                 counts[:] = before
                 st.rebuild()
+            else:
+                st.log_rollback()
             if time.perf_counter() > deadline:
                 return
         if not improved:
             return
+        if rel_tol > 0.0 and round_gain < rel_tol * float(counts @ cost):
+            return
+
+
+def _site_group_starts(pool: ColumnPool) -> np.ndarray:
+    """[S+1] start offsets of each site's (s,c,t) group range.
+
+    ``pool.sct()`` orders groups by site-major key, so ``g_site`` is
+    nondecreasing and ``old_agg[starts[s]:starts[s+1]]`` is the exact
+    slice the historical ``old_agg[g_site == s]`` boolean scan produced
+    — without the O(S·G) fleet-wide mask per site.
+    """
+    g_site = pool.sct()[1]
+    return np.searchsorted(g_site, np.arange(pool.num_sites + 1))
+
+
+def _round_accept_all(soa, quotas: np.ndarray, gpus: np.ndarray,
+                      x_lp: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """``_site_round_accept`` for every site at once (pure numpy).
+
+    Same arithmetic in the same order as the per-site helper — floor /
+    min / per-(site, group) keep-largest with first-row tie-break
+    (segment max + min-position over a static (group, row) permutation
+    of the table), and per-site class coverage summed row-ascending via
+    one flat bincount — so a site accepts here iff its
+    ``_site_round_accept`` accepts, with bit-identical counts
+    (pinned by tests/test_planning.py). ``quotas``/``gpus``/``x_lp``
+    are the *solved subset's* rows (the caller pre-gathers them), so an
+    incremental re-plan pays O(dirty·R), not O(fleet). Returns
+    (xk [S, R], accepted [S]); rows of non-accepted sites are
+    meaningless.
+    """
+    S = quotas.shape[0]
+    R = len(soa.cls)
+    key = sct_key(np.zeros(R, dtype=np.intp), soa.cls, soa.tp)
+    codes = np.unique(key, return_inverse=True)[1]
+    perm = np.lexsort((np.arange(R), codes))        # group-major, row asc
+    starts = np.nonzero(np.r_[True, codes[perm][1:] != codes[perm][:-1]])[0]
+    cap_j = np.maximum(gpus[:, None] // np.maximum(soa.tp, 1)[None, :],
+                       0).astype(float)
+    xs = np.minimum(x_lp.reshape(S, R), cap_j)
+    w = xs * soa.load[None, :]
+    wp = w[:, perm]
+    gmax = np.maximum.reduceat(wp, starts, axis=1)
+    reps = np.diff(np.r_[starts, R])
+    pos = np.where(wp == np.repeat(gmax, reps, axis=1),
+                   np.arange(R)[None, :], R)
+    first = np.minimum.reduceat(pos, starts, axis=1)
+    keep = np.zeros((S, R), dtype=bool)
+    keep[np.arange(S)[:, None], perm[first]] = True
+    xk = np.where(keep, np.floor(xs + 1e-9), 0.0)
+    flat = np.repeat(np.arange(S), R) * 9 + np.tile(soa.cls, S)
+    covered = np.bincount(flat, weights=(xk * soa.load[None, :]).ravel(),
+                          minlength=S * 9).reshape(S, 9)
+    gran = np.zeros(9)                      # per-class one-instance load
+    np.maximum.at(gran, soa.cls, soa.load)
+    shortfall = np.maximum(quotas, 0.0) - covered
+    accepted = (shortfall <= gran[None, :] + 1e-9).all(axis=1)
+    return xk, accepted
+
+
+def _assign_sites(pool: ColumnPool, soa, quotas: np.ndarray,
+                  gpus: np.ndarray, power: np.ndarray,
+                  old_agg: Optional[np.ndarray], starts: np.ndarray,
+                  lam_r: float, x_lp: Optional[np.ndarray],
+                  row_cost: np.ndarray, prices: np.ndarray,
+                  time_limit: float, workers: Optional[int],
+                  site_warm: bool,
+                  site_mask: Optional[np.ndarray] = None
+                  ) -> tuple[np.ndarray, int, int]:
+    """Solve the per-site quota problems; returns (counts2d, #accept, #ilp).
+
+    Sites outside ``site_mask`` (and sites the LP left idle) come back
+    as zero rows — the caller decides what to reuse for them. The
+    vectorized rounding pass accepts most sites without touching
+    Python; the remainder go through ``_solve_sites`` exactly as
+    before (the hard count, and so the deterministic per-ILP time
+    split, is unchanged — a site fails the vectorized accept iff it
+    fails the per-site accept).
+    """
+    S = quotas.shape[0]
+    R = len(soa.cls)
+    active = quotas.max(axis=1) > 1e-9
+    if site_mask is not None:
+        active &= site_mask
+    counts2d = np.zeros((S, R), dtype=int)
+    acc = np.zeros(S, dtype=bool)
+    if site_warm and x_lp is not None and active.any():
+        # gather the active rows first: each site's accept arithmetic is
+        # row-local, so the subset pass is bit-identical to the full one
+        # and an incremental re-plan pays O(dirty·R) here, not O(S·R)
+        act = np.nonzero(active)[0]
+        xk, ok = _round_accept_all(soa, quotas[act], gpus[act],
+                                   x_lp.reshape(S, R)[act].ravel())
+        hit = act[ok]
+        acc[hit] = True
+        counts2d[hit] = xk[ok].astype(int)
+    hard_sites = np.nonzero(active & ~acc)[0].tolist()
+    shared = (soa.cls, soa.tp, soa.load, soa.power, row_cost, prices,
+              time_limit)
+    subs = []
+    for s in hard_sites:
+        old_s = (old_agg[starts[s]:starts[s + 1]]
+                 if old_agg is not None else None)
+        x0 = x_lp[s * R:(s + 1) * R] if (site_warm and x_lp is not None) \
+            else None
+        subs.append((quotas[s], gpus[s], power[s], old_s, lam_r, x0))
+    for s, x in zip(hard_sites, _solve_sites(shared, subs, workers)):
+        counts2d[s] = x
+    return counts2d, int(acc.sum()), len(hard_sites)
+
+
+def _global_repair(fcounts: np.ndarray, pool: ColumnPool, cost: np.ndarray,
+                   gpus: np.ndarray, power: np.ndarray, load: np.ndarray,
+                   old_agg: Optional[np.ndarray], r_limit: float,
+                   deadline: float, exact: bool = True,
+                   restore_best: Optional[np.ndarray] = None,
+                   swap_rel_tol: float = 0.0
+                   ) -> tuple[FleetState, bool]:
+    """Fleet-level feasibility + polish over assembled site counts."""
+    st = FleetState(fcounts, pool, cost, gpus, pool.site, power,
+                    old_group=old_agg, r_limit=r_limit,
+                    restore_best=restore_best)
+    st.trim(load)               # drain-aware surplus trim
+    drains_ok = st.project_drains()
+    #                             hard R_L feasibility across sites —
+    #                             before the cover, so restorations claim
+    #                             their headroom first and the repair
+    #                             places serving capacity around them
+    st.cover_all(load)          # greedy cheapest-completion repair
+    _drain_exchange(st, load, deadline=deadline)
+    _swap_improve(st, load, deadline=deadline, exact=exact,
+                  rel_tol=swap_rel_tol)
+    return st, drains_ok
+
+
+def _quotas_from_lp(pool: ColumnPool, x_lp: np.ndarray,
+                    S: int) -> np.ndarray:
+    """Per-site per-class capacity quotas from the fractional optimum.
+
+    Flat bincount with site-major bins — accumulates in column order,
+    bit-identical to the historical ``np.add.at`` scatter.
+    """
+    return np.bincount(pool.site * 9 + pool.cls,
+                       weights=x_lp * pool.load,
+                       minlength=S * 9).reshape(S, 9)
 
 
 def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
@@ -711,7 +938,6 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
     S = len(sites)
     table = pool.table
     soa = table_soa(table)
-    R = len(table.rows)
     gpus = np.array([s.num_gpus for s in sites], float)
     power = np.asarray(power_w, float)
     load = np.maximum(np.asarray(load_per_class, float), 0.0)
@@ -725,23 +951,11 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
         old_agg, r_limit = None, np.inf
     prices, lam_r, x_lp = _lp_master(pool, gpus, power, load, cost,
                                      old_agg, r_limit)
-    # per-site per-class capacity quotas from the fractional LP optimum
-    quotas = np.zeros((S, 9))
-    np.add.at(quotas, (pool.site, pool.cls), x_lp * pool.load)
-    g_site = pool.sct()[1]
-    counts = np.zeros(S * R, dtype=int)
-    shared = (soa.cls, soa.tp, soa.load, soa.power, row_cost, prices,
-              time_limit)
-    subs, sub_sites = [], []
-    for s in range(S):
-        if quotas[s].max() <= 1e-9:
-            continue        # the LP left the site idle (or power-dead)
-        old_s = old_agg[g_site == s] if old_agg is not None else None
-        x0 = x_lp[s * R:(s + 1) * R] if site_warm else None
-        subs.append((quotas[s], gpus[s], power[s], old_s, lam_r, x0))
-        sub_sites.append(s)
-    for s, x in zip(sub_sites, _solve_sites(shared, subs, workers)):
-        counts[s * R:(s + 1) * R] = x
+    quotas = _quotas_from_lp(pool, x_lp, S)
+    counts2d, _, _ = _assign_sites(
+        pool, soa, quotas, gpus, power, old_agg, _site_group_starts(pool),
+        lam_r, x_lp if site_warm else None, row_cost, prices, time_limit,
+        workers, site_warm)
     # Sites rationally *decline* quota priced exactly at the LP margin
     # (integer serving rounds up, declining does not), so the marginal
     # capacity of each class intentionally lands in the global repair
@@ -750,18 +964,10 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
     # quota back onto its site makes a GPU-starved site serve at a worse
     # TP instead of exporting the load (observed as a 5% objective gap).
 
-    fcounts = counts.astype(float)
-    st = FleetState(fcounts, pool, cost, gpus, pool.site, power,
-                    old_group=old_agg, r_limit=r_limit)
-    st.trim(load)               # drain-aware surplus trim
-    drains_ok = st.project_drains()
-    #                             hard R_L feasibility across sites —
-    #                             before the cover, so restorations claim
-    #                             their headroom first and the repair
-    #                             places serving capacity around them
-    st.cover_all(load)          # greedy cheapest-completion repair
-    _drain_exchange(st, load, deadline=t0 + time_limit)
-    _swap_improve(st, load, deadline=t0 + time_limit)
+    fcounts = counts2d.reshape(-1).astype(float)
+    st, drains_ok = _global_repair(fcounts, pool, cost, gpus, power, load,
+                                   old_agg, r_limit,
+                                   deadline=t0 + time_limit)
     counts = np.round(fcounts).astype(int)
     cap = np.bincount(pool.cls, weights=counts * pool.load, minlength=9)
     unserved = np.maximum(load - cap, 0.0)
@@ -781,6 +987,570 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
                 objective=objective, status=status,
                 solve_seconds=time.perf_counter() - t0, num_sites=S,
                 _cols=pool.column_arrays(), _pool=pool)
+
+
+# ------------------------------------------------------------------
+# session path: warm restricted master + incremental dirty-site re-plans
+# ------------------------------------------------------------------
+class _MasterCache:
+    """Static pieces of the aggregate master, shared across a session.
+
+    Everything here depends only on (pool, objective): the float TP
+    column, the (s,c,t) group index and per-site group ranges, and each
+    group's min-cost column (restore fallback when a live group has no
+    support column). The per-slot restricted assembly gathers from
+    these instead of rebuilding fleet-wide arrays every solve.
+    """
+
+    def __init__(self, pool: ColumnPool, cost: np.ndarray):
+        self.pool = pool
+        self.cost = cost
+        self.tp_f = pool.tp.astype(float)
+        self.codes, self.g_site, _, _ = pool.sct()
+        self.G = len(self.g_site)
+        self.starts = _site_group_starts(pool)
+        order = np.argsort(cost, kind="stable")[::-1]
+        cheap = np.full(self.G, -1, dtype=np.intp)
+        cheap[self.codes[order]] = order        # last write = min cost,
+        self.group_cheap = cheap                # first index on ties
+        # per-group min cost-per-rps column — FleetState._group_best's
+        # default score, hoisted so per-slot repairs skip the argsort
+        score = cost / np.maximum(pool.load, 1e-12)
+        sorder = np.argsort(score, kind="stable")[::-1]
+        rb = np.full(self.G, -1, dtype=np.intp)
+        rb[self.codes[sorder]] = sorder
+        self.restore_best = rb
+        # per-class cost-ascending column order (capacity seed below)
+        self.cls_order = [np.nonzero(pool.cls == c)[0][
+            np.argsort(cost[pool.cls == c], kind="stable")]
+            for c in range(9)]
+
+    def capacity_seed(self, gpus: np.ndarray, power_w: np.ndarray,
+                      load: np.ndarray, margin: float = 2.0,
+                      sites_sel: Optional[np.ndarray] = None) -> np.ndarray:
+        """Cheapest columns whose relaxed capacity covers ``margin``× load.
+
+        The previous slot's LP support is tiny (active sites only), so
+        after a fleet-wide power drop a support-only restricted LP
+        drops load and its duals jump to DROP_PENALTY — pricing then
+        floods with ~every column in the pool. Seeding each class with
+        its cost-cheapest columns until their fractional instance
+        bound (min of GPU and power headroom) covers a multiple of the
+        class demand keeps the first restricted solve feasible, so the
+        duals start near the fleet optimum and pricing converges in a
+        round or two. Pure function of (pool, cost, slot inputs) —
+        identical for incremental and full re-plans by construction.
+        ``sites_sel`` restricts the candidate columns to those sites
+        (the incremental sub-master); selecting every site is
+        bit-identical to no selection.
+        """
+        pool = self.pool
+        smask = None
+        if sites_sel is not None:
+            smask = np.zeros(pool.num_sites, dtype=bool)
+            smask[sites_sel] = True
+        pw = np.asarray(power_w, float)
+        picks = []
+        for c in range(9):
+            if load[c] <= 1e-9:
+                continue
+            oc = self.cls_order[c]
+            if smask is not None:
+                oc = oc[smask[pool.site[oc]]]
+            # one column per site: a site's class-c columns share its
+            # GPU/power headroom, so summing all their bounds would
+            # overcount the site ~|operating points|-fold and balloon
+            # the seed; the cheapest column per site is the LP's likely
+            # pick and pricing rounds add any missed mixes
+            first = np.unique(pool.site[oc], return_index=True)[1]
+            oc = oc[np.sort(first)]
+            soc = pool.site[oc]
+            ub = np.minimum(gpus[soc] // np.maximum(self.tp_f[oc], 1.0),
+                            pw[soc] / np.maximum(pool.power[oc], 1e-12))
+            cum = np.cumsum(np.maximum(ub, 0.0) * pool.load[oc])
+            k = int(np.searchsorted(cum, margin * load[c])) + 1
+            picks.append(oc[:k])
+        if not picks:
+            return np.empty(0, dtype=np.intp)
+        return np.concatenate(picks)
+
+
+def _lp_master_restricted(cache: _MasterCache, gpus: np.ndarray,
+                          power_w: np.ndarray, load: np.ndarray,
+                          support: np.ndarray,
+                          old_agg: Optional[np.ndarray], r_limit: float,
+                          max_rounds: int = 2, batch: int = 8192,
+                          sites_sel: Optional[np.ndarray] = None
+                          ) -> Optional[tuple]:
+    """Restricted master + column generation off the previous support.
+
+    scipy's HiGHS binding exposes no basis warm-start, but the aggregate
+    LP's optimal support is tiny (hundreds of columns at 10k sites): a
+    restricted LP over the previous slot's support + fresh drain block
+    solves in milliseconds, and one reduced-cost pricing pass over the
+    full pool (r_j = c_j + π_gpu·tp + π_pw·power − λ_c·load − α_g)
+    either certifies it optimal for the whole fleet or adds the worst
+    violated columns and re-solves. Returns (prices, λ_R, x_lp, support,
+    rounds, converged); ``converged=False`` means ``max_rounds`` ran
+    out and the last restricted optimum is returned as-is (load is
+    still fully covered thanks to the capacity seed — only the prices
+    are approximate). None only when a restricted LP itself fails —
+    the caller then falls back to the cold full-pool master.
+
+    ``sites_sel`` prices a *sub-fleet*: candidate columns, drain links
+    and the pricing pass restrict to the selected sites, and the caller
+    hands in residual ``load`` / ``r_limit`` with the unselected sites'
+    fixed assignments folded into them — the incremental dirty-site
+    master, O(dirty columns) per round. Selecting every site with the
+    un-reduced inputs is bit-identical to ``sites_sel=None``.
+    """
+    from scipy.optimize import linprog
+
+    pool, cost = cache.pool, cache.cost
+    n = len(pool)
+    S = len(gpus)
+    codes, G = cache.codes, cache.G
+    dgrp = (np.nonzero(old_agg > 1e-9)[0] if old_agg is not None
+            else np.empty(0, dtype=np.intp))
+    pw0 = np.asarray(power_w, float)
+    smask = sel = None
+    if sites_sel is not None:
+        sel = np.asarray(sites_sel, dtype=np.intp)   # sorted site ids
+        smask = np.zeros(S, dtype=bool)
+        smask[sel] = True
+        support = np.asarray(support, dtype=np.intp)
+        support = support[smask[pool.site[support]]]
+        if len(dgrp):
+            dgrp = dgrp[smask[cache.g_site[dgrp]]]
+    idx = np.concatenate([np.asarray(support, dtype=np.intp),
+                          cache.capacity_seed(gpus, pw0, load,
+                                              sites_sel=sites_sel)])
+    if len(dgrp):
+        # every live group needs a column, or its drain link row would
+        # force d_g = old_g with no way to keep the capacity instead
+        covered = np.zeros(G, dtype=bool)
+        covered[codes[idx]] = True
+        missing = dgrp[~covered[dgrp]]
+        if len(missing):
+            idx = np.concatenate([idx, cache.group_cheap[missing]])
+    idx = np.unique(idx)
+    pw = pw0
+    load9 = np.asarray(load, float)
+    if smask is None:
+        u = np.arange(n, dtype=np.intp)
+        Sr, gpus_r, pw_r = S, gpus, pw
+    else:
+        u = np.nonzero(smask[pool.site])[0]     # priced universe
+        # compact GPU/power rows to the selected sites — a 10%-dirty
+        # sub-master otherwise still carries 2S trivial fleet rows,
+        # and the LP pays presolve for every one of them
+        Sr, gpus_r, pw_r = len(sel), gpus[sel], pw[sel]
+    cost_u, tp_u, pow_u = cost[u], cache.tp_f[u], pool.power[u]
+    site_u, cls_u, load_u, codes_u = (pool.site[u], pool.cls[u],
+                                      pool.load[u], codes[u])
+    row_u = site_u if sel is None else np.searchsorted(sel, site_u)
+    res = None
+    for rounds in range(1, max_rounds + 1):
+        k = len(idx)
+        Gd = len(dgrp)
+        nv = k + 9 + Gd
+        c_vec = np.concatenate([cost[idx], np.full(9, DROP_PENALTY),
+                                np.zeros(Gd)])
+        site_k = (pool.site[idx] if sel is None
+                  else np.searchsorted(sel, pool.site[idx]))
+        b = ConstraintBuilder(nv)
+        b.ub(site_k, np.arange(k), cache.tp_f[idx], gpus_r)
+        b.ub(site_k, np.arange(k), pool.power[idx], pw_r)
+        b.ub(np.concatenate([pool.cls[idx], np.arange(9)]),
+             np.concatenate([np.arange(k), k + np.arange(9)]),
+             np.concatenate([-pool.load[idx], -np.ones(9)]), -load9)
+        if Gd:
+            gmap = np.full(G, -1, dtype=np.intp)
+            gmap[dgrp] = np.arange(Gd)
+            loc = gmap[codes[idx]]
+            msk = loc >= 0
+            b.ub(np.concatenate([loc[msk], np.arange(Gd)]),
+                 np.concatenate([np.arange(k)[msk], k + 9 + np.arange(Gd)]),
+                 np.concatenate([-np.ones(int(msk.sum())), -np.ones(Gd)]),
+                 -old_agg[dgrp])
+            b.ub(np.zeros(Gd, dtype=np.intp), k + 9 + np.arange(Gd),
+                 np.ones(Gd), [float(r_limit)])
+        A_ub, b_ub, _, _ = b.build()
+        res = linprog(c_vec, A_ub=A_ub, b_ub=b_ub, method="highs")
+        if not res.success:
+            return None
+        marg = res.ineqlin.marginals
+        pi_g = np.maximum(-marg[:Sr], 0.0)
+        pi_p = np.maximum(-marg[Sr:2 * Sr], 0.0)
+        lam_c = np.maximum(-marg[2 * Sr:2 * Sr + 9], 0.0)
+        alpha = np.zeros(G)
+        lam_r = 0.0
+        if Gd:
+            alpha[dgrp] = np.maximum(
+                -marg[2 * Sr + 9:2 * Sr + 9 + Gd], 0.0)
+            lam_r = float(max(-marg[-1], 0.0))
+        red = (cost_u + pi_g[row_u] * tp_u + pi_p[row_u] * pow_u
+               - lam_c[cls_u] * load_u - alpha[codes_u])
+        red[np.searchsorted(u, idx)] = 0.0
+        vpos = np.nonzero(red < -1e-7)[0]
+        viol = u[vpos]
+        if len(viol) == 0 or rounds == max_rounds:
+            # converged (pricing certifies fleet-wide optimality), or
+            # rounds exhausted: the whole optimum moved (fleet-wide
+            # weather front) and chasing it column-by-column costs more
+            # than it buys — the truncated restricted optimum already
+            # covers all load (capacity seed) and feeds a repair
+            # pipeline that keeps R_L hard, so return it flagged
+            # rather than burning 10x the budget on the cold master
+            x_lp = np.zeros(n)
+            x_lp[idx] = np.maximum(res.x[:k], 0.0)
+            return lam_c, lam_r, x_lp, idx, rounds, len(viol) == 0
+        if len(viol) > batch:
+            viol = viol[np.argpartition(red[vpos], batch)[:batch]]
+        idx = np.unique(np.concatenate([idx, viol]))
+    return None
+
+
+class PlannerLSession:
+    """Stateful Planner-L driver for event-driven fleet-scale re-plans.
+
+    One session owns one fleet (table, sites, objective): the dense
+    column pool, the master cache, and the previous slot's solution are
+    built once and reused every ``plan()`` call. Three things make the
+    chained re-plans cheap where ``plan_l`` starts over each slot:
+
+      * **warm restricted master** — the aggregate LP re-solves over
+        the previous slot's support with reduced-cost pricing over the
+        full pool (``_lp_master_restricted``); milliseconds instead of
+        seconds at 10k sites, exact (certified by pricing) or it falls
+        back to the cold master.
+      * **incremental dirty-site re-plans** (``mode="auto"``) — a site
+        re-solves its quota ILP only when its knowledge-plane power
+        moved beyond ``dirty_tol`` (relative) or its previous
+        assignment no longer fits the new power cap; clean sites reuse
+        the previous slot's accepted counts verbatim. The master still
+        re-prices the whole fleet, and the global repair (trim /
+        project_drains / cover / polish) runs fleet-wide, so the R_L
+        drain budget stays a hard constraint — clean-site reuse can
+        never violate it. Falls back to a full re-plan when fleet load
+        shifts more than ``dirty_tol`` (quotas move everywhere) or the
+        dirty fraction exceeds ``max_dirty_frac`` (incremental would
+        not pay); ``plan.meta["fallback"]`` names the reason.
+      * **λ_R refinement** — after assembly, if fleet drains still
+        exceed R_L, up to ``subgradient_rounds`` multiplicative updates
+        raise λ_R and re-solve only the sites draining beyond their
+        sub-budget (seeded from the master's fractional drains), so one
+        global price no longer under-drains at fleet scale; the hard
+        budget is then enforced by the projection as always.
+
+    ``mode="full"`` re-solves every site but keeps the warm master and
+    λ_R refinement; ``mode="cold"`` replays the exact ``plan_l``
+    pipeline (bit-identical to ``plan_l(old=prev)``, pinned in tests).
+    Every plan carries ``meta`` diagnostics (mode, dirty-set size,
+    master rounds, per-stage seconds). Single-threaded determinism:
+    results are bit-identical across ``workers`` settings, like
+    ``plan_l``.
+    """
+
+    def __init__(self, table: LookupTable, sites: list[SiteSpec], *,
+                 objective: Objective = "latency", r_frac: float = 0.03,
+                 time_limit: float = 60.0, workers: Optional[int] = None,
+                 site_warm: bool = True, dirty_tol: float = 0.02,
+                 max_dirty_frac: float = 0.5, subgradient_rounds: int = 2,
+                 swap_rel_tol: float = 1e-3):
+        self.table = table
+        self.sites = sites
+        self.objective: Objective = objective
+        self.r_frac = float(r_frac)
+        self.time_limit = float(time_limit)
+        self.workers = workers
+        self.site_warm = bool(site_warm)
+        self.dirty_tol = float(dirty_tol)
+        self.max_dirty_frac = float(max_dirty_frac)
+        self.subgradient_rounds = int(subgradient_rounds)
+        self.swap_rel_tol = float(swap_rel_tol)
+        self.pool = ColumnPool.dense(table, len(sites))
+        self.soa = table_soa(table)
+        self.gpus = np.array([s.num_gpus for s in sites], float)
+        self.cost = self.pool.cost(objective)
+        self.row_cost = (self.soa.e2e if objective == "latency"
+                         else self.soa.power)
+        self.cache = _MasterCache(self.pool, self.cost)
+        self._prev: Optional[dict] = None
+        self._subs: dict = {}           # dirty-count -> sub-fleet pool
+
+    def _subfleet(self, D: int) -> tuple:
+        """(pool, cost, restore_best) for a ``D``-site sub-fleet (cached).
+
+        The session pool is dense site-major — every site carries the
+        same table-row block — so the dirty sub-fleet's columns are
+        structurally ``ColumnPool.dense(table, D)`` with sites
+        renumbered to their dirty rank. Selecting all ``S`` sites
+        reproduces the session pool's arrays exactly, which is what
+        keeps all-sites-dirty incremental == full bit-for-bit through
+        the repair stage.
+        """
+        hit = self._subs.get(D)
+        if hit is None:
+            sp = ColumnPool.dense(self.table, D)
+            sc = sp.cost(self.objective)
+            codes = sp.sct()[0]
+            score = sc / np.maximum(sp.load, 1e-12)
+            order = np.argsort(score, kind="stable")[::-1]
+            rb = np.full(int(codes.max()) + 1 if len(codes) else 0, -1,
+                         dtype=np.intp)
+            rb[codes[order]] = order
+            hit = (sp, sc, rb)
+            self._subs[D] = hit
+        return hit
+
+    # ---- dirty-set detection ----
+    def _dirty_mask(self, power: np.ndarray, load: np.ndarray,
+                    meta: dict) -> Optional[np.ndarray]:
+        prev = self._prev
+        lref = np.maximum(np.maximum(load, prev["load"]), 1e-9)
+        if float(np.max(np.abs(load - prev["load"]) / lref)) > self.dirty_tol:
+            meta["fallback"] = "load_moved"
+            return None
+        dp = np.abs(power - prev["power"])
+        ref = np.maximum(np.maximum(prev["power"], power), 1.0)
+        dirty = dp > self.dirty_tol * ref
+        # reuse must stay power-feasible: a site whose new cap is below
+        # its previous assignment's draw has to re-solve
+        used = np.bincount(self.pool.site,
+                           weights=prev["counts2d"].reshape(-1)
+                           * self.pool.power, minlength=len(power))
+        dirty |= power < used - 1e-6
+        frac = float(dirty.mean()) if len(dirty) else 0.0
+        meta["dirty_frac"] = frac
+        if frac > self.max_dirty_frac:
+            meta["fallback"] = "dirty_frac"
+            return None
+        return dirty
+
+    # ---- λ_R subgradient refinement ----
+    def _refine_lam_r(self, counts2d: np.ndarray, quotas: np.ndarray,
+                      power: np.ndarray, old_agg: np.ndarray,
+                      r_limit: float, lam_r: float, x_lp: np.ndarray,
+                      prices: np.ndarray) -> tuple[np.ndarray, int, float]:
+        codes, g_site, G = self.cache.codes, self.cache.g_site, self.cache.G
+        S = counts2d.shape[0]
+        starts = self.cache.starts
+        # per-site drain sub-budgets from the master's fractional drains
+        d_frac = np.maximum(
+            old_agg - np.bincount(codes, weights=x_lp, minlength=G), 0.0)
+        site_budget = np.bincount(g_site, weights=d_frac, minlength=S)
+        rounds = 0
+        for _ in range(self.subgradient_rounds):
+            gcount = np.bincount(
+                codes, weights=counts2d.reshape(-1).astype(float),
+                minlength=G)
+            drains = np.maximum(old_agg - gcount, 0.0)
+            overshoot = float(drains.sum()) - r_limit
+            if overshoot <= 1e-9:
+                break
+            # multiplicative price step ∝ relative violation
+            lam_r = max(lam_r, 1e-6) * (
+                1.0 + min(2.0, overshoot / max(r_limit, 1.0)))
+            site_drains = np.bincount(g_site, weights=drains, minlength=S)
+            # one instance of slack per site — integer rounding noise
+            over = np.nonzero(site_drains > site_budget + 1.0 + 1e-9)[0]
+            if len(over) == 0:
+                break
+            rounds += 1
+            shared = (self.soa.cls, self.soa.tp, self.soa.load,
+                      self.soa.power, self.row_cost, prices,
+                      self.time_limit)
+            # x0=None forces branch-and-cut: the rounding fast path
+            # ignores drain pricing, so a re-priced λ_R only binds
+            # through the ILP's d_g objective terms
+            subs = [(quotas[s], self.gpus[s], power[s],
+                     old_agg[starts[s]:starts[s + 1]], lam_r, None)
+                    for s in over.tolist()]
+            for s, x in zip(over.tolist(),
+                            _solve_sites(shared, subs, self.workers)):
+                counts2d[s] = x
+        return counts2d, rounds, lam_r
+
+    # ---- main entry ----
+    def plan(self, power_w: np.ndarray, load_per_class: np.ndarray, *,
+             mode: str = "auto") -> Plan:
+        """Solve one slot; ``mode`` ∈ {"auto", "full", "cold"}."""
+        t0 = time.perf_counter()
+        pool = self.pool
+        S = len(self.sites)
+        R = len(self.table.rows)
+        power = np.asarray(power_w, float)
+        load = np.maximum(np.asarray(load_per_class, float), 0.0)
+        prev = self._prev
+        meta: dict = {"num_sites": S}
+        old_plan = prev["plan"] if prev is not None else None
+        if old_plan is not None:
+            old_agg = _live_old_agg(old_plan, power, pool)
+            r_limit = _drain_budget(old_agg, self.r_frac)
+        else:
+            old_agg, r_limit = None, np.inf
+
+        dirty = None
+        if prev is None or mode == "cold":
+            mode_eff = "cold"
+        elif mode == "full":
+            mode_eff = "full"
+        else:
+            dirty = self._dirty_mask(power, load, meta)
+            mode_eff = "incremental" if dirty is not None else "full"
+        meta["mode"] = mode_eff
+        meta["dirty_sites"] = (int(dirty.sum()) if dirty is not None
+                               else (0 if mode_eff == "cold" else S))
+
+        # ---- master ----
+        tm = time.perf_counter()
+        warm = None
+        sel = None
+        cmask = flat_prev = None
+        load_m, r_m, clean_drains = load, r_limit, 0.0
+        if mode_eff == "incremental":
+            # fold the clean sites' reused assignments into the RHS and
+            # price only the dirty sub-fleet: residual class demand,
+            # residual drain budget, dirty columns.  With every site
+            # dirty the residuals and the selection reduce bit-for-bit
+            # to the full-mode inputs (the all-dirty == full pin).
+            sel = np.nonzero(dirty)[0]
+            cmask = ~dirty[pool.site]
+            flat_prev = prev["counts2d"].reshape(-1).astype(float)
+            clean_cap = np.bincount(
+                pool.cls[cmask],
+                weights=flat_prev[cmask] * pool.load[cmask], minlength=9)
+            load_m = np.maximum(load - clean_cap, 0.0)
+            gclean = np.bincount(self.cache.codes[cmask],
+                                 weights=flat_prev[cmask],
+                                 minlength=self.cache.G)
+            cgmask = ~dirty[self.cache.g_site]
+            clean_drains = float(np.maximum(
+                old_agg - gclean, 0.0)[cgmask].sum())
+            r_m = r_limit - clean_drains
+            meta["clean_drains"] = clean_drains
+        if (mode_eff != "cold" and prev is not None
+                and (sel is None or len(sel))):
+            warm = _lp_master_restricted(self.cache, self.gpus, power,
+                                         load_m, prev["support"], old_agg,
+                                         r_m, sites_sel=sel)
+        if warm is not None:
+            prices, lam_r, x_lp, support, rounds, converged = warm
+            meta["master"] = "restricted"
+            meta["master_rounds"] = rounds
+            meta["master_converged"] = converged
+        elif sel is not None and len(sel) == 0:
+            # nothing moved beyond tolerance: keep every assignment
+            prices, lam_r = np.zeros(9), 0.0
+            x_lp = np.zeros(len(pool))
+            support = np.asarray(prev["support"], dtype=np.intp)
+            meta["master"] = "skipped"
+        else:
+            if mode_eff != "cold" and prev is not None:
+                meta["master_fallback"] = True
+            prices, lam_r, x_lp = _lp_master(pool, self.gpus, power, load,
+                                             self.cost, old_agg, r_limit)
+            support = np.nonzero(x_lp > 1e-9)[0]
+            meta["master"] = "full"
+        if cmask is not None:
+            # composite fractional solution: clean sites at their reused
+            # counts, dirty sites at the sub-master optimum (empty
+            # clean set leaves x_lp untouched — the all-dirty case)
+            x_lp[cmask] = flat_prev[cmask]
+        meta["t_master"] = time.perf_counter() - tm
+
+        # ---- per-site assignment ----
+        ts = time.perf_counter()
+        quotas = _quotas_from_lp(pool, x_lp, S)
+        counts2d, n_acc, n_hard = _assign_sites(
+            pool, self.soa, quotas, self.gpus, power, old_agg,
+            self.cache.starts, lam_r, x_lp if self.site_warm else None,
+            self.row_cost, prices, self.time_limit, self.workers,
+            self.site_warm, site_mask=dirty)
+        meta["accepted_sites"] = n_acc
+        meta["hard_ilps"] = n_hard
+        if dirty is not None:
+            keep = ~dirty               # clean sites: previous assignment
+            counts2d[keep] = prev["counts2d"][keep]
+        meta["t_sites"] = time.perf_counter() - ts
+
+        # ---- λ_R refinement (skipped in cold mode: plan_l parity) ----
+        lam_rounds = 0
+        if (mode_eff != "cold" and old_agg is not None
+                and self.subgradient_rounds > 0):
+            counts2d, lam_rounds, lam_r = self._refine_lam_r(
+                counts2d, quotas, power, old_agg, r_limit, lam_r, x_lp,
+                prices)
+        meta["lam_r_rounds"] = lam_rounds
+
+        # ---- global repair ----
+        tr = time.perf_counter()
+        if sel is not None:
+            # trim / project / cover / polish over the dirty sub-fleet
+            # only, against the residual load and drain budget — the
+            # clean sites' counts (already repaired last slot) stay
+            # byte-identical and their drains are accounted in r_m
+            D = len(sel)
+            if D:
+                sp, sc, rb = self._subfleet(D)
+                fsub = counts2d[sel].reshape(-1).astype(float)
+                starts = self.cache.starts
+                lens = starts[sel + 1] - starts[sel]
+                off = np.repeat(starts[sel], lens)
+                within = (np.arange(int(lens.sum()))
+                          - np.repeat(np.cumsum(lens) - lens, lens))
+                st, drains_ok = _global_repair(
+                    fsub, sp, sc, self.gpus[sel], power[sel], load_m,
+                    old_agg[off + within], r_m,
+                    deadline=t0 + self.time_limit, exact=False,
+                    restore_best=rb, swap_rel_tol=self.swap_rel_tol)
+                counts2d[sel] = np.round(fsub).astype(int).reshape(D, -1)
+                fleet_dr = st.fleet_drains + clean_drains
+            else:
+                drains_ok, fleet_dr = True, clean_drains
+            if clean_drains > 0.0 and fleet_dr > r_limit + 1e-9:
+                drains_ok = False
+            counts = counts2d.reshape(-1).copy()
+        else:
+            fcounts = counts2d.reshape(-1).astype(float)
+            st, drains_ok = _global_repair(
+                fcounts, pool, self.cost, self.gpus, power, load, old_agg,
+                r_limit, deadline=t0 + self.time_limit,
+                exact=(mode_eff == "cold"),
+                restore_best=self.cache.restore_best,
+                swap_rel_tol=(0.0 if mode_eff == "cold"
+                              else self.swap_rel_tol))
+            counts = np.round(fcounts).astype(int)
+            fleet_dr = st.fleet_drains
+        meta["t_repair"] = time.perf_counter() - tr
+        meta["fleet_drains"] = float(fleet_dr)
+        cap = np.bincount(pool.cls, weights=counts * pool.load, minlength=9)
+        unserved = np.maximum(load - cap, 0.0)
+        unserved[unserved <= 1e-9] = 0.0
+        status = "decomposed"
+        if not drains_ok:
+            status = "decomposed_overbudget"
+            warnings.warn(
+                f"PlannerLSession: drain projection left fleet drains "
+                f"{fleet_dr:.1f} above R_L={r_limit:.1f}; plan "
+                "returned with status 'decomposed_overbudget'",
+                RuntimeWarning, stacklevel=2)
+        plan = Plan(columns=pool.columns(), counts=counts,
+                    unserved=unserved, objective=self.objective,
+                    status=status,
+                    solve_seconds=time.perf_counter() - t0, num_sites=S,
+                    _cols=pool.column_arrays(), _pool=pool, meta=meta)
+        # next-slot support: this slot's fractional LP support + active
+        # plan columns — NOT the whole restricted working set (support ∪
+        # capacity seed ∪ priced-in columns), which compounds across
+        # slots and re-inflates every later master LP
+        support_out = np.unique(np.concatenate(
+            [np.nonzero(x_lp > 1e-9)[0], np.nonzero(counts > 0)[0]]))
+        self._prev = dict(power=power.copy(), load=load.copy(),
+                          counts2d=counts.reshape(S, R).copy(), plan=plan,
+                          support=support_out)
+        return plan
 
 
 def plan_l(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,

@@ -151,10 +151,14 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
     split[iSl] = True
     slack_unit = np.zeros(nv)
     slack_unit[iZ] = DROP_PENALTY * pool.load
+    # the penalty test runs per class: each class's slack is measured
+    # against its own fractional frontier, so a mixed pool does not
+    # inherit the allowance of whichever class has the largest instances
+    cls_vec = np.concatenate([pool.cls, np.arange(9)])
     res = solve_milp(c_vec, A_ub=A_ub, b_ub=b_ub, A_lb=A_lb, b_lb=b_lb,
                      integrality=integrality, upper=upper,
                      time_limit=time_limit, warm=x0, warm_split=split,
-                     warm_slack_unit=slack_unit)
+                     warm_slack_unit=slack_unit, warm_class=cls_vec)
     return Plan(columns=cols, counts=np.round(res.x[iZ]).astype(int),
                 unserved=np.maximum(res.x[iSl], 0.0), objective=objective,
                 status=res.status, solve_seconds=res.solve_seconds,

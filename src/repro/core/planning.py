@@ -119,7 +119,8 @@ class ColumnPool:
     """
 
     __slots__ = ("table", "site", "row_idx", "cls", "tp", "freq", "load",
-                 "power", "e2e", "num_sites", "_sct")
+                 "power", "e2e", "num_sites", "_sct", "_columns",
+                 "_cls_idx")
 
     def __init__(self, table: LookupTable, site: np.ndarray,
                  row_idx: np.ndarray, num_sites: int):
@@ -135,6 +136,8 @@ class ColumnPool:
         self.e2e = soa.e2e[self.row_idx]
         self.num_sites = int(num_sites)
         self._sct = None
+        self._columns = None
+        self._cls_idx = None
 
     def __len__(self) -> int:
         return self.site.shape[0]
@@ -174,14 +177,33 @@ class ColumnPool:
         return self.e2e if objective == "latency" else self.power
 
     def columns(self) -> list[tuple[int, Row]]:
-        """Legacy list[(site, Row)] view (what ``Plan`` stores)."""
-        rows = table_soa(self.table).rows[self.row_idx]
-        return list(zip(self.site.tolist(), rows.tolist()))
+        """Legacy list[(site, Row)] view (what ``Plan`` stores).
+
+        Cached: every Plan built over this pool shares one list (treated
+        as read-only everywhere), so per-slot re-plans at 10k sites stop
+        paying an 860k-tuple materialisation per solve.
+        """
+        if self._columns is None:
+            rows = table_soa(self.table).rows[self.row_idx]
+            self._columns = list(zip(self.site.tolist(), rows.tolist()))
+        return self._columns
 
     def column_arrays(self) -> tuple:
         """The (site, cls, tp, load, power, e2e) tuple ``Plan`` caches."""
         return (self.site, self.cls, self.tp.astype(float), self.load,
                 self.power, self.e2e)
+
+    def cls_index(self, c: int) -> np.ndarray:
+        """Ascending column indices of class ``c`` (cached).
+
+        The greedy fleet moves scan one class at a time; pre-splitting
+        the pool turns their per-step fleet-wide masks into masks over
+        one class's columns (~1/9 of the pool) without changing the
+        candidate order.
+        """
+        if self._cls_idx is None:
+            self._cls_idx = [np.nonzero(self.cls == k)[0] for k in range(9)]
+        return self._cls_idx[c]
 
     def sct(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """(codes [n], g_site, g_cls, g_tp) — (s, c, t) group index.
@@ -349,7 +371,9 @@ class FleetState:
                  gpu_key: np.ndarray, power_w: np.ndarray,
                  enforce_sct: bool = True,
                  old_group: Optional[np.ndarray] = None,
-                 r_limit: float = np.inf):
+                 r_limit: float = np.inf,
+                 restore_best: Optional[np.ndarray] = None):
+        self._gbest = restore_best
         self.counts = counts
         self.pool = pool
         self.cost = cost
@@ -371,6 +395,7 @@ class FleetState:
         self.cap = np.bincount(pool.cls, weights=counts * pool.load,
                                minlength=9)
         self.r_limit = float(r_limit)
+        self._log: Optional[list] = None
         if old_group is None:
             self.old_group = None
             self.fleet_drains = 0.0
@@ -393,7 +418,28 @@ class FleetState:
         """Recompute all derived state after an external counts rollback."""
         self.__init__(self.counts, self.pool, self.cost, self._gpu_cap,
                       self.gpu_key, self._power_w, self.enforce_sct,
-                      self.old_group, self.r_limit)
+                      self.old_group, self.r_limit, self._gbest)
+
+    def log_begin(self) -> None:
+        """Start recording add/remove ops for a cheap ``log_rollback``.
+
+        The rollback replays the inverse ops, so it undoes the counts
+        and headroom deltas in O(ops touched) instead of the O(fleet)
+        ``counts.copy()`` + ``rebuild()`` pair. Float headrooms come
+        back via ``x + a - a``, which can drift a ULP from the
+        canonical bincount — deterministic, but not the byte-for-byte
+        state ``rebuild()`` recomputes, so exact-replay paths
+        (``plan_l`` / session cold mode) must keep using ``rebuild``.
+        """
+        self._log = []
+
+    def log_commit(self) -> None:
+        self._log = None
+
+    def log_rollback(self) -> None:
+        ops, self._log = self._log, None
+        for j, k in reversed(ops):
+            (self.remove if k > 0 else self.add)(j, abs(k))
 
     def drain_headroom(self) -> float:
         return self.r_limit - self.fleet_drains
@@ -408,6 +454,8 @@ class FleetState:
 
     def add(self, j: int, k: int) -> None:
         p = self.pool
+        if self._log is not None:
+            self._log.append((j, k))
         self.counts[j] += k
         self.gpu_left[self.gpu_key[j]] -= k * p.tp[j]
         self.pw_left[p.site[j]] -= k * p.power[j]
@@ -417,6 +465,8 @@ class FleetState:
 
     def remove(self, j: int, k: int) -> None:
         p = self.pool
+        if self._log is not None:
+            self._log.append((j, -k))
         self.counts[j] -= k
         self.gpu_left[self.gpu_key[j]] += k * p.tp[j]
         self.pw_left[p.site[j]] += k * p.power[j]
@@ -441,16 +491,16 @@ class FleetState:
         """
         p = self.pool
         spent = 0.0
+        idx_c = p.cls_index(c)
         while deficit > 1e-9:
             if spent > budget:
                 return None
-            ok = ((p.cls == c)
-                  & (self.gpu_left[self.gpu_key] >= p.tp)
-                  & (self.pw_left[p.site] >= p.power - 1e-9))
+            ok = ((self.gpu_left[self.gpu_key[idx_c]] >= p.tp[idx_c])
+                  & (self.pw_left[p.site[idx_c]] >= p.power[idx_c] - 1e-9))
             if self.enforce_sct:
-                g_act = self.group_row[self.codes]
-                ok &= (g_act < 0) | (g_act == np.arange(len(p)))
-            cand = np.nonzero(ok)[0]
+                g_act = self.group_row[self.codes[idx_c]]
+                ok &= (g_act < 0) | (g_act == idx_c)
+            cand = idx_c[ok]
             if len(cand) == 0:
                 return None
             k_room = np.minimum(
@@ -511,7 +561,8 @@ class FleetState:
         for c in range(9):
             if self.cap[c] - load[c] <= 1e-12:
                 continue
-            idx = np.nonzero((p.cls == c) & (self.counts > 0))[0]
+            idx_c = p.cls_index(c)
+            idx = idx_c[self.counts[idx_c] > 0]
             idx = idx[np.argsort(-ratio[idx], kind="stable")]
             for j in idx:
                 surplus = self.cap[c] - load[c]
@@ -536,9 +587,22 @@ class FleetState:
         group's operating point when the restored capacity should keep
         serving load (a per-instance-cheapest choice would park groups
         at their lightest load point and strand their GPUs).
+
+        The default-score result is a pure function of (pool, cost), so
+        it is cached per state (and a caller holding a precomputed copy
+        can hand it in as ``restore_best`` to skip the fleet-wide
+        argsort entirely — same bytes either way).
         """
         if score is None:
+            if self._gbest is not None:
+                return self._gbest
             score = self.cost / np.maximum(self.pool.load, 1e-12)
+            G = len(self.group_row)
+            order = np.argsort(score, kind="stable")[::-1]
+            best = np.full(G, -1, dtype=np.intp)
+            best[self.codes[order]] = order      # last write = min score
+            self._gbest = best
+            return best
         G = len(self.group_row)
         order = np.argsort(score, kind="stable")[::-1]
         best = np.full(G, -1, dtype=np.intp)
@@ -559,11 +623,57 @@ class FleetState:
         power-scaled before drains are counted), so this terminates
         inside the budget in all but pathological fractional-scaling
         corners; returns whether the budget is met.
+
+        The common (eviction-free) case runs as a single cost-ascending
+        walk over the drained groups instead of the historical
+        one-add-per-fleet-scan loop — bit-identical, because before any
+        eviction a group's restore row (its active point, else its
+        cheapest) and that row's cost never change while it stays
+        drained, and adds only *consume* headroom: the scan loop would
+        keep re-picking the same cheapest group until it is restored or
+        out of room, which is exactly the walk. Groups that run out of
+        room mid-walk are exactly the ones the scan would drop from its
+        candidate set, so on walk exhaustion the state matches the scan
+        at its first no-fit iteration and the eviction loop takes over.
         """
         if self.old_group is None or self.fleet_drains <= self.r_limit + 1e-9:
             return True
-        p = self.pool
         cheapest = self._group_best()
+        if self._project_walk(cheapest):
+            return True
+        return self._project_evict(cheapest)
+
+    def _project_walk(self, cheapest: np.ndarray) -> bool:
+        """Eviction-free restore walk; False = blocked, needs evictions."""
+        p = self.pool
+        gs = np.nonzero(self.drains > 1e-9)[0]
+        js = np.where(self.group_row[gs] >= 0, self.group_row[gs],
+                      cheapest[gs])
+        ok = js >= 0
+        gs, js = gs[ok], js[ok]
+        order = np.lexsort((np.arange(len(gs)), self.cost[js]))
+        blocked = False
+        for i in order:
+            g, j = int(gs[i]), int(js[i])
+            while self.drains[g] > 1e-9:
+                room = min(
+                    self.gpu_left[self.gpu_key[j]] // max(p.tp[j], 1),
+                    np.floor(self.pw_left[p.site[j]]
+                             / max(p.power[j], 1e-12) + 1e-9))
+                if room < 1:
+                    blocked = True
+                    break
+                k = int(min(room, np.ceil(self.drains[g] - 1e-9),
+                            self.fleet_drains - self.r_limit + 1))
+                self.add(j, max(1, k))
+                if self.fleet_drains <= self.r_limit + 1e-9:
+                    return True
+        return not blocked or self.fleet_drains <= self.r_limit + 1e-9
+
+    def _project_evict(self, cheapest: np.ndarray) -> bool:
+        """The historical scan loop — reached only when restores need
+        room freed by evicting no-drain instances at drained sites."""
+        p = self.pool
         _, g_site, _, _ = p.sct()
         for _ in range(100_000):
             if self.fleet_drains <= self.r_limit + 1e-9:
@@ -616,7 +726,8 @@ def trim_surplus(counts: np.ndarray, pool: ColumnPool,
         surplus = cap[c] - load[c]
         if surplus <= 1e-12:
             continue
-        idx = np.nonzero((pool.cls == c) & (counts > 0))[0]
+        idx_c = pool.cls_index(c)
+        idx = idx_c[counts[idx_c] > 0]
         idx = idx[np.argsort(-ratio[idx], kind="stable")]
         for j in idx:
             if surplus <= 1e-12:

@@ -171,6 +171,12 @@ class HeronRouter:
     straggler_min_haircut: float = STRAGGLER_MIN_HAIRCUT
     planner_method: Method = "auto"       # "monolithic" = exact reference
     planner_workers: Optional[int] = None  # site-ILP process pool size
+    # event-driven Planner-L: keep a PlannerLSession across slots and
+    # re-plan incrementally (dirty-site sub-solve) when knowledge-plane
+    # power moved less than ``dirty_tol`` on most sites. Default off —
+    # the stateless plan_l path is the pinned reference behavior.
+    incremental: bool = False
+    dirty_tol: float = 0.02
 
     _plan_l: Optional[Plan] = None
     _plan_s: Optional[Plan] = None
@@ -179,6 +185,7 @@ class HeronRouter:
     _site_latency_ewma: Optional[np.ndarray] = None
     _site_alive: Optional[np.ndarray] = None
     _now: float = 0.0
+    _session = None                     # lazy PlannerLSession
 
     def __post_init__(self):
         S = len(self.sites)
@@ -231,12 +238,31 @@ class HeronRouter:
     # ---------------- planning ----------------
     def step_slot(self, predicted_power_w: np.ndarray,
                   predicted_load: np.ndarray) -> Plan:
-        """Run Planner-L for the next 15-min slot."""
-        p = plan_l(self.table, self.sites,
-                   self._effective_power(predicted_power_w), predicted_load,
-                   objective=self.objective, old=self._plan_l,
-                   r_frac=self.r_frac, time_limit=self.time_limit_l,
-                   method=self.planner_method, workers=self.planner_workers)
+        """Run Planner-L for the next 15-min slot.
+
+        With ``incremental=True`` (and the default decomposed method) the
+        slot solve goes through a persistent ``PlannerLSession``: sites
+        whose effective power moved within ``dirty_tol`` keep last slot's
+        accepted assignment and only the dirty sub-fleet re-solves, with
+        automatic fall-back to a full re-plan on fleet-wide shifts (see
+        ``PlannerLSession`` for the dirty/fallback rules).
+        """
+        power = self._effective_power(predicted_power_w)
+        if self.incremental and self.planner_method != "monolithic":
+            if self._session is None:
+                from repro.core.planner_l import PlannerLSession
+                self._session = PlannerLSession(
+                    self.table, self.sites, objective=self.objective,
+                    r_frac=self.r_frac, time_limit=self.time_limit_l,
+                    workers=self.planner_workers,
+                    dirty_tol=self.dirty_tol)
+            p = self._session.plan(power, predicted_load)
+        else:
+            p = plan_l(self.table, self.sites, power, predicted_load,
+                       objective=self.objective, old=self._plan_l,
+                       r_frac=self.r_frac, time_limit=self.time_limit_l,
+                       method=self.planner_method,
+                       workers=self.planner_workers)
         self._cfgtor.apply(self._plan_l, p, self._now)
         self._plan_l = p
         self._plan_s = None
@@ -336,17 +362,28 @@ class HeronRouter:
         current plan (most provisioned spare serving capacity first), so
         failover lands where the planner already wanted load. Falls back
         to alive-sites-by-index when no plan has been solved yet.
+
+        The aggregation runs columnar off ``plan.column_arrays()`` — a
+        trip at fleet scale used to walk ``wrr_weights()``'s per-group
+        python lists (every active column, dict-of-tuples) just to sum
+        per-site weights the arrays give in one ``bincount``.
         """
-        alive = [s for s in range(len(self.sites))
-                 if self._site_alive[s] and s != site]
+        S = len(self.sites)
+        alive = self._site_alive.copy()
+        alive[site] = False
+        idx = np.nonzero(alive)[0]
         plan = self._plan_s or self._plan_l
         if plan is None:
-            return alive
-        agg = np.zeros(len(self.sites))
-        for rows in plan.wrr_weights().values():
-            for s, _row, w in rows:
-                agg[s] += w
-        return sorted(alive, key=lambda s: (-agg[s], s))
+            return idx.tolist()
+        c_site, c_cls, _, c_load, _, _ = plan.column_arrays()
+        counts = np.asarray(plan.counts, float)
+        cap = plan.capacity()
+        w = counts * c_load / np.maximum(cap[c_cls], 1e-300)
+        w[cap[c_cls] <= 0] = 0.0
+        agg = np.bincount(c_site, weights=w, minlength=S)
+        # descending weight, index ascending on ties (lexsort: last key
+        # is primary) — same order the sorted(key=(-agg, s)) walk gave
+        return idx[np.lexsort((idx, -agg[idx]))].tolist()
 
     # ---------------- dispatch ----------------
     def dispatch(self, arrivals_rps: np.ndarray) -> DispatchResult:

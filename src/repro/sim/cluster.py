@@ -141,6 +141,10 @@ class WeekResult:
     # fault/chaos counters attached by chaos-aware drivers (empty for a
     # plain week run) — round-trips through to_json/from_json
     faults: dict = field(default_factory=dict)
+    # per-slot Planner-L cost counters ({"solve_s": [...], "mode": [...],
+    # "dirty_sites": [...]}) so bench/co-sim runs expose planner cost
+    # without a profiler; "stateless" mode / dirty -1 = plain plan_l
+    planner: dict = field(default_factory=dict)
 
     def goodput(self) -> np.ndarray:
         return np.array([s.total_served for s in self.slots])
@@ -162,13 +166,16 @@ class WeekResult:
                "slots": [s.to_json() for s in self.slots]}
         if self.faults:
             out["faults"] = dict(self.faults)
+        if self.planner:
+            out["planner"] = dict(self.planner)
         return out
 
     @classmethod
     def from_json(cls, d: dict) -> "WeekResult":
         return cls(name=d["name"],
                    slots=[SlotMetrics.from_json(s) for s in d["slots"]],
-                   faults=dict(d.get("faults", {})))
+                   faults=dict(d.get("faults", {})),
+                   planner=dict(d.get("planner", {})))
 
 
 def goodput_improvement(heron: WeekResult, baseline: WeekResult) -> np.ndarray:
@@ -223,6 +230,7 @@ def simulate_week(scheduler, table: LookupTable,
                   slots: Optional[int] = None,
                   planner_method: Method = "auto",
                   planner_workers: Optional[int] = None,
+                  incremental: bool = False, dirty_tol: float = 0.02,
                   scenario: Optional[ScenarioEngine] = None,
                   seed: Optional[int] = None,
                   record: Union[str, bool, None] = None) -> WeekResult:
@@ -237,6 +245,8 @@ def simulate_week(scheduler, table: LookupTable,
     Planner-L solve path for the Heron policies ("auto" = the
     drain-priced decomposition at every fleet size; "monolithic" = the
     exact reference) and the site-ILP pool size.
+    ``incremental``/``dirty_tol`` route Heron slot re-plans through a
+    persistent ``PlannerLSession`` (dirty-site incremental path).
 
     ``scenario`` perturbs per-slot truth and emits control events
     (``repro.sim.scenarios``); ``seed`` makes the whole run reproducible
@@ -255,7 +265,8 @@ def simulate_week(scheduler, table: LookupTable,
         policy = make_policy(scheduler, table, sites, r_frac=r_frac,
                              time_limit=time_limit,
                              planner_method=planner_method,
-                             planner_workers=planner_workers)
+                             planner_workers=planner_workers,
+                             incremental=incremental, dirty_tol=dirty_tol)
         name = scheduler
     else:
         policy = scheduler
@@ -271,6 +282,9 @@ def simulate_week(scheduler, table: LookupTable,
     old: Optional[Plan] = None
     cfgtor = Configurator()
     out: list[SlotMetrics] = []
+    pl_solve: list[float] = []
+    pl_mode: list[str] = []
+    pl_dirty: list[int] = []
     for t in range(T):
         for ev in sc.controls_at(t):
             policy.on_event(ev)
@@ -283,6 +297,10 @@ def simulate_week(scheduler, table: LookupTable,
         loads_true = arrivals_rps[:, t] * sc.arrival_factor[:, t]
 
         p = policy.plan_slot(pred_w, loads_known)
+        me = getattr(p, "meta", None) or {}
+        pl_solve.append(float(p.solve_seconds))
+        pl_mode.append(str(me.get("mode", "stateless")))
+        pl_dirty.append(int(me.get("dirty_sites", -1)))
         reconfigs = cfgtor.reconfig_count(old, p)
         old = p
         # reality: any plan drawing beyond actual generation browns out
@@ -307,7 +325,9 @@ def simulate_week(scheduler, table: LookupTable,
     # landing exactly on the boundary) so a reused policy ends consistent
     for ev in sc.controls_after(T):
         policy.on_event(ev)
-    wk = WeekResult(name=name, slots=out)
+    wk = WeekResult(name=name, slots=out,
+                    planner={"solve_s": pl_solve, "mode": pl_mode,
+                             "dirty_sites": pl_dirty})
     if record:
         # the seed kwarg is inoperative when an explicit scenario is
         # passed (the engine carries its own) — keep it out of the auto

@@ -94,6 +94,9 @@ class E2EResult:
     # of simulate_week's dispatched rps over the same scenario
     dispatched_fraction: Optional[float] = None
     faults: dict = field(default_factory=dict)
+    # per-window Planner-L cost counters (solve_s / mode / dirty_sites),
+    # mirroring WeekResult.planner — filled by simulate_fleet_serving
+    planner: dict = field(default_factory=dict)
 
     @property
     def goodput_fraction(self) -> float:
@@ -121,6 +124,8 @@ class E2EResult:
         if self.dispatched_fraction is not None:
             d["dispatched_fraction"] = float(self.dispatched_fraction)
         d["faults"] = dict(self.faults)
+        if self.planner:
+            d["planner"] = dict(self.planner)
         return d
 
 
@@ -336,6 +341,9 @@ def simulate_fleet_serving(
 
     offered_requests = 0
     offered_tokens = 0
+    pl_solve: list = []      # per-window Planner-L wall seconds
+    pl_mode: list = []       # session mode ("incremental"/"full"/"stateless")
+    pl_dirty: list = []      # dirty-set size (-1 when not incremental)
     nwin = int(np.ceil(ticks / window_ticks))
     tick = 0
     for w in range(nwin):
@@ -359,6 +367,10 @@ def simulate_fleet_serving(
         win_s = max(ch.end_s - ch.start_s, 1e-9)
         plan_load = cls_counts / win_s * plan_load_scale
         plan = policy.plan_slot(pred_w, plan_load)
+        me = getattr(plan, "meta", None) or {}
+        pl_solve.append(float(plan.solve_seconds))
+        pl_mode.append(str(me.get("mode", "stateless")))
+        pl_dirty.append(int(me.get("dirty_sites", -1)))
         actual_w = power_mw[:, col] * sc.power_factor[:, min(tick, ticks - 1)] * 1e6
         realized = apply_power_reality(plan, actual_w)
         fleet.apply_plan(plan, realized, nominal_budget)
@@ -403,4 +415,6 @@ def simulate_fleet_serving(
         name, ticks, offered_requests=offered_requests,
         offered_tokens=offered_tokens,
         faults_record=injector.to_json())
+    res.planner = {"solve_s": pl_solve, "mode": pl_mode,
+                   "dirty_sites": pl_dirty}
     return (res, fleet) if return_fleet else res

@@ -22,9 +22,11 @@ new baselines: ``register_policy("mine", my_factory)`` and every driver,
 benchmark, and example picks it up. Factories receive
 ``(table, sites, **kwargs)`` where kwargs are the driver's standard knobs
 (``r_frac``, ``time_limit``, ``planner_method``, ``planner_workers``,
-``packing``, and the Heron straggler knobs ``straggler_alpha`` /
-``straggler_threshold`` / ``straggler_min_haircut``) — ignore what does
-not apply.
+``packing``, the Heron straggler knobs ``straggler_alpha`` /
+``straggler_threshold`` / ``straggler_min_haircut``, and the
+event-driven Planner-L knobs ``incremental`` / ``dirty_tol`` routing
+slot solves through a persistent ``PlannerLSession``) — ignore what
+does not apply.
 
 Failover (optional extension): a policy may additionally expose
 ``failover_order(site) -> list[int]`` — the preferred landing order for
@@ -106,6 +108,7 @@ def _heron_factory(objective: str) -> PolicyFactory:
              straggler_alpha: float = STRAGGLER_ALPHA,
              straggler_threshold: float = STRAGGLER_THRESHOLD,
              straggler_min_haircut: float = STRAGGLER_MIN_HAIRCUT,
+             incremental: bool = False, dirty_tol: float = 0.02,
              **_ignored) -> HeronRouter:
         return HeronRouter(table=table, sites=sites, objective=objective,
                            r_frac=r_frac, time_limit_l=time_limit,
@@ -113,7 +116,8 @@ def _heron_factory(objective: str) -> PolicyFactory:
                            planner_workers=planner_workers, packing=packing,
                            straggler_alpha=straggler_alpha,
                            straggler_threshold=straggler_threshold,
-                           straggler_min_haircut=straggler_min_haircut)
+                           straggler_min_haircut=straggler_min_haircut,
+                           incremental=incremental, dirty_tol=dirty_tol)
     return make
 
 

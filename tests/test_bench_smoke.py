@@ -1,0 +1,56 @@
+"""Benchmark smoke-tier hygiene (ISSUE 9 satellite).
+
+``python -m benchmarks.run --smoke`` is the does-everything-still-run
+gate: every module at toy sizes, and the committed repo-root
+``BENCH_*.json`` perf trackers must come out byte-identical — smoke
+numbers are NOT baselines, so a smoke pass (even one that passes
+``--update-tracker`` by mistake) may never rewrite them.
+
+The test drives the real ``benchmarks.run.main`` entry point on the two
+cheapest tracker-writing modules (dispatch, planning — the latter
+covers the new mega-fleet incremental path at 64 sites) with
+``--update-tracker`` deliberately set, then asserts the root trackers'
+bytes did not move. artifacts/bench/ copies are allowed to change;
+that's their job.
+"""
+from __future__ import annotations
+
+import glob
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tracker_bytes() -> dict:
+    out = {}
+    for p in sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))):
+        with open(p, "rb") as f:
+            out[os.path.basename(p)] = f.read()
+    return out
+
+
+def test_smoke_never_touches_root_trackers(capsys):
+    from benchmarks import common
+    from benchmarks.run import main
+
+    before = _tracker_bytes()
+    assert before, "committed BENCH_*.json trackers missing from repo root"
+    try:
+        rc = main(["--smoke", "--only", "bench_dispatch,bench_planning",
+                   "--update-tracker"])
+    finally:
+        # module-level flags: reset so other tests see the defaults
+        common.SMOKE = False
+        common.UPDATE_TRACKER = False
+    captured = capsys.readouterr()
+    assert rc == 0, f"smoke run failed:\n{captured.out}"
+    # both modules actually produced CSV rows (smoke ran, not skipped)
+    assert "dispatch_vec_16sites" in captured.out
+    assert "plan_l_mega_64sites" in captured.out
+    assert "plan_l_incremental_64sites_10pct" in captured.out
+
+    after = _tracker_bytes()
+    assert after == before, (
+        "smoke run rewrote committed trackers: "
+        + ", ".join(k for k in before
+                    if after.get(k) != before[k]))

@@ -1,0 +1,123 @@
+"""PlannerLSession — incremental dirty-set re-plans (ISSUE 9).
+
+Pins the contracts the interactive-rate planning path must keep:
+
+* ``mode="cold"`` is bit-identical to stateless ``plan_l`` (the session
+  is an optimization layer, not a different planner);
+* with every site dirty the incremental path must reduce to the full
+  warm re-plan bit-for-bit (the dirty-set machinery only ever *skips*
+  provably clean work, it never changes the answer);
+* clean-site quota reuse may never manufacture drain-budget headroom:
+  the re-plan's fleet drains stay under ``drain_limit`` of the previous
+  slot even when only a few sites are re-priced;
+* the solve is deterministic across ``planner_workers`` 1/2/4 at
+  mega-fleet scale (4096 sites, slow tier) — process-pool scheduling
+  must not leak into the plan.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_MODEL
+from repro.core.lookup import build_table
+from repro.core.planner_l import (PlannerLSession, SiteSpec, drain_limit,
+                                  plan_l)
+from repro.data.wind import make_synthetic_population
+from repro.data.workload import make_trace
+from repro.power.model import H100_DGX, SUPERPOD_GPUS, SUPERPOD_PEAK_MW
+
+GRID = dict(load_grid=(0.25, 1.0, 4.0, 16.0), freq_grid=(1.4, 2.0))
+
+
+@pytest.fixture(scope="module")
+def table():
+    trace = make_trace("coding", base_rps=1.0, seed=11)
+    return build_table(PAPER_MODEL, trace, H100_DGX, **GRID)
+
+
+def _fleet(n: int, load_frac: float = 0.3):
+    pop = make_synthetic_population(n, seed=13)
+    sites, power = [], []
+    for s in pop:
+        p20 = np.percentile(s.long_term_mw, 20.0)
+        pods = max(1, int(p20 // SUPERPOD_PEAK_MW))
+        sites.append(SiteSpec(s.name, pods * SUPERPOD_GPUS))
+        power.append(min(s.series_mw[100], p20) * 1e6)
+    power = np.array(power)
+    total = sum(s.num_gpus for s in sites)
+    load = np.full(9, total * 0.1 * load_frac / 9)
+    return sites, power, load
+
+
+def test_session_cold_matches_plan_l(table):
+    sites, power, load = _fleet(16)
+    p0 = plan_l(table, sites, power, load)
+    sess = PlannerLSession(table, sites)
+    q0 = sess.plan(power, load, mode="cold")
+    assert np.array_equal(p0.counts, q0.counts)
+    assert np.allclose(p0.unserved, q0.unserved)
+    # warm slot against the previous plan pins the drain-priced path too
+    p1 = plan_l(table, sites, power * 0.97, load, old=p0)
+    sess2 = PlannerLSession(table, sites)
+    sess2.plan(power, load, mode="cold")
+    q1 = sess2.plan(power * 0.97, load, mode="cold")
+    assert np.array_equal(p1.counts, q1.counts)
+
+
+def test_all_dirty_incremental_equals_full(table):
+    sites, power, load = _fleet(16)
+    sa = PlannerLSession(table, sites, max_dirty_frac=1.0, dirty_tol=0.0)
+    sb = PlannerLSession(table, sites, max_dirty_frac=1.0, dirty_tol=0.0)
+    sa.plan(power, load, mode="cold")
+    sb.plan(power, load, mode="cold")
+    pw2 = power * np.linspace(0.9, 1.1, len(sites))
+    qa = sa.plan(pw2, load, mode="auto")
+    qb = sb.plan(pw2, load, mode="full")
+    assert qa.meta["mode"] == "incremental"
+    assert qa.meta["dirty_sites"] == len(sites)
+    assert np.array_equal(qa.counts, qb.counts), \
+        "all-dirty incremental diverged from the full warm re-plan"
+    assert np.allclose(qa.unserved, qb.unserved)
+
+
+def test_clean_site_reuse_respects_drain_budget(table):
+    sites, power, load = _fleet(16)
+    r_frac = 0.03
+    sess = PlannerLSession(table, sites, r_frac=r_frac, dirty_tol=0.02)
+    prev = sess.plan(power, load, mode="cold")
+    rng = np.random.default_rng(5)
+    for step in range(3):
+        # two sites lose 20-30% power each slot; the other 14 reuse
+        # their accepted quota solutions — the reused share plus the
+        # re-priced share must still respect the *fleet* budget
+        pw = power.copy()
+        sel = rng.choice(len(sites), 2, replace=False)
+        pw[sel] *= rng.uniform(0.70, 0.80, 2)
+        p = sess.plan(pw, load, mode="auto")
+        lim = drain_limit(prev, pw, r_frac)
+        assert p.meta["fleet_drains"] <= lim + 1e-6, (
+            f"step {step}: drains {p.meta['fleet_drains']:.1f} "
+            f"exceed budget {lim:.1f} (mode {p.meta['mode']})")
+        prev, power = p, pw
+
+
+@pytest.mark.slow
+def test_workers_determinism_4096(table):
+    sites, power, load = _fleet(4096)
+    plans = []
+    for w in (1, 2, 4):
+        sess = PlannerLSession(table, sites, workers=w)
+        sess.plan(power, load, mode="cold")
+        pw1 = power * 0.9                      # drain budget binds
+        sess.plan(pw1, load, mode="full")
+        rng = np.random.default_rng(5)
+        sel = rng.choice(4096, 409, replace=False)
+        pw2 = pw1.copy()
+        pw2[sel] *= rng.uniform(0.7, 0.95, 409)
+        plans.append(sess.plan(pw2, load, mode="auto"))
+    for p in plans[1:]:
+        assert np.array_equal(plans[0].counts, p.counts), \
+            "plan depends on planner_workers"
+        assert np.allclose(plans[0].unserved, p.unserved)
+    assert plans[0].meta["mode"] == "incremental"

@@ -408,7 +408,11 @@ def test_plan_s_warm_hits_survive_drought(table, sites):
     """Two-part acceptance regression (ROADMAP item): warm hits must not
     collapse when the objective is slack-saturated. A drought chain keeps
     warm-hitting, and warm drops stay within one instance granularity of
-    the cold solve's."""
+    the cold solve's. The per-class allowance pins the count at exactly
+    7/8 — one step's warm point shifts drops beyond its own class's
+    fractional frontier and must cold-solve (under the old pool-wide
+    allowance every class inherited the largest class's granularity and
+    all 8 steps warm-hit, over-admitting that step's drops)."""
     load = np.full(9, 30.0)
     power = np.array([2e5, 1e5, 5e4])       # deep drought
     pl = plan_l(table, sites, power, load)
@@ -427,7 +431,7 @@ def test_plan_s_warm_hits_survive_drought(table, sites):
         assert (warm.unserved.sum()
                 <= cold.unserved.sum() + max_row_load + 1e-6)
         prev = warm
-    assert hits >= 5, f"warm hits collapsed in drought: {hits}/8"
+    assert hits == 7, f"drought warm-hit count moved: {hits}/8 (expect 7)"
 
 
 def test_drought_allowance_tracks_lp_frontier():
@@ -451,6 +455,30 @@ def test_drought_allowance_tracks_lp_frontier():
     assert _drought_allowance(x_zero, split, 0.0, unit) == 0.0
     # legacy scalar path unchanged when no per-variable units are given
     assert _drought_allowance(x_lp, split, 123.0, None) == 123.0
+
+
+def test_drought_allowance_is_per_class():
+    """A mixed pool must not hand every class the largest class's
+    allowance: the per-class mask restricts the frontier to the class's
+    own columns, and within a class the frontier is the *sum* of its
+    fractional units (each fractional column rounds down at most once)."""
+    from repro.core.milp import _drought_allowance, _warm_accept
+
+    split = np.array([False, False, False, False, True, True])
+    unit = np.array([10.0, 10.0, 500.0, 0.0, 0.0, 0.0])
+    cls = np.array([0, 0, 1, 1, 0, 1])
+    x_lp = np.array([1.5, 2.25, 3.5, 1.0, 0.7, 0.0])
+    # class 0: two fractional 10-unit columns -> 20, not the pool's 500
+    assert _drought_allowance(x_lp, split, 0.0, unit, sel=cls == 0) == 20.0
+    # class 1: its own fractional 500-unit column
+    assert _drought_allowance(x_lp, split, 0.0, unit, sel=cls == 1) == 500.0
+    # acceptance: class-0 slack beyond its 20-unit frontier is rejected
+    # even though the pool contains a 500-unit class
+    c = np.array([1.0, 1.0, 1.0, 1.0, 1e6, 1e6])
+    x_over = np.array([1.0, 2.0, 3.5, 1.0, 0.7 + 30.0 / 1e6, 0.0])
+    assert not _warm_accept(c, x_over, x_lp, split, 0.0, 0.0, unit, cls)
+    x_ok = np.array([1.0, 2.0, 3.5, 1.0, 0.7 + 15.0 / 1e6, 0.0])
+    assert _warm_accept(c, x_ok, x_lp, split, 0.0, 0.0, unit, cls)
 
 
 def test_plan_s_warm_slack_tighter_than_pool_max(table, sites):
