@@ -1,0 +1,148 @@
+"""Grid-interactive A/B — Heron vs DR-Heron vs XWind (ISSUE 10).
+
+Three scenario families on the healthy-power window, with site power
+scaled down so the economic signals actually bind:
+
+  * ``price_spike`` — the biggest site's electricity price AND grid
+    carbon ramp to 4x for half the window. Plain Heron keeps serving
+    through the spike and eats the bill; DR-Heron sheds the spiked
+    site's effective power (demand response) and XWind re-plans under
+    the ``"cost"`` objective with the announced prices as site rates.
+    Reported: goodput, $/kilo-request and gCO2/request per policy, and
+    DR-Heron's ratios vs Heron — the acceptance gate is DR-Heron at or
+    below Heron on BOTH $/req and carbon/req within a 2% goodput loss.
+  * ``curtailment`` — a 50% fleet-wide curtailment order; DR-Heron's
+    pre-drain haircut sheds load before the brownout path has to.
+  * ``ride_through`` — a depth-0.98 GridTrip brownout on the biggest
+    site, Heron with and without a pre-charged ``BatteryBank``: the
+    battery arm must serve strictly more than the batteryless arm.
+
+Writes ``BENCH_grid.json`` at the repo root under the
+``--update-tracker`` discipline (artifacts/bench/grid.json always).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.common import Timer, row, save_tracker
+from repro.power.grid import BatteryBank
+from repro.sim.cluster import simulate_week
+from repro.sim.policy import make_policy
+from repro.sim.scenarios import (CarbonRamp, Curtailment, GridTrip,
+                                 PriceSpike, ScenarioEngine)
+from repro.sim.testbed import paper_grid
+
+POLICIES = ("heron", "dr_heron", "xwind")
+START = 200                   # healthy-power window (events are the signal)
+VOLUME = 60.0
+ARRIVAL_X = 4.0               # stress volume on the window
+POWER_SCALE = 0.04            # shrink caps so price shedding binds
+TRIP_POWER_SCALE = 0.1        # ride-through arm: trip must bind, not bill
+SPIKE = 4.0                   # price/carbon multiplier on site 0
+DR_MIN_KEEP = 0.1
+SEED = 5
+
+
+def _metrics(wk) -> dict:
+    srv = max(float(wk.goodput().sum()), 1e-9)
+    cost = float(wk.cost_usd().sum())
+    carbon = float(wk.carbon_g().sum())
+    return {"goodput": srv, "drops": float(wk.drops().sum()),
+            "cost_usd": cost, "carbon_g": carbon,
+            "usd_per_kreq": cost / srv * 1e3, "g_per_req": carbon / srv}
+
+
+def run(fast: bool = True):
+    rows = []
+    t = Timer()
+    slots = 4 if common.SMOKE else (8 if fast else 16)
+    q = max(slots // 4, 1)
+    g = paper_grid("coding", multiplier=VOLUME)
+    table, sites = g.table, g.sites
+    pw = g.power_mw[:, START:START + slots]
+    ar = g.arrivals_rps[:, START:START + slots] * ARRIVAL_X
+    S = len(sites)
+
+    families = {
+        "price_spike": [PriceSpike(magnitude=SPIKE, start=q, duration=2 * q,
+                                   sites=(0,)),
+                        CarbonRamp(magnitude=SPIKE, start=q, duration=2 * q,
+                                   sites=(0,))],
+        "curtailment": [Curtailment(frac=0.5, start=q, duration=2 * q)],
+    }
+
+    payload = {"slots": slots, "start": START, "volume": VOLUME,
+               "arrival_x": ARRIVAL_X, "power_scale": POWER_SCALE,
+               "spike": SPIKE, "seed": SEED, "families": {}}
+    with t():
+        pws = pw * POWER_SCALE
+        for fam, events in families.items():
+            by_pol = {}
+            for name in POLICIES:
+                pol = make_policy(name, table, sites,
+                                  dr_min_keep=DR_MIN_KEEP)
+                wk = simulate_week(pol, table, sites, pws, ar, seed=SEED,
+                                   scenario=ScenarioEngine(events,
+                                                           seed=SEED))
+                by_pol[name] = _metrics(wk)
+            h, d = by_pol["heron"], by_pol["dr_heron"]
+            payload["families"][fam] = {
+                "policies": by_pol,
+                "dr_goodput_ratio": d["goodput"] / h["goodput"],
+                "dr_usd_ratio": d["usd_per_kreq"] / h["usd_per_kreq"],
+                "dr_carbon_ratio": d["g_per_req"] / h["g_per_req"],
+            }
+
+        # ride-through: same trip, battery vs batteryless Heron
+        pwt = pw * TRIP_POWER_SCALE
+        trip = [GridTrip(site=0, start=slots // 2, duration=2, depth=0.98)]
+        batt = BatteryBank.sized(S, capacity_mwh=3.0, charge_rate_mw=6.0,
+                                 discharge_rate_mw=6.0, soc_frac=1.0)
+        arms = {}
+        for arm, bank in (("batteryless", None), ("battery", batt)):
+            wk = simulate_week("heron", table, sites, pwt, ar, seed=SEED,
+                               scenario=ScenarioEngine(trip, seed=SEED),
+                               battery=bank)
+            arms[arm] = _metrics(wk)
+        payload["families"]["ride_through"] = {
+            "arms": arms,
+            "battery_goodput_gain": (arms["battery"]["goodput"]
+                                     - arms["batteryless"]["goodput"]),
+        }
+    us_total = t.us
+    n_runs = len(families) * len(POLICIES) + 2
+
+    for fam in families:
+        f = payload["families"][fam]
+        h = f["policies"]["heron"]
+        d = f["policies"]["dr_heron"]
+        x = f["policies"]["xwind"]
+        rows.append(row(
+            f"grid_{fam}", us_total / n_runs,
+            f"$/kreq heron {h['usd_per_kreq']:.1f} dr "
+            f"{d['usd_per_kreq']:.1f} xwind {x['usd_per_kreq']:.1f} | "
+            f"g/req heron {h['g_per_req']:.1f} dr {d['g_per_req']:.1f} "
+            f"(dr goodput x{f['dr_goodput_ratio']:.3f})"))
+    rt = payload["families"]["ride_through"]
+    rows.append(row(
+        "grid_ride_through", us_total / n_runs,
+        f"goodput battery {rt['arms']['battery']['goodput']:.0f} vs "
+        f"batteryless {rt['arms']['batteryless']['goodput']:.0f} "
+        f"(+{rt['battery_goodput_gain']:.0f} rps*slots)"))
+    save_tracker("grid", payload)
+    return rows
+
+
+def main():
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--update-tracker", action="store_true")
+    args = ap.parse_args()
+    common.UPDATE_TRACKER = args.update_tracker
+    common.emit(run(fast=not args.full))
+
+
+if __name__ == "__main__":
+    main()

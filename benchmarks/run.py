@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the contract. Modules:
     bench_profiling        Fig 13/§5.1  (lookup tables)
     bench_goodput          Figs 8/14/15 (drops + goodput vs baselines)
     bench_scenarios        ISSUE 5      (policies under injected scenarios)
+    bench_grid             ISSUE 10     (price/carbon/battery grid A/B)
     bench_tradeoff         Fig 16       (latency ↔ power)
     bench_components       Fig 17/§5.3  (Planner-S, packing, elasticity)
     bench_scalability      Fig 14 right (planner runtimes vs #sites)
@@ -48,6 +49,7 @@ MODULES = [
     "bench_profiling",
     "bench_goodput",
     "bench_scenarios",
+    "bench_grid",
     "bench_tradeoff",
     "bench_components",
     "bench_scalability",

@@ -123,7 +123,9 @@ from repro.core.planning import (ColumnPool, ConstraintBuilder, FleetState,
                                  GpuBudget, sct_key, sct_unkey, table_soa)
 
 DROP_PENALTY = 1e6          # per unserved rps — dominates any latency gain
-Objective = Literal["latency", "power"]
+# "cost"/"carbon" price power by a per-site rate signal (electricity
+# price / grid-carbon factors) — see ColumnPool.cost(site_rate=...)
+Objective = Literal["latency", "power", "cost", "carbon"]
 Method = Literal["auto", "monolithic", "decomposed"]
 
 
@@ -281,10 +283,11 @@ def build_columns(table: LookupTable, num_sites: int):
 def _solve_monolithic(pool: ColumnPool, sites: list[SiteSpec],
                       power_w: np.ndarray, load_per_class: np.ndarray,
                       objective: Objective, old: Optional[Plan],
-                      r_frac: float, time_limit: float) -> Plan:
+                      r_frac: float, time_limit: float,
+                      site_rate: Optional[np.ndarray] = None) -> Plan:
     S = len(sites)
     n = len(pool)
-    col_cost = pool.cost(objective)
+    col_cost = pool.cost(objective, site_rate)
     codes, g_site, g_cls, g_tp = pool.sct()
     G = len(g_site)
 
@@ -933,7 +936,8 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
                       objective: Objective, time_limit: float,
                       old: Optional[Plan] = None, r_frac: float = 0.03,
                       workers: Optional[int] = None,
-                      site_warm: bool = True) -> Plan:
+                      site_warm: bool = True,
+                      site_rate: Optional[np.ndarray] = None) -> Plan:
     t0 = time.perf_counter()
     S = len(sites)
     table = pool.table
@@ -941,7 +945,10 @@ def _solve_decomposed(pool: ColumnPool, sites: list[SiteSpec],
     gpus = np.array([s.num_gpus for s in sites], float)
     power = np.asarray(power_w, float)
     load = np.maximum(np.asarray(load_per_class, float), 0.0)
-    cost = pool.cost(objective)
+    cost = pool.cost(objective, site_rate)
+    # the site subproblem's shared row costs are per table row (shared
+    # across sites) — site-rate scaling binds through the master duals
+    # and the repair's column costs, not here
     row_cost = soa.e2e if objective == "latency" else soa.power
 
     if old is not None:
@@ -1257,7 +1264,7 @@ class PlannerLSession:
                  time_limit: float = 60.0, workers: Optional[int] = None,
                  site_warm: bool = True, dirty_tol: float = 0.02,
                  max_dirty_frac: float = 0.5, subgradient_rounds: int = 2,
-                 swap_rel_tol: float = 1e-3):
+                 swap_rel_tol: float = 1e-3, dual_coupling: bool = True):
         self.table = table
         self.sites = sites
         self.objective: Objective = objective
@@ -1269,6 +1276,7 @@ class PlannerLSession:
         self.max_dirty_frac = float(max_dirty_frac)
         self.subgradient_rounds = int(subgradient_rounds)
         self.swap_rel_tol = float(swap_rel_tol)
+        self.dual_coupling = bool(dual_coupling)
         self.pool = ColumnPool.dense(table, len(sites))
         self.soa = table_soa(table)
         self.gpus = np.array([s.num_gpus for s in sites], float)
@@ -1458,6 +1466,54 @@ class PlannerLSession:
             # counts, dirty sites at the sub-master optimum (empty
             # clean set leaves x_lp untouched — the all-dirty case)
             x_lp[cmask] = flat_prev[cmask]
+            # ---- cross-site dual coupling (the ISSUE 9 carried gap) --
+            # a site can be "clean" by its own power/load deltas while
+            # the master's capacity/drain duals touching it moved — a
+            # clean site next to a hugely dirty neighbor used to keep
+            # stale quotas until the next full re-plan. Price each
+            # site's reused assignment under the previous and current
+            # duals; sites whose dual pressure moved beyond dirty_tol
+            # join the dirty set: their reused counts stay the
+            # fractional seed (so their quota is unchanged) but they now
+            # re-solve at the NEW prices and participate in the
+            # sub-fleet repair, which can move capacity onto/off them.
+            # No master re-run — the restricted master's duals are the
+            # signal, the repair closes the gap.
+            if (self.dual_coupling and warm is not None
+                    and prev.get("duals") is not None and len(sel)
+                    and old_agg is not None):
+                p_old, lam_old = prev["duals"]
+                cap_sc = np.bincount(
+                    pool.site * 9 + pool.cls,
+                    weights=flat_prev * pool.load,
+                    minlength=S * 9).reshape(S, 9)
+                live_site = np.bincount(self.cache.g_site,
+                                        weights=old_agg, minlength=S)
+                press_new = cap_sc @ prices + lam_r * live_site
+                press_old = cap_sc @ p_old + lam_old * live_site
+                ref = np.maximum(np.maximum(np.abs(press_new),
+                                            np.abs(press_old)), 1e-9)
+                newly = ((np.abs(press_new - press_old) / ref
+                          > self.dirty_tol) & ~dirty)
+                meta["dual_dirty"] = int(newly.sum())
+                if newly.any():
+                    dirty = dirty | newly
+                    sel = np.nonzero(dirty)[0]
+                    cmask = ~dirty[pool.site]
+                    clean_cap = np.bincount(
+                        pool.cls[cmask],
+                        weights=flat_prev[cmask] * pool.load[cmask],
+                        minlength=9)
+                    load_m = np.maximum(load - clean_cap, 0.0)
+                    gclean = np.bincount(self.cache.codes[cmask],
+                                         weights=flat_prev[cmask],
+                                         minlength=self.cache.G)
+                    cgmask = ~dirty[self.cache.g_site]
+                    clean_drains = float(np.maximum(
+                        old_agg - gclean, 0.0)[cgmask].sum())
+                    r_m = r_limit - clean_drains
+                    meta["clean_drains"] = clean_drains
+                    meta["dirty_sites"] = int(dirty.sum())
         meta["t_master"] = time.perf_counter() - tm
 
         # ---- per-site assignment ----
@@ -1547,9 +1603,16 @@ class PlannerLSession:
         # slots and re-inflates every later master LP
         support_out = np.unique(np.concatenate(
             [np.nonzero(x_lp > 1e-9)[0], np.nonzero(counts > 0)[0]]))
+        # duals for next slot's cross-site coupling check; a skipped
+        # master solved nothing, so its zero prices are not a signal —
+        # carry the last real duals forward
+        if meta.get("master") == "skipped" and prev is not None:
+            duals = prev.get("duals")
+        else:
+            duals = (np.asarray(prices, float).copy(), float(lam_r))
         self._prev = dict(power=power.copy(), load=load.copy(),
                           counts2d=counts.reshape(S, R).copy(), plan=plan,
-                          support=support_out)
+                          support=support_out, duals=duals)
         return plan
 
 
@@ -1557,7 +1620,8 @@ def plan_l(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
            load_per_class: np.ndarray, *, objective: Objective = "latency",
            old: Optional[Plan] = None, r_frac: float = 0.03,
            time_limit: float = 60.0, method: Method = "auto",
-           workers: Optional[int] = None, site_warm: bool = True) -> Plan:
+           workers: Optional[int] = None, site_warm: bool = True,
+           site_rate: Optional[np.ndarray] = None) -> Plan:
     """Solve the Fig. 10 ILP for one 15-min slot.
 
     ``method`` selects the solve path (see module docstring): "auto"
@@ -1570,6 +1634,9 @@ def plan_l(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
     bit-identical plans. ``site_warm`` enables the rounding fast path
     off the master LP's site restriction (disable for an
     all-branch-and-cut A/B — the PR 2-style sequential loop).
+    ``site_rate``: per-site [S] relative price/carbon signal for the
+    grid objectives ("cost"/"carbon") — scales each site's power cost
+    so the planner shifts load toward cheap/clean sites.
     """
     S = len(sites)
     pool = ColumnPool.dense(table, S)
@@ -1577,6 +1644,6 @@ def plan_l(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
         return _solve_decomposed(pool, sites, power_w, load_per_class,
                                  objective, time_limit, old=old,
                                  r_frac=r_frac, workers=workers,
-                                 site_warm=site_warm)
+                                 site_warm=site_warm, site_rate=site_rate)
     return _solve_monolithic(pool, sites, power_w, load_per_class, objective,
-                             old, r_frac, time_limit)
+                             old, r_frac, time_limit, site_rate=site_rate)

@@ -86,7 +86,8 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
            *, objective: Objective = "latency",
            frozen_sct: Optional[set] = None,
            time_limit: float = 10.0,
-           warm: Optional[Plan] = None) -> Plan:
+           warm: Optional[Plan] = None,
+           site_rate: Optional[np.ndarray] = None) -> Plan:
     """Solve the Fig. 11 ILP.
 
     ``gpu_budget``: GPU_{s,c,t} from Planner-L's last plan — a columnar
@@ -95,6 +96,8 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
     Configurator excludes them from placement (paper §4, Configurator).
     ``warm``: a previous Planner-S plan over the same budget; its counts
     seed the solve (see module docstring).
+    ``site_rate``: per-site [S] price/carbon signal for the grid
+    objectives ("cost"/"carbon") — see ``ColumnPool.cost``.
     """
     S = len(sites)
     budget = GpuBudget.coerce(gpu_budget)
@@ -110,7 +113,7 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
     iZ = np.arange(n)
     iSl = n + np.arange(9)
     c_vec = np.zeros(nv)
-    c_vec[iZ] = pool.cost(objective)
+    c_vec[iZ] = pool.cost(objective, site_rate)
     c_vec[iSl] = DROP_PENALTY
 
     b = ConstraintBuilder(nv)
@@ -138,7 +141,8 @@ def plan_s(table: LookupTable, sites: list[SiteSpec], power_w: np.ndarray,
     upper[iSl] = np.maximum(load_per_class, 0.0)
 
     cols = pool.columns()
-    x0 = (_warm_vector(warm, cols, pool, pool.cost(objective), g_gpus,
+    x0 = (_warm_vector(warm, cols, pool, pool.cost(objective, site_rate),
+                       g_gpus,
                        codes, np.asarray(power_w, float), load_per_class)
           if warm is not None else None)
     # two-part warm acceptance: slack terms tested separately from

@@ -173,8 +173,23 @@ class ColumnPool:
         return cls(table, np.concatenate(sites_out),
                    np.concatenate(rows_out), num_sites)
 
-    def cost(self, objective: str) -> np.ndarray:
-        return self.e2e if objective == "latency" else self.power
+    def cost(self, objective: str,
+             site_rate: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-column objective coefficients.
+
+        ``"latency"`` -> E2E; ``"power"`` -> watts. The grid objectives
+        ``"cost"`` ($/MWh) and ``"carbon"`` (gCO2/kWh) are power scaled
+        by a per-site rate signal: ``site_rate`` is a relative [S]
+        vector (mean ~1.0, e.g. price factors from the knowledge plane)
+        gathered per column, so expensive/dirty sites price higher and
+        the planner shifts load off them. Without ``site_rate`` they
+        degrade to plain power (uniform rates change nothing).
+        """
+        if objective == "latency":
+            return self.e2e
+        if site_rate is not None and objective in ("cost", "carbon"):
+            return self.power * np.asarray(site_rate, float)[self.site]
+        return self.power
 
     def columns(self) -> list[tuple[int, Row]]:
         """Legacy list[(site, Row)] view (what ``Plan`` stores).

@@ -235,6 +235,12 @@ class HeronRouter:
                                self.straggler_min_haircut, 1.0)
         return p
 
+    def _site_rate(self) -> Optional[np.ndarray]:
+        """Per-site price/carbon signal for the grid objectives — the
+        base router has none (None threads through the planners as the
+        historical cost vector). Grid-aware subclasses override."""
+        return None
+
     # ---------------- planning ----------------
     def step_slot(self, predicted_power_w: np.ndarray,
                   predicted_load: np.ndarray) -> Plan:
@@ -262,7 +268,8 @@ class HeronRouter:
                        objective=self.objective, old=self._plan_l,
                        r_frac=self.r_frac, time_limit=self.time_limit_l,
                        method=self.planner_method,
-                       workers=self.planner_workers)
+                       workers=self.planner_workers,
+                       site_rate=self._site_rate())
         self._cfgtor.apply(self._plan_l, p, self._now)
         self._plan_l = p
         self._plan_s = None
@@ -277,7 +284,8 @@ class HeronRouter:
         p = plan_s(self.table, self.sites, self._effective_power(power_w),
                    observed_load, self._plan_l.gpu_budget_pool(),
                    objective=self.objective, frozen_sct=frozen,
-                   time_limit=self.time_limit_s, warm=self._plan_s)
+                   time_limit=self.time_limit_s, warm=self._plan_s,
+                   site_rate=self._site_rate())
         if p.status != "empty":
             self._plan_s = p
         return self._plan_s or self._plan_l
@@ -397,3 +405,111 @@ class HeronRouter:
         mean_e2e = table.site_e2e_sum / np.maximum(table.site_groups, 1)
         self.observe_latencies(loaded, mean_e2e)
         return res
+
+
+# ------------------------------------------------------------------
+# grid-interactive policies (ISSUE 10)
+# ------------------------------------------------------------------
+@dataclass
+class DRHeronPolicy(HeronRouter):
+    """Heron + demand response: *acts on* the grid control signals.
+
+    The base router treats ``CURTAILMENT`` as informational (the power
+    forecast already carries the cap) and ignores price/carbon notices
+    entirely. This subclass turns them into a per-site demand-response
+    haircut applied on top of ``_effective_power``:
+
+      * ``CURTAILMENT``(frac) — pre-drain to ``dr_curtail_frac`` of the
+        already-capped forecast. Routing *under* the cap leaves wind
+        surplus on the curtailed site, which the co-simulated
+        ``BatteryBank`` charge step banks for the next trip/spike
+        instead of wasting (the ROADMAP's "absorb curtailment" story);
+        cleared by ``CURTAILMENT_LIFTED``.
+      * ``PRICE_SPIKE``(m) / ``CARBON_RAMP``(m) — shed the site toward
+        ``1/m`` of its forecast (floored at ``dr_min_keep``): a 3x price
+        spike keeps a third of the load; the planner re-covers the rest
+        on cheap/clean sites. Cleared by ``PRICE_NORMAL`` /
+        ``CARBON_NORMAL``.
+
+    Haircuts from concurrent signals multiply (a curtailed site in a
+    price spike sheds for both); ``site == -1`` applies fleet-wide.
+    """
+    dr_curtail_frac: float = 0.8        # keep-fraction under curtailment
+    dr_min_keep: float = 0.25           # spike-shed floor
+
+    def __post_init__(self):
+        super().__post_init__()
+        S = len(self.sites)
+        self._dr_curtail = np.ones(S)
+        self._dr_price = np.ones(S)
+        self._dr_carbon = np.ones(S)
+
+    @property
+    def name(self) -> str:
+        return "dr_heron"
+
+    def _rows(self, site: int) -> slice | int:
+        return slice(None) if site < 0 else site
+
+    def on_event(self, event) -> None:
+        kind = getattr(event, "kind", None)
+        rows = self._rows(getattr(event, "site", -1))
+        if kind == "curtailment":
+            self._dr_curtail[rows] = self.dr_curtail_frac
+        elif kind == "curtailment_lifted":
+            self._dr_curtail[rows] = 1.0
+        elif kind == "price_spike":
+            m = max(float(getattr(event, "value", 1.0)), 1.0)
+            self._dr_price[rows] = max(1.0 / m, self.dr_min_keep)
+        elif kind == "price_normal":
+            self._dr_price[rows] = 1.0
+        elif kind == "carbon_ramp":
+            m = max(float(getattr(event, "value", 1.0)), 1.0)
+            self._dr_carbon[rows] = max(1.0 / m, self.dr_min_keep)
+        elif kind == "carbon_normal":
+            self._dr_carbon[rows] = 1.0
+        else:
+            super().on_event(event)
+
+    def _effective_power(self, power_w: np.ndarray) -> np.ndarray:
+        p = super()._effective_power(power_w)
+        return p * np.minimum(self._dr_curtail,
+                              self._dr_price * self._dr_carbon)
+
+
+@dataclass
+class XWindPolicy(HeronRouter):
+    """XWind-style cross-site price router.
+
+    Plans under the grid ``"cost"`` objective: each site's power cost is
+    scaled by the relative electricity price the control stream
+    announces (``PRICE_SPIKE``/``PRICE_NORMAL``), so Planner-L/S shift
+    load toward cheap sites *while still serving it* — no shedding,
+    pure cross-site arbitrage. The rate vector is mean-normalized
+    (``_site_rate``), so a fleet-wide spike changes nothing and only
+    price *skew* moves the plan.
+    """
+    objective: Objective = "cost"
+
+    def __post_init__(self):
+        super().__post_init__()
+        self._price = np.ones(len(self.sites))
+
+    @property
+    def name(self) -> str:
+        return "xwind"
+
+    def _site_rate(self) -> Optional[np.ndarray]:
+        return self._price / max(float(self._price.mean()), 1e-9)
+
+    def on_event(self, event) -> None:
+        kind = getattr(event, "kind", None)
+        site = getattr(event, "site", -1)
+        rows = slice(None) if site < 0 else site
+        if kind == "price_spike":
+            self._price[rows] = max(float(getattr(event, "value", 1.0)),
+                                    1e-3)
+        elif kind == "price_normal":
+            self._price[rows] = 1.0
+        else:
+            super().on_event(event)

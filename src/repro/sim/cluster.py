@@ -91,7 +91,8 @@ from repro.core.planner_l import Method, Plan, SiteSpec, plan_l
 from repro.core.planner_s import plan_s
 from repro.core.predictor import SeriesPredictor
 from repro.core.scheduler import Configurator, GroupTable, RequestScheduler
-from repro.stats import percentile
+from repro.power.grid import BatteryBank, GridSignals
+from repro.stats import finite_or, percentile
 from repro.sim.record import load_record, write_record
 from repro.sim.scenarios import ScenarioEngine
 
@@ -107,6 +108,11 @@ class SlotMetrics:
     power_w: float
     solve_s: float
     reconfigs: int
+    # grid-interactive counters (ISSUE 10): $ and gCO2 for the slot's
+    # realized energy draw under the scenario's price/carbon planes —
+    # 0.0 on pre-grid records
+    cost_usd: float = 0.0
+    carbon_g: float = 0.0
 
     @property
     def total_served(self) -> float:
@@ -122,7 +128,9 @@ class SlotMetrics:
                 "mean_e2e": float(self.mean_e2e),
                 "power_w": float(self.power_w),
                 "solve_s": float(self.solve_s),
-                "reconfigs": int(self.reconfigs)}
+                "reconfigs": int(self.reconfigs),
+                "cost_usd": finite_or(self.cost_usd, 0.0),
+                "carbon_g": finite_or(self.carbon_g, 0.0)}
 
     @classmethod
     def from_json(cls, d: dict) -> "SlotMetrics":
@@ -131,7 +139,9 @@ class SlotMetrics:
                    mean_e2e=float(d["mean_e2e"]),
                    power_w=float(d["power_w"]),
                    solve_s=float(d["solve_s"]),
-                   reconfigs=int(d["reconfigs"]))
+                   reconfigs=int(d["reconfigs"]),
+                   cost_usd=float(d.get("cost_usd", 0.0)),
+                   carbon_g=float(d.get("carbon_g", 0.0)))
 
 
 @dataclass
@@ -160,6 +170,12 @@ class WeekResult:
 
     def power(self) -> np.ndarray:
         return np.array([s.power_w for s in self.slots])
+
+    def cost_usd(self) -> np.ndarray:
+        return np.array([s.cost_usd for s in self.slots])
+
+    def carbon_g(self) -> np.ndarray:
+        return np.array([s.carbon_g for s in self.slots])
 
     def to_json(self) -> dict:
         out = {"kind": "week", "name": self.name,
@@ -233,6 +249,8 @@ def simulate_week(scheduler, table: LookupTable,
                   incremental: bool = False, dirty_tol: float = 0.02,
                   scenario: Optional[ScenarioEngine] = None,
                   seed: Optional[int] = None,
+                  grid: Optional[GridSignals] = None,
+                  battery: Optional[BatteryBank] = None,
                   record: Union[str, bool, None] = None) -> WeekResult:
     """Slot-level week simulation, driven by a pluggable RoutingPolicy.
 
@@ -253,6 +271,19 @@ def simulate_week(scheduler, table: LookupTable,
     (it seeds the default scenario — pass an explicitly-seeded engine to
     combine both). ``record`` persists the result as a JSON run record:
     ``True`` -> artifacts/sim/, a directory, or a full ``.json`` path.
+
+    Grid plane (ISSUE 10): ``grid`` supplies per-site price/carbon base
+    curves (defaults to flat wind-node rates) and every slot's realized
+    energy draw is billed into ``SlotMetrics.cost_usd``/``carbon_g``
+    under the scenario's price/carbon factors. ``battery`` co-simulates
+    a per-site ``BatteryBank``: surplus wind (generation beyond the
+    realized plan draw) charges it; when truth power falls short of the
+    planned draw it discharges to ride through, and the *knowledge*
+    plane credits each site's sustainable ride-through power on top of
+    the forecast so the planner keeps assigning a battery-backed site
+    through a trip. The bank passed in is copied (a run never mutates
+    the caller's state) and follows the scenario's ``battery_health``
+    derating trace.
     """
     S, T = power_mw.shape
     T = min(T, arrivals_rps.shape[1]) if slots is None else min(slots, T)
@@ -285,6 +316,13 @@ def simulate_week(scheduler, table: LookupTable,
     pl_solve: list[float] = []
     pl_mode: list[str] = []
     pl_dirty: list[int] = []
+    # grid plane: flat default rates when no curves are supplied, so
+    # cost/carbon counters are always populated (uniform rates cannot
+    # change any plan — they only meter it)
+    rates = grid if grid is not None else GridSignals.flat(S, T)
+    bank = battery.copy() if battery is not None else None
+    prev_draw_w = np.zeros(S)
+    dt_h = 0.25                     # one 15-min slot in hours
     for t in range(T):
         for ev in sc.controls_at(t):
             policy.on_event(ev)
@@ -293,6 +331,14 @@ def simulate_week(scheduler, table: LookupTable,
         noise = sc.pred_noise[:, t]
         if (noise != 1.0).any():
             pred_w = pred_w * noise
+        if bank is not None:
+            # knowledge plane: the BMS knows its state of charge — the
+            # forecast credits each site with the ride-through power the
+            # bank can sustain toward holding the previous draw level
+            bank.set_health(sc.battery_health[:, t])
+            ride_w = bank.ride_through_mw(dt_h) * 1e6
+            pred_w = pred_w + np.minimum(
+                ride_w, np.maximum(prev_draw_w - pred_w, 0.0))
         loads_known = arrivals_rps[:, t] * sc.known_arrival_factor[:, t]
         loads_true = arrivals_rps[:, t] * sc.arrival_factor[:, t]
 
@@ -304,7 +350,14 @@ def simulate_week(scheduler, table: LookupTable,
         reconfigs = cfgtor.reconfig_count(old, p)
         old = p
         # reality: any plan drawing beyond actual generation browns out
-        real = apply_power_reality(p, actual_w)
+        # — unless the site's battery bridges the deficit (and surplus
+        # wind the plan leaves unused charges it)
+        avail_w = actual_w
+        if bank is not None:
+            delivered_mw = bank.step(actual_w / 1e6,
+                                     p.power_used() / 1e6, dt_h)
+            avail_w = actual_w + delivered_mw * 1e6
+        real = apply_power_reality(p, avail_w)
         gtable = real.group_table()
         res = policy.route(gtable, loads_true)
         # observed service latency: per-site inflation (1.0 = nominal) —
@@ -317,10 +370,19 @@ def simulate_week(scheduler, table: LookupTable,
             if tot > 0:
                 mean_e2e *= float((w * lat).sum() / tot)
         policy.observe(lat)
+        # bill the slot's realized per-site draw under the scenario's
+        # price/carbon factors (truth plane)
+        site_draw_w = real.power_used()
+        energy_mwh = site_draw_w / 1e6 * dt_h
+        prev_draw_w = site_draw_w
         out.append(SlotMetrics(served=res.served, dropped=res.dropped,
                                mean_e2e=mean_e2e,
                                power_w=gtable.total_power(),
-                               solve_s=p.solve_seconds, reconfigs=reconfigs))
+                               solve_s=p.solve_seconds, reconfigs=reconfigs,
+                               cost_usd=rates.slot_cost_usd(
+                                   energy_mwh, t, sc.price_factor[:, t]),
+                               carbon_g=rates.slot_carbon_g(
+                                   energy_mwh, t, sc.carbon_factor[:, t])))
     # flush controls scheduled at/beyond the horizon (e.g. a recovery
     # landing exactly on the boundary) so a reused policy ends consistent
     for ev in sc.controls_after(T):
@@ -333,11 +395,14 @@ def simulate_week(scheduler, table: LookupTable,
         # passed (the engine carries its own) — keep it out of the auto
         # filename so identical runs map to one record
         tag_seed = seed if scenario is None else None
+        knobs = (r_frac, time_limit, planner_method, planner_workers)
+        if grid is not None or battery is not None:
+            # grid-plane runs key their own records; plain runs keep the
+            # historical knob tuple (existing records stay addressable)
+            knobs = knobs + ("grid", grid is not None, battery is not None)
         write_record(_record_path(record, name, S, T, tag_seed, engine,
                                   power_mw[:, :T], arrivals_rps[:, :T],
-                                  predictor_kind,
-                                  (r_frac, time_limit, planner_method,
-                                   planner_workers)),
+                                  predictor_kind, knobs),
                      {"policy": name, "seed": engine.seed,
                       "scenario": repr(engine),
                       "predictor_kind": predictor_kind,

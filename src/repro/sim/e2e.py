@@ -51,6 +51,7 @@ from repro.core.lookup import SLO_MULTIPLIER, LookupTable
 from repro.core.planner_l import SiteSpec
 from repro.core.router import SLOT_SECONDS
 from repro.data.workload import RequestChunk, WorkloadTrace, stream_requests
+from repro.power.grid import GridSignals
 from repro.serving.engine import Request
 from repro.sim.cluster import ServingCluster
 from repro.sim.faults import FaultInjector
@@ -90,6 +91,10 @@ class E2EResult:
     p99_tbt: float
     p50_e2e: float
     p99_e2e: float
+    # grid-interactive counters (ISSUE 10): $ and gCO2 billed on the
+    # realized window draws under the scenario's price/carbon planes
+    cost_usd: float = 0.0
+    carbon_g: float = 0.0
     # rate-plane comparison hook (filled by benchmarks): served fraction
     # of simulate_week's dispatched rps over the same scenario
     dispatched_fraction: Optional[float] = None
@@ -118,6 +123,8 @@ class E2EResult:
         for k in ("p50_ttft", "p99_ttft", "p50_tbt", "p99_tbt",
                   "p50_e2e", "p99_e2e"):
             d[k] = finite_or(getattr(self, k), -1.0)   # strict-JSON safe
+        for k in ("cost_usd", "carbon_g"):
+            d[k] = finite_or(getattr(self, k), 0.0)
         d["kind"] = "e2e"
         d["goodput_fraction"] = self.goodput_fraction
         d["slo_goodput_fraction"] = self.slo_goodput_fraction
@@ -341,6 +348,9 @@ def simulate_fleet_serving(
 
     offered_requests = 0
     offered_tokens = 0
+    rates = GridSignals.flat(S, ticks)
+    cost_usd = carbon_g = 0.0
+    win_h = window_ticks * tick_seconds / 3600.0
     pl_solve: list = []      # per-window Planner-L wall seconds
     pl_mode: list = []       # session mode ("incremental"/"full"/"stateless")
     pl_dirty: list = []      # dirty-set size (-1 when not incremental)
@@ -374,6 +384,14 @@ def simulate_fleet_serving(
         actual_w = power_mw[:, col] * sc.power_factor[:, min(tick, ticks - 1)] * 1e6
         realized = apply_power_reality(plan, actual_w)
         fleet.apply_plan(plan, realized, nominal_budget)
+        # bill the window's realized draw under the grid plane (flat
+        # default rates x the scenario's price/carbon factors)
+        t_bill = min(tick, ticks - 1)
+        energy_mwh = realized.power_used() / 1e6 * win_h
+        cost_usd += rates.slot_cost_usd(energy_mwh, t_bill,
+                                        sc.price_factor[:, t_bill])
+        carbon_g += rates.slot_carbon_g(energy_mwh, t_bill,
+                                        sc.carbon_factor[:, t_bill])
         # straggler signal for next window's plan
         policy.observe(sc.latency_factor[:, min(tick, ticks - 1)])
 
@@ -417,4 +435,6 @@ def simulate_fleet_serving(
         faults_record=injector.to_json())
     res.planner = {"solve_s": pl_solve, "mode": pl_mode,
                    "dirty_sites": pl_dirty}
+    res.cost_usd = float(cost_usd)
+    res.carbon_g = float(carbon_g)
     return (res, fleet) if return_fleet else res

@@ -48,7 +48,8 @@ from repro.core.baselines import (GreedyMinLatencyPolicy, WrrDynamoLLMPolicy)
 from repro.core.lookup import LookupTable
 from repro.core.planner_l import Plan, SiteSpec
 from repro.core.router import (STRAGGLER_ALPHA, STRAGGLER_MIN_HAIRCUT,
-                               STRAGGLER_THRESHOLD, HeronRouter)
+                               STRAGGLER_THRESHOLD, DRHeronPolicy,
+                               HeronRouter, XWindPolicy)
 from repro.core.scheduler import DispatchResult
 
 
@@ -132,7 +133,44 @@ def _greedy_factory(table: LookupTable, sites: list[SiteSpec],
     return GreedyMinLatencyPolicy(table=table, sites=sites)
 
 
+def _dr_heron_factory(table: LookupTable, sites: list[SiteSpec], *,
+                      r_frac: float = 0.03, time_limit: float = 20.0,
+                      planner_method: str = "auto",
+                      planner_workers: Optional[int] = None,
+                      packing: bool = False,
+                      dr_curtail_frac: float = 0.8,
+                      dr_min_keep: float = 0.25,
+                      incremental: bool = False, dirty_tol: float = 0.02,
+                      **_ignored) -> DRHeronPolicy:
+    """Heron + demand response: sheds into curtailment orders and
+    price/carbon spikes (``core.router.DRHeronPolicy``)."""
+    return DRHeronPolicy(table=table, sites=sites, objective="latency",
+                         r_frac=r_frac, time_limit_l=time_limit,
+                         planner_method=planner_method,
+                         planner_workers=planner_workers, packing=packing,
+                         dr_curtail_frac=dr_curtail_frac,
+                         dr_min_keep=dr_min_keep,
+                         incremental=incremental, dirty_tol=dirty_tol)
+
+
+def _xwind_factory(table: LookupTable, sites: list[SiteSpec], *,
+                   r_frac: float = 0.03, time_limit: float = 20.0,
+                   planner_method: str = "auto",
+                   planner_workers: Optional[int] = None,
+                   packing: bool = False,
+                   **_ignored) -> XWindPolicy:
+    """XWind-style cross-site price router: plans under the ``"cost"``
+    objective with announced per-site prices as the site-rate signal
+    (``core.router.XWindPolicy``)."""
+    return XWindPolicy(table=table, sites=sites,
+                       r_frac=r_frac, time_limit_l=time_limit,
+                       planner_method=planner_method,
+                       planner_workers=planner_workers, packing=packing)
+
+
 register_policy("heron", _heron_factory("latency"))
 register_policy("heron_min_power", _heron_factory("power"))
 register_policy("wrr_dynamollm", _wrr_factory)
 register_policy("greedy_min_latency", _greedy_factory)
+register_policy("dr_heron", _dr_heron_factory)
+register_policy("xwind", _xwind_factory)

@@ -31,6 +31,18 @@ tests/test_scenarios.py pins.
 Events draw randomness only from substreams spawned off the engine seed
 (one ``SeedSequence`` child per event), so a scenario is reproducible
 end-to-end and insensitive to how many *other* events draw.
+
+Grid-interactive plane (ISSUE 10): the same two-plane split extends to
+electricity **price** and grid-**carbon** signals (``price_factor`` /
+``carbon_factor`` with ``known_*`` knowledge mirrors multiplying the
+``power.grid.GridSignals`` base curves) plus a per-site battery-health
+trace (``battery_health``, deratting ``power.grid.BatteryBank``
+capacity). ``PriceSpike`` / ``CarbonRamp`` follow the ``GridTrip``
+detection-lag idiom — the truth plane moves at ``start`` but the
+knowledge plane and the ``PRICE_SPIKE`` / ``CARBON_RAMP`` control only
+after ``detect_ticks`` — so a price-aware policy reacts with exactly the
+announcement latency the scenario grants it. ``BatteryDegradation`` is
+announced (``BATTERY_DEGRADED`` fires at window start).
 """
 from __future__ import annotations
 
@@ -46,6 +58,11 @@ CURTAILMENT = "curtailment"
 CURTAILMENT_LIFTED = "curtailment_lifted"
 GRID_TRIP = "grid_trip"             # value = trip depth (fraction lost)
 GRID_RESTORED = "grid_restored"
+PRICE_SPIKE = "price_spike"         # value = price multiplier
+PRICE_NORMAL = "price_normal"
+CARBON_RAMP = "carbon_ramp"         # value = carbon-intensity multiplier
+CARBON_NORMAL = "carbon_normal"
+BATTERY_DEGRADED = "battery_degraded"   # value = remaining health fraction
 
 
 @dataclass(frozen=True)
@@ -72,7 +89,19 @@ class CompiledScenario:
     arrival_factor: np.ndarray          # [9, T] realized / base arrivals
     known_arrival_factor: np.ndarray    # [9, T] what load planning sees
     latency_factor: np.ndarray          # [S, T] service-latency inflation
+    price_factor: np.ndarray = None         # [S, T] realized price mult
+    known_price_factor: np.ndarray = None   # [S, T] what planning sees
+    carbon_factor: np.ndarray = None        # [S, T] realized carbon mult
+    known_carbon_factor: np.ndarray = None  # [S, T] what planning sees
+    battery_health: np.ndarray = None       # [S, T] battery capacity derate
     controls: dict[int, list[ControlEvent]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        shape = (self.num_sites, self.ticks)
+        for name in ("price_factor", "known_price_factor", "carbon_factor",
+                     "known_carbon_factor", "battery_health"):
+            if getattr(self, name) is None:
+                setattr(self, name, np.ones(shape))
 
     def add_control(self, tick: int, kind: str, site: int = -1,
                     value: float = 0.0) -> None:
@@ -103,7 +132,12 @@ class CompiledScenario:
                 and (self.pred_noise == 1.0).all()
                 and (self.arrival_factor == 1.0).all()
                 and (self.known_arrival_factor == 1.0).all()
-                and (self.latency_factor == 1.0).all())
+                and (self.latency_factor == 1.0).all()
+                and (self.price_factor == 1.0).all()
+                and (self.known_price_factor == 1.0).all()
+                and (self.carbon_factor == 1.0).all()
+                and (self.known_carbon_factor == 1.0).all()
+                and (self.battery_health == 1.0).all())
 
     # ---- serialization: a compiled scenario is a record (chaos runs
     # archive the exact disturbance they replayed) ----
@@ -116,6 +150,11 @@ class CompiledScenario:
                 "arrival_factor": self.arrival_factor.tolist(),
                 "known_arrival_factor": self.known_arrival_factor.tolist(),
                 "latency_factor": self.latency_factor.tolist(),
+                "price_factor": self.price_factor.tolist(),
+                "known_price_factor": self.known_price_factor.tolist(),
+                "carbon_factor": self.carbon_factor.tolist(),
+                "known_carbon_factor": self.known_carbon_factor.tolist(),
+                "battery_health": self.battery_health.tolist(),
                 "controls": [{"kind": ev.kind, "site": ev.site,
                               "value": ev.value, "tick": ev.tick}
                              for tk in sorted(self.controls)
@@ -131,6 +170,11 @@ class CompiledScenario:
                 known_arrival_factor=np.asarray(d["known_arrival_factor"],
                                                 float),
                 latency_factor=np.asarray(d["latency_factor"], float))
+        # grid planes: absent in pre-grid records -> default all-ones
+        for name in ("price_factor", "known_price_factor", "carbon_factor",
+                     "known_carbon_factor", "battery_health"):
+            if name in d:
+                setattr(c, name, np.asarray(d[name], float))
         for ev in d.get("controls", []):
             c.add_control(int(ev["tick"]), ev["kind"], int(ev["site"]),
                           float(ev["value"]))
@@ -230,6 +274,86 @@ class Curtailment:
         for s in ([-1] if self.sites is None else self.sites):
             c.add_control(announce, CURTAILMENT, s, self.frac)
             c.add_control(w.stop, CURTAILMENT_LIFTED, s)
+
+
+@dataclass(frozen=True)
+class PriceSpike:
+    """Electricity price spikes to ``magnitude``x over a window
+    (scarcity pricing, a congested interconnect). Truth price moves at
+    ``start``; the knowledge plane and the ``PRICE_SPIKE`` control lag
+    by ``detect_ticks`` (the ``GridTrip`` surprise idiom — a day-ahead
+    announced spike is just ``detect_ticks=0``). ``PRICE_NORMAL`` fires
+    at the window end."""
+    magnitude: float
+    start: int
+    duration: int
+    sites: Optional[tuple[int, ...]] = None
+    detect_ticks: int = 0
+
+    def apply(self, c: CompiledScenario, rng: np.random.Generator) -> None:
+        w = _window(self.start, self.duration, c.ticks)
+        if w.stop <= w.start:
+            return                  # spike entirely outside the horizon
+        rows = slice(None) if self.sites is None else list(self.sites)
+        c.price_factor[rows, w] *= self.magnitude
+        wk = _window(self.start + self.detect_ticks,
+                     max(self.duration - self.detect_ticks, 0), c.ticks)
+        c.known_price_factor[rows, wk] *= self.magnitude
+        detect = max(self.start + self.detect_ticks, 0)
+        if detect < w.stop:
+            for s in ([-1] if self.sites is None else self.sites):
+                c.add_control(detect, PRICE_SPIKE, s, float(self.magnitude))
+                c.add_control(w.stop, PRICE_NORMAL, s, 1.0)
+
+
+@dataclass(frozen=True)
+class CarbonRamp:
+    """Grid carbon intensity ramps to ``magnitude``x over a window (the
+    marginal generator switches from wind to gas/coal). Same detection
+    semantics as ``PriceSpike``: truth at ``start``, knowledge and the
+    ``CARBON_RAMP`` control after ``detect_ticks``, ``CARBON_NORMAL``
+    at the window end."""
+    magnitude: float
+    start: int
+    duration: int
+    sites: Optional[tuple[int, ...]] = None
+    detect_ticks: int = 0
+
+    def apply(self, c: CompiledScenario, rng: np.random.Generator) -> None:
+        w = _window(self.start, self.duration, c.ticks)
+        if w.stop <= w.start:
+            return                  # ramp entirely outside the horizon
+        rows = slice(None) if self.sites is None else list(self.sites)
+        c.carbon_factor[rows, w] *= self.magnitude
+        wk = _window(self.start + self.detect_ticks,
+                     max(self.duration - self.detect_ticks, 0), c.ticks)
+        c.known_carbon_factor[rows, wk] *= self.magnitude
+        detect = max(self.start + self.detect_ticks, 0)
+        if detect < w.stop:
+            for s in ([-1] if self.sites is None else self.sites):
+                c.add_control(detect, CARBON_RAMP, s, float(self.magnitude))
+                c.add_control(w.stop, CARBON_NORMAL, s, 1.0)
+
+
+@dataclass(frozen=True)
+class BatteryDegradation:
+    """A site's battery bank loses capacity (cell aging, thermal
+    derating, a failed string): usable capacity multiplies by ``factor``
+    over the window (or permanently when ``duration`` is None).
+    Announced — the BMS knows its own health — so ``BATTERY_DEGRADED``
+    fires at the window start with the remaining health fraction."""
+    site: int
+    start: int
+    factor: float
+    duration: Optional[int] = None
+
+    def apply(self, c: CompiledScenario, rng: np.random.Generator) -> None:
+        w = _window(self.start, self.duration, c.ticks)
+        if w.stop <= w.start:
+            return                  # entirely outside the horizon
+        c.battery_health[self.site, w] *= self.factor
+        c.add_control(max(self.start, 0), BATTERY_DEGRADED, self.site,
+                      float(self.factor))
 
 
 @dataclass(frozen=True)
@@ -354,6 +478,7 @@ class ScenarioEngine:
             arrival_factor=np.ones((9, ticks)),
             known_arrival_factor=np.ones((9, ticks)),
             latency_factor=np.ones((num_sites, ticks)))
+        # grid planes filled by __post_init__ (all-ones defaults)
         if self.events:
             streams = np.random.SeedSequence(self.seed).spawn(len(self.events))
             for ev, ss in zip(self.events, streams):

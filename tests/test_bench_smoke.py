@@ -6,12 +6,13 @@ gate: every module at toy sizes, and the committed repo-root
 numbers are NOT baselines, so a smoke pass (even one that passes
 ``--update-tracker`` by mistake) may never rewrite them.
 
-The test drives the real ``benchmarks.run.main`` entry point on the two
+The test drives the real ``benchmarks.run.main`` entry point on the
 cheapest tracker-writing modules (dispatch, planning — the latter
-covers the new mega-fleet incremental path at 64 sites) with
-``--update-tracker`` deliberately set, then asserts the root trackers'
-bytes did not move. artifacts/bench/ copies are allowed to change;
-that's their job.
+covers the mega-fleet incremental path at 64 sites — and grid, the
+ISSUE 10 price/carbon/battery A/B) with ``--update-tracker``
+deliberately set, then asserts the root trackers' bytes did not move
+— ``BENCH_grid.json`` included. artifacts/bench/ copies are allowed
+to change; that's their job.
 """
 from __future__ import annotations
 
@@ -36,7 +37,8 @@ def test_smoke_never_touches_root_trackers(capsys):
     before = _tracker_bytes()
     assert before, "committed BENCH_*.json trackers missing from repo root"
     try:
-        rc = main(["--smoke", "--only", "bench_dispatch,bench_planning",
+        rc = main(["--smoke", "--only",
+                   "bench_dispatch,bench_planning,bench_grid",
                    "--update-tracker"])
     finally:
         # module-level flags: reset so other tests see the defaults
@@ -48,6 +50,8 @@ def test_smoke_never_touches_root_trackers(capsys):
     assert "dispatch_vec_16sites" in captured.out
     assert "plan_l_mega_64sites" in captured.out
     assert "plan_l_incremental_64sites_10pct" in captured.out
+    assert "grid_price_spike" in captured.out
+    assert "grid_ride_through" in captured.out
 
     after = _tracker_bytes()
     assert after == before, (

@@ -190,6 +190,18 @@ def test_cosim_slo_attribution(cosim):
     assert np.isfinite(res.p99_tbt) and res.p99_tbt >= res.p50_tbt
 
 
+def test_cosim_bills_cost_and_carbon(cosim):
+    """The grid plane (ISSUE 10) bills the co-sim's realized draw too:
+    nonzero $ and gCO2 under flat default rates, NaN-safe in the JSON
+    record."""
+    res, _fleet, _g = cosim
+    assert res.cost_usd > 0 and res.carbon_g > 0
+    d = res.to_json()
+    assert d["cost_usd"] == res.cost_usd
+    assert d["carbon_g"] == res.carbon_g
+    assert np.isfinite(d["cost_usd"]) and np.isfinite(d["carbon_g"])
+
+
 def test_cosim_rate_plane_upper_bounds_served(cosim):
     """simulate_week's dispatched-rps goodput assumes every dispatched
     request completes instantly — it must upper-bound what the live

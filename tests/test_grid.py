@@ -1,0 +1,280 @@
+"""Grid-interactive plane — prices, carbon, batteries (ISSUE 10).
+
+Three layers:
+
+  * **BatteryBank invariants** — seeded parametrized sweeps (the repo
+    has no hypothesis dependency) assert the physics the model may
+    never violate: SoC stays in [0, usable capacity], the round trip
+    is strictly lossy (energy out <= efficiency^2 * energy in), and
+    the ledger identity ``soc = soc0 + eta*in - out/eta`` holds to
+    float tolerance even when health degrades mid-run — no free energy,
+    including across a compiled scenario's degradation schedule.
+  * **Event semantics** — PriceSpike/CarbonRamp move the truth plane at
+    ``start`` but the knowledge plane and control stream only after
+    ``detect_ticks`` (the GridTrip detection-lag idiom); unannounced
+    windows are invisible to the policy until detected.
+  * **Ride-through A/B (pinned)** — on a GridTrip brownout the
+    battery-backed week must serve strictly more than the batteryless
+    arm with everything else identical: the discharge path, the
+    knowledge-plane ride-through credit, and the policy staying
+    routable (depth < site-down threshold) are all load-bearing.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.power.grid import (DEFAULT_CARBON_G_KWH, DEFAULT_PRICE_USD_MWH,
+                              BatteryBank, GridSignals)
+from repro.sim.cluster import simulate_week
+from repro.sim.scenarios import (BATTERY_DEGRADED, CARBON_NORMAL, CARBON_RAMP,
+                                 PRICE_NORMAL, PRICE_SPIKE, BatteryDegradation,
+                                 CarbonRamp, GridTrip, PriceSpike,
+                                 ScenarioEngine)
+from repro.sim.testbed import paper_grid
+
+START = 200                     # healthy-power window (events dominate)
+SLOTS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = paper_grid("coding", multiplier=60.0)
+    return g.table, g.sites, g.power_mw, g.arrivals_rps
+
+
+@pytest.fixture(scope="module")
+def window(setup):
+    table, sites, power, arrivals = setup
+    return (table, sites, power[:, START:START + SLOTS],
+            arrivals[:, START:START + SLOTS] * 4.0)
+
+
+# ------------------------------------------------------------------
+# BatteryBank invariants (seeded parametrized property sweeps)
+# ------------------------------------------------------------------
+def _random_walk(bank: BatteryBank, rng: np.random.Generator,
+                 steps: int = 120, scale: float = 5.0):
+    """Drive the bank with random surplus/deficit slots; yield per-step."""
+    S = len(bank.capacity_mwh)
+    for _ in range(steps):
+        avail = rng.uniform(0.0, scale, S)
+        demand = rng.uniform(0.0, scale, S)
+        delivered = bank.step(avail, demand, dt_h=0.25)
+        yield avail, demand, delivered
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+@pytest.mark.parametrize("eta", [0.8, 0.95, 1.0])
+def test_battery_soc_bounds_and_delivery(seed, eta):
+    rng = np.random.default_rng(seed)
+    bank = BatteryBank.sized(3, capacity_mwh=2.0, charge_rate_mw=3.0,
+                             discharge_rate_mw=3.0, efficiency=eta,
+                             soc_frac=rng.uniform())
+    for avail, demand, delivered in _random_walk(bank, rng):
+        assert (bank.soc_mwh >= -1e-12).all()
+        assert (bank.soc_mwh <= bank.usable_mwh + 1e-12).all()
+        # discharge only ever covers a real deficit, never exceeds it
+        deficit = np.maximum(demand - avail, 0.0)
+        assert (delivered >= -1e-12).all()
+        assert (delivered <= deficit + 1e-9).all()
+        assert (delivered <= bank.discharge_rate_mw + 1e-9).all()
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+@pytest.mark.parametrize("eta", [0.7, 0.9, 0.95])
+def test_battery_round_trip_is_lossy(seed, eta):
+    """Starting empty, delivered energy can never exceed eta^2 of the
+    grid-side energy that went in (one-way loss on each leg)."""
+    rng = np.random.default_rng(seed)
+    bank = BatteryBank.sized(2, capacity_mwh=1.5, charge_rate_mw=4.0,
+                             discharge_rate_mw=4.0, efficiency=eta,
+                             soc_frac=0.0)
+    for _ in _random_walk(bank, rng, steps=200):
+        pass
+    assert (bank.energy_out_mwh
+            <= bank.energy_in_mwh * eta ** 2 + 1e-9).all()
+    if bank.energy_in_mwh.sum() > 0 and eta < 1.0:
+        assert bank.energy_out_mwh.sum() < bank.energy_in_mwh.sum()
+
+
+@pytest.mark.parametrize("seed", [2, 9])
+def test_battery_ledger_identity_across_scenario(seed):
+    """No free energy across a compiled degradation schedule: the SoC
+    always equals soc0 + eta*in - out/eta minus what health clamping
+    confiscated (clamping only ever *removes* energy)."""
+    eta = 0.9
+    sc = ScenarioEngine(
+        [BatteryDegradation(site=0, start=4, factor=0.5),
+         BatteryDegradation(site=1, start=8, factor=0.25, duration=6)],
+        seed=seed).compile(2, 20)
+    bank = BatteryBank.sized(2, capacity_mwh=1.0, charge_rate_mw=2.0,
+                             discharge_rate_mw=2.0, efficiency=eta,
+                             soc_frac=1.0)
+    soc0 = bank.soc_mwh.copy()
+    rng = np.random.default_rng(seed)
+    for t in range(sc.ticks):
+        bank.set_health(sc.battery_health[:, t])
+        bank.step(rng.uniform(0, 3, 2), rng.uniform(0, 3, 2), dt_h=0.25)
+        ledger = (soc0 + eta * bank.energy_in_mwh
+                  - bank.energy_out_mwh / eta)
+        assert (bank.soc_mwh <= ledger + 1e-9).all(), "free energy"
+        assert (bank.soc_mwh <= bank.usable_mwh + 1e-12).all()
+    # site 1's window ended -> full health restored, site 0's did not
+    assert sc.battery_health[0, -1] == 0.5
+    assert sc.battery_health[1, -1] == 1.0
+
+
+def test_battery_degradation_clamps_soc():
+    bank = BatteryBank.sized(2, capacity_mwh=2.0, soc_frac=1.0)
+    bank.set_health(np.array([0.5, 1.0]))
+    assert np.allclose(bank.soc_mwh, [1.0, 2.0])
+    assert np.allclose(bank.usable_mwh, [1.0, 2.0])
+    # recovering health does not refill what clamping removed
+    bank.set_health(np.array([1.0, 1.0]))
+    assert np.allclose(bank.soc_mwh, [1.0, 2.0])
+
+
+def test_battery_ride_through_rating():
+    bank = BatteryBank.sized(1, capacity_mwh=1.0, discharge_rate_mw=2.0,
+                             efficiency=0.9, soc_frac=1.0)
+    # energy-limited: 1 MWh * 0.9 over 15 min -> 3.6 MW, but the
+    # inverter caps at 2 MW
+    assert np.allclose(bank.ride_through_mw(0.25), [2.0])
+    bank.soc_mwh[:] = 0.1
+    assert np.allclose(bank.ride_through_mw(0.25), [0.36])
+
+
+def test_grid_signals_flat_billing():
+    g = GridSignals.flat(2, 4)
+    energy = np.array([1.0, 0.5])          # MWh this slot
+    ones = np.ones(2)
+    assert np.isclose(g.slot_cost_usd(energy, 0, ones),
+                      1.5 * DEFAULT_PRICE_USD_MWH)
+    assert np.isclose(g.slot_carbon_g(energy, 0, ones),
+                      1.5 * DEFAULT_CARBON_G_KWH * 1e3)
+    # factors multiply per site
+    assert np.isclose(g.slot_cost_usd(energy, 1, np.array([3.0, 1.0])),
+                      3.5 * DEFAULT_PRICE_USD_MWH)
+
+
+# ------------------------------------------------------------------
+# event semantics: detection lag on the knowledge plane
+# ------------------------------------------------------------------
+def test_price_spike_detection_lag():
+    sc = ScenarioEngine([PriceSpike(magnitude=3.0, start=2, duration=4,
+                                    sites=(0,), detect_ticks=1)],
+                        seed=0).compile(2, 10)
+    assert np.allclose(sc.price_factor[0, 2:6], 3.0)
+    assert np.allclose(sc.price_factor[0, :2], 1.0)
+    assert np.allclose(sc.price_factor[1], 1.0)
+    # knowledge lags truth by detect_ticks
+    assert np.allclose(sc.known_price_factor[0, 2], 1.0)
+    assert np.allclose(sc.known_price_factor[0, 3:6], 3.0)
+    kinds = {t: [e.kind for e in evs] for t, evs in sc.controls.items()}
+    assert PRICE_SPIKE in kinds[3] and PRICE_NORMAL in kinds[6]
+    assert not sc.is_trivial
+
+
+def test_carbon_ramp_and_battery_controls():
+    sc = ScenarioEngine([CarbonRamp(magnitude=2.0, start=1, duration=3),
+                         BatteryDegradation(site=1, start=2, factor=0.6)],
+                        seed=0).compile(2, 8)
+    assert np.allclose(sc.carbon_factor[:, 1:4], 2.0)
+    assert np.allclose(sc.battery_health[1, 2:], 0.6)
+    kinds = {t: [(e.kind, e.value) for e in evs]
+             for t, evs in sc.controls.items()}
+    assert (CARBON_RAMP, 2.0) in kinds[1]
+    assert (CARBON_NORMAL, 1.0) in kinds[4]
+    assert (BATTERY_DEGRADED, 0.6) in kinds[2]
+
+
+# ------------------------------------------------------------------
+# billing plane through simulate_week
+# ------------------------------------------------------------------
+def test_week_cost_carbon_billing(window):
+    table, sites, pw, ar = window
+    base = simulate_week("heron", table, sites, pw, ar, seed=5)
+    assert (base.cost_usd() > 0).all() and (base.carbon_g() > 0).all()
+    spike = simulate_week(
+        "heron", table, sites, pw, ar, seed=5,
+        scenario=ScenarioEngine(
+            [PriceSpike(magnitude=5.0, start=0, duration=SLOTS)], seed=5))
+    # same plan (heron ignores price), 5x the bill, same carbon
+    assert np.allclose(spike.goodput(), base.goodput())
+    assert np.allclose(spike.cost_usd(), base.cost_usd() * 5.0, rtol=1e-6)
+    assert np.allclose(spike.carbon_g(), base.carbon_g(), rtol=1e-6)
+
+
+def test_dr_heron_sheds_on_price_spike(window):
+    """DR-Heron's effective-power haircut reacts to the spike/normal
+    controls; the plain router's does not react to price at all."""
+    from repro.sim.policy import make_policy
+    from repro.sim.scenarios import ControlEvent
+    table, sites, pw, ar = window
+    pol = make_policy("dr_heron", table, sites)
+    base_eff = pol._effective_power(pw[:, 0] * 1e6).copy()
+    pol.on_event(ControlEvent(kind=PRICE_SPIKE, site=0, value=4.0))
+    assert pol._dr_price[0] == pytest.approx(0.25)
+    assert (pol._dr_price[1:] == 1.0).all()
+    eff = pol._effective_power(pw[:, 0] * 1e6)
+    assert eff[0] == pytest.approx(base_eff[0] * 0.25)
+    assert np.allclose(eff[1:], base_eff[1:])
+    pol.on_event(ControlEvent(kind=PRICE_NORMAL, site=0, value=1.0))
+    assert (pol._dr_price == 1.0).all()
+    ref = make_policy("heron", table, sites)
+    ref.on_event(ControlEvent(kind=PRICE_SPIKE, site=0, value=4.0))
+    assert np.allclose(ref._effective_power(pw[:, 0] * 1e6), base_eff)
+
+
+def test_dr_heron_cheaper_under_binding_spike(window):
+    """End-to-end: when the spiked site's power cap actually binds,
+    shedding into the spike buys a lower $/request and gCO2/request at
+    (near-)zero goodput loss — the bench_grid acceptance story."""
+    table, sites, pw, ar = window
+    pws = pw * 0.04             # caps low enough that the haircut binds
+    spike = [PriceSpike(magnitude=4.0, start=2, duration=4, sites=(0,)),
+             CarbonRamp(magnitude=4.0, start=2, duration=4, sites=(0,))]
+    out = {}
+    for name in ("heron", "dr_heron"):
+        wk = simulate_week(name, table, sites, pws, ar, seed=5,
+                           scenario=ScenarioEngine(spike, seed=3))
+        srv = float(wk.goodput().sum())
+        out[name] = (srv, float(wk.cost_usd().sum()) / srv,
+                     float(wk.carbon_g().sum()) / srv)
+    h, d = out["heron"], out["dr_heron"]
+    assert d[0] >= h[0] * 0.98, "goodput loss above the 2% DR budget"
+    assert d[1] < h[1], f"$/req {d[1]:.4g} not below heron {h[1]:.4g}"
+    assert d[2] < h[2], f"g/req {d[2]:.4g} not below heron {h[2]:.4g}"
+
+
+# ------------------------------------------------------------------
+# pinned ride-through A/B
+# ------------------------------------------------------------------
+def test_battery_ride_through_beats_batteryless(window):
+    """A GridTrip brownout (depth 0.98 — the site stays routable) on the
+    biggest site: the pre-charged battery arm must serve strictly more
+    than the batteryless arm, and recover the event-free goodput."""
+    table, sites, pw, ar = window
+    pws = pw * 0.1              # scale caps so the trip actually binds
+    S = len(sites)
+
+    def trip():
+        return ScenarioEngine([GridTrip(site=0, start=3, duration=2,
+                                        depth=0.98)], seed=3)
+
+    batt = BatteryBank.sized(S, capacity_mwh=3.0, charge_rate_mw=6.0,
+                             discharge_rate_mw=6.0, soc_frac=1.0)
+    base = simulate_week("heron", table, sites, pws, ar, seed=5)
+    dry = simulate_week("heron", table, sites, pws, ar, seed=5,
+                        scenario=trip())
+    wet = simulate_week("heron", table, sites, pws, ar, seed=5,
+                        scenario=trip(), battery=batt)
+    g_base = float(base.goodput().sum())
+    g_dry = float(dry.goodput().sum())
+    g_wet = float(wet.goodput().sum())
+    assert g_dry < g_base, "trip must hurt the batteryless arm"
+    assert g_wet > g_dry, (
+        f"battery arm served {g_wet:.1f} <= batteryless {g_dry:.1f}")
+    assert g_wet == pytest.approx(g_base, rel=1e-3), \
+        "the sized battery should fully bridge the 2-slot trip"

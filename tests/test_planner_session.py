@@ -102,6 +102,38 @@ def test_clean_site_reuse_respects_drain_budget(table):
         prev, power = p, pw
 
 
+def test_dual_coupling_repric_matches_full_replan(table):
+    """ISSUE 10 satellite: a site can be clean by its own power/load
+    deltas while the master's capacity/drain duals touching it moved —
+    without cross-site dual coupling its stale quota strands demand the
+    collapsed neighbor can no longer carry. At fleet load 0.6x capacity
+    a 70% collapse of the biggest site must (a) trip the dual-dirty
+    detector and (b) land the incremental plan at the full warm
+    re-plan's unserved (zero here), where the uncoupled session strands
+    hundreds of rps."""
+    sites, power, load = _fleet(16, load_frac=2.0)
+    pw2 = power.copy()
+    pw2[0] *= 0.3
+
+    def run(dual_coupling):
+        sess = PlannerLSession(table, sites, dirty_tol=0.02,
+                               dual_coupling=dual_coupling)
+        sess.plan(power, load, mode="cold")
+        return sess.plan(pw2, load, mode="auto")
+
+    coupled, uncoupled = run(True), run(False)
+    assert coupled.meta["mode"] == "incremental"
+    assert coupled.meta["dual_dirty"] >= 1, \
+        "dual movement from the collapse must mark extra sites dirty"
+    full = PlannerLSession(table, sites, dirty_tol=0.02)
+    full.plan(power, load, mode="cold")
+    ref = full.plan(pw2, load, mode="full")
+    # re-priced quota pins to the full re-plan's service level...
+    assert coupled.unserved.sum() <= ref.unserved.sum() + 1e-6
+    # ...which the stale-dual session demonstrably misses
+    assert uncoupled.unserved.sum() > coupled.unserved.sum() + 100.0
+
+
 @pytest.mark.slow
 def test_workers_determinism_4096(table):
     sites, power, load = _fleet(4096)

@@ -337,6 +337,19 @@ def test_week_result_json_roundtrip(heron_base):
     assert _same_week(heron_base, back)
     assert all(x.solve_s == y.solve_s
                for x, y in zip(heron_base.slots, back.slots))
+    # grid-plane counters (ISSUE 10): billed on every run (flat default
+    # rates), NaN-safe in the record, and preserved per slot
+    assert (heron_base.cost_usd() > 0).all()
+    assert (heron_base.carbon_g() > 0).all()
+    assert np.array_equal(back.cost_usd(), heron_base.cost_usd())
+    assert np.array_equal(back.carbon_g(), heron_base.carbon_g())
+    # pre-grid records (no cost keys) still load, defaulting to zero
+    legacy = dict(d, slots=[{k: v for k, v in s.items()
+                             if k not in ("cost_usd", "carbon_g")}
+                            for s in d["slots"]])
+    old = WeekResult.from_json(legacy)
+    assert _same_week(heron_base, old)
+    assert (old.cost_usd() == 0).all() and (old.carbon_g() == 0).all()
 
 
 def test_week_record_written_and_reloadable(window, tmp_path):
